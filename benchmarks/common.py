@@ -1,0 +1,192 @@
+"""Shared benchmark fixtures: paper-shape bench models trained once (cached
+under .cache/bench), full per-stream ramp record matrices, and offline
+replay helpers mirroring the paper's evaluation methodology (§5.1):
+bootstrap = first 10% (train ramps/tuning), evaluation = remaining 90%.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_bench, get_config
+from repro.core import (
+    ApparateController,
+    ControllerConfig,
+    build_profile,
+    evaluate_config,
+    simulate_exits,
+    tune_thresholds,
+)
+from repro.data import make_image_stream, make_token_stream
+from repro.models import build_model
+from repro.serving import ClassifierRunner
+from repro.training import TrainConfig, train
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", ".cache", "bench")
+N_STREAM = 3000
+
+
+def get_domain(domain: str, *, seed: int = 2, ramp_style: str = "fc") -> Dict:
+    """domain in {'cv','cv_hard','nlp'} -> trained paper-shape model + stream
+    + profile + full record matrices (unc/lab per site, final labels).
+    'cv_hard' uses confusable (mixed) class prototypes so early-ramp
+    confidence is NOT perfectly separable — required for the adaptation-
+    sensitivity tables (t1/t2/t3/fig18) to show non-degenerate behavior."""
+    tag = f"{domain}_{seed}_{ramp_style}"
+    if domain.startswith("cv"):
+        hard = domain == "cv_hard"
+        cfg = get_bench("resnet18").replace(n_classes=16 if hard else 10)
+        stream = make_image_stream(
+            N_STREAM, img_size=cfg.img_size, n_classes=cfg.n_classes, mode="cv",
+            seed=seed, proto_mix=0.35 if hard else 0.0,
+        )
+        data_key, lr, steps = "images", 3e-3, 100 if hard else 150
+        prof_cfg = get_config("resnet18").replace(resnet_widths=(64, 128, 256, 512), img_size=224)
+    else:
+        cfg = get_bench("bert-base").replace(n_classes=10, ramp_style=ramp_style)
+        stream = make_token_stream(N_STREAM, seq_len=32, vocab=cfg.vocab_size, n_classes=10, mode="nlp", seed=seed)
+        data_key, lr, steps = "tokens", 1e-3, 200
+        prof_cfg = get_config("bert-base")
+    model = build_model(cfg)
+    boot = N_STREAM // 10
+
+    mgr = CheckpointManager(os.path.join(CACHE, tag), keep=1)
+    state = mgr.restore()
+    if state is None:
+        # paper §5.1: CV backbones are fine-tuned on a RANDOM 10% of frames
+        # across the dataset; NLP ramp-training uses the first 10% (1:9 split)
+        rng0 = np.random.default_rng(seed)
+        if domain.startswith("cv"):
+            pool = rng0.choice(N_STREAM, size=max(boot, 256), replace=False)
+        else:
+            pool = np.arange(boot)
+
+        def batches(s):
+            rng = np.random.default_rng(s)
+            idx = pool[rng.integers(0, len(pool), 64)]
+            return {data_key: stream.data[idx], "labels": stream.labels[idx]}
+
+        state, _ = train(model, batches, TrainConfig(steps=steps, lr=lr), verbose=False)
+        mgr.save(state, step=steps)
+    params = state["params"]
+    runner = ClassifierRunner(model, params, stream.data, max_slots=len(model.sites))
+    profile = build_profile(
+        prof_cfg, mode="decode", chips=1,
+        ramp_cost_mult=4.0 if ramp_style == "mlp" else 1.0,
+    )
+    rec_path = os.path.join(CACHE, tag, "records.npz")
+    if os.path.exists(rec_path):
+        z = np.load(rec_path)
+        lab, unc, fin = z["lab"], z["unc"], z["fin"]
+    else:
+        lab, unc, fin = [], [], []
+        for lo in range(0, N_STREAM, 256):
+            idx = np.arange(lo, min(lo + 256, N_STREAM))
+            l, u, f = runner.infer(idx, list(model.sites))
+            lab.append(l); unc.append(u); fin.append(f)
+        lab = np.concatenate(lab, 1); unc = np.concatenate(unc, 1); fin = np.concatenate(fin)
+        os.makedirs(os.path.dirname(rec_path), exist_ok=True)
+        np.savez(rec_path, lab=lab, unc=unc, fin=fin)
+    return dict(
+        cfg=cfg, model=model, params=params, stream=stream, profile=profile,
+        runner=runner, boot=boot, lab=lab, unc=unc, fin=fin,
+        n_sites=len(model.sites),
+    )
+
+
+def window_from_records(dom, idx) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Build an (unc, correct, valid) window for sample indices `idx`."""
+    lab, unc, fin = dom["lab"], dom["unc"], dom["fin"]
+    S = dom["n_sites"]
+    u = unc[:, idx].T.astype(np.float32)  # (N, S)
+    c = (lab[:, idx] == fin[idx][None, :]).T
+    v = np.ones_like(c, bool)
+    return u, c, v
+
+
+def per_sample_savings(dom, idx, thresholds, active) -> Tuple[np.ndarray, np.ndarray]:
+    """(saved_ms per sample, correct per sample) at reference bs=1."""
+    prof = dom["profile"]
+    u, c, v = window_from_records(dom, idx)
+    ex = simulate_exits(u, v, thresholds, active)
+    act = sorted(active)
+    ovh = np.asarray([prof.ramp_overhead(s, 1) for s in act])
+    total = ovh.sum()
+    saved = np.full(len(idx), -total)
+    correct = np.ones(len(idx), bool)
+    for i, s in enumerate(act):
+        m = ex == s
+        saved[m] = prof.savings_at_site(s, 1) - ovh[: i + 1].sum()
+        correct[m] = c[m, s]
+    return saved, correct
+
+
+def replay_fixed(dom, thresholds, active, chunk=64):
+    """Evaluate FIXED thresholds over the eval split (one-time tuning)."""
+    idx = np.arange(dom["boot"], N_STREAM)
+    saved, correct = per_sample_savings(dom, idx, thresholds, active)
+    van = dom["profile"].vanilla_time(1)
+    return dict(
+        accuracy=float(correct.mean()),
+        median_win_pct=float(100 * np.median(saved) / van),
+        mean_win_pct=float(100 * saved.mean() / van),
+    )
+
+
+def replay_continual(dom, *, acc=0.99, budget=0.02, slots=6, chunk=16):
+    """Stream the eval split through a live controller (continual tuning)."""
+    prof = dom["profile"]
+    ctl = ApparateController(
+        dom["n_sites"], prof,
+        ControllerConfig(max_slots=slots, ramp_budget_frac=budget, acc_constraint=acc),
+    )
+    lab, unc, fin = dom["lab"], dom["unc"], dom["fin"]
+    van = prof.vanilla_time(1)
+    saved_all, correct_all = [], []
+    for lo in range(dom["boot"], N_STREAM, chunk):
+        idx = np.arange(lo, min(lo + chunk, N_STREAM))
+        act = sorted(ctl.active)
+        sub_lab = np.stack([lab[s, idx] for s in act]) if act else np.zeros((0, len(idx)), np.int64)
+        sub_unc = np.stack([unc[s, idx] for s in act]) if act else np.zeros((0, len(idx)), np.float32)
+        thr_before = ctl.thresholds.copy()
+        dec = ctl.observe(sub_lab, sub_unc, fin[idx])
+        ovh = np.asarray([prof.ramp_overhead(s, 1) for s in act]) if act else np.zeros(0)
+        total = ovh.sum()
+        for j, site in enumerate(dec.exit_sites):
+            if site >= 0:
+                i = act.index(site)
+                saved_all.append(prof.savings_at_site(site, 1) - ovh[: i + 1].sum())
+            else:
+                saved_all.append(-total)
+            correct_all.append(dec.released_labels[j] == fin[idx][j])
+    saved_all = np.asarray(saved_all)
+    return dict(
+        accuracy=float(np.mean(correct_all)),
+        median_win_pct=float(100 * np.median(saved_all) / van),
+        mean_win_pct=float(100 * saved_all.mean() / van),
+        controller=ctl,
+    )
+
+
+def tune_on(dom, idx, active, acc=0.99):
+    wd = window_from_records(dom, idx)
+    return tune_thresholds(
+        wd, active, dom["profile"], n_sites=dom["n_sites"], acc_constraint=acc
+    )
+
+
+def optimal_exits(dom, idx):
+    """Paper §2.2 'optimal': earliest ramp whose top-1 equals the final
+    label, zero ramp overheads (conservative upper bound)."""
+    lab, fin = dom["lab"], dom["fin"]
+    prof = dom["profile"]
+    van = prof.vanilla_time(1)
+    saved = np.zeros(len(idx))
+    for j, i in enumerate(idx):
+        hit = np.nonzero(lab[:, i] == fin[i])[0]
+        if len(hit):
+            saved[j] = van - prof.time_to_layer(prof.sites[hit[0]], 1)
+    return saved

@@ -1,0 +1,55 @@
+"""Quickstart: inject early exits into a model, train ramps (backbone
+frozen), and watch the controller manage thresholds on a drifting stream.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax
+
+from repro.configs import get_bench, get_config
+from repro.core import ApparateController, ControllerConfig, build_profile, evaluate_config
+from repro.core.ramps import describe
+from repro.data import make_image_stream
+from repro.models import build_model
+from repro.serving import ClassifierRunner
+from repro.training import TrainConfig, train, train_ramps
+
+# 1. Build a model; ramp sites = cut vertices (block boundaries).
+cfg = get_bench("resnet18").replace(n_classes=10)
+model = build_model(cfg)
+print(describe(model))
+
+# 2. Train the backbone on bootstrap data, then ramps only (frozen backbone).
+stream = make_image_stream(2000, img_size=cfg.img_size, n_classes=10, mode="cv", seed=2)
+
+
+def batches(s):
+    rng = np.random.default_rng(s)
+    idx = rng.integers(0, 200, 64)
+    return {"images": stream.data[idx], "labels": stream.labels[idx]}
+
+
+print("training backbone + ramps (paper trains ramps with backbone frozen;")
+print("full joint training here for speed, then a frozen-ramp refinement):")
+state, _ = train(model, batches, TrainConfig(steps=100, lr=3e-3, log_every=50))
+state, _ = train_ramps(model, batches, steps=30, state=state)
+
+# 3. Serve: the controller ingests per-ramp records and adapts.
+prof = build_profile(
+    get_config("resnet18").replace(resnet_widths=(64, 128, 256, 512), img_size=224),
+    mode="decode",
+)
+runner = ClassifierRunner(model, state["params"], stream.data, max_slots=6)
+ctl = ApparateController(len(model.sites), prof, ControllerConfig(max_slots=6))
+print(f"\ninitial ramps {ctl.active} thresholds all 0 (no exits yet)")
+for lo in range(200, 2000, 16):
+    idx = np.arange(lo, min(lo + 16, 2000))
+    labels, unc, final = runner.infer(idx, sorted(ctl.active))
+    ctl.observe(labels, unc, final)
+wd = ctl.window.last(512)
+ev = evaluate_config(wd, ctl.thresholds, ctl.active, prof)
+print(f"after 1800 samples: active={ctl.active}")
+print(f"  thresholds={np.round(ctl.thresholds[sorted(ctl.active)], 3)}")
+print(f"  window accuracy {ev.accuracy:.3f} | exit rate {ev.exit_rate:.2f} "
+      f"| mean latency saved {ev.mean_saved_ms:.3f} ms of {prof.vanilla_time(1):.3f} ms")
+print(f"  controller: {ctl.stats}")

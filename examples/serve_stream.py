@@ -1,0 +1,11 @@
+"""End-to-end serving driver (deliverable b): batched requests through a
+real serving loop — queueing, SLO-aware batching, Apparate early exits,
+continual adaptation — vs the vanilla baseline.
+
+  PYTHONPATH=src python examples/serve_stream.py --domain cv
+  PYTHONPATH=src python examples/serve_stream.py --domain nlp --policy clockwork
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

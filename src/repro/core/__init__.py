@@ -1,0 +1,27 @@
+"""Apparate core: early-exit management (the paper's contribution)."""
+from repro.core.controller import ApparateController, ControllerConfig
+from repro.core.exits import (
+    RecordWindow,
+    evaluate_config,
+    exit_rates,
+    ramp_utilities,
+    simulate_exits,
+)
+from repro.core.profiles import LatencyProfile, build_profile
+from repro.core.ramp_adjust import adjust_ramps
+from repro.core.threshold_tuning import grid_search_thresholds, tune_thresholds
+
+__all__ = [
+    "ApparateController",
+    "ControllerConfig",
+    "RecordWindow",
+    "evaluate_config",
+    "exit_rates",
+    "ramp_utilities",
+    "simulate_exits",
+    "LatencyProfile",
+    "build_profile",
+    "adjust_ramps",
+    "tune_thresholds",
+    "grid_search_thresholds",
+]

@@ -1,0 +1,140 @@
+"""Exit-pattern evaluation over recorded ramp statistics.
+
+The paper's key enabler: because inputs always run to completion, every
+active ramp's (top-1 result, error score) is recorded for every sample —
+so *any* threshold configuration can be evaluated offline against the
+original model's outputs, accounting for inter-ramp dependencies (§3.2).
+
+`RecordWindow` is the controller-side ring buffer of those records;
+evaluation functions are vectorized numpy (the controller runs on host,
+off the accelerator critical path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class RecordWindow:
+    """Ring buffer over samples × feasible sites.
+
+    unc[n, s]     uncertainty (1 - maxprob by default) of ramp s on sample n
+    correct[n, s] ramp-s top-1 == original model top-1
+    valid[n, s]   ramp s was active (recorded) when sample n was served
+    """
+
+    def __init__(self, n_sites: int, capacity: int = 2048):
+        self.capacity = capacity
+        self.n_sites = n_sites
+        self.unc = np.full((capacity, n_sites), np.nan, np.float32)
+        self.correct = np.zeros((capacity, n_sites), bool)
+        self.valid = np.zeros((capacity, n_sites), bool)
+        self.ptr = 0
+        self.count = 0  # total samples ever observed
+
+    def append(self, sites: Sequence[int], unc: np.ndarray, correct: np.ndarray):
+        """sites: (K,) site indices; unc/correct: (K, B)."""
+        B = unc.shape[1]
+        idx = (self.ptr + np.arange(B)) % self.capacity
+        self.unc[idx] = np.nan
+        self.correct[idx] = False
+        self.valid[idx] = False
+        for j, s in enumerate(sites):
+            self.unc[idx, s] = unc[j]
+            self.correct[idx, s] = correct[j]
+            self.valid[idx, s] = True
+        self.ptr = int((self.ptr + B) % self.capacity)
+        self.count += B
+
+    def last(self, n: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        n = min(n, self.count, self.capacity)
+        idx = (self.ptr - n + np.arange(n)) % self.capacity
+        return self.unc[idx], self.correct[idx], self.valid[idx]
+
+
+def simulate_exits(
+    unc: np.ndarray,
+    valid: np.ndarray,
+    thresholds: np.ndarray,
+    active: Sequence[int],
+) -> np.ndarray:
+    """First active site (ascending site order) whose uncertainty clears its
+    threshold; -1 = no exit. unc/valid: (N, S); thresholds: (S,)."""
+    if len(active) == 0 or unc.shape[0] == 0:
+        return np.full(unc.shape[0], -1, np.int64)
+    act = np.asarray(sorted(active))
+    # STRICT comparison: threshold 0 precludes exiting (paper's bootstrap
+    # state) even for saturated uncertainty-0 records.
+    sub = valid[:, act] & (unc[:, act] < thresholds[act][None, :])
+    anyx = sub.any(axis=1)
+    first = sub.argmax(axis=1)
+    return np.where(anyx, act[first], -1)
+
+
+@dataclasses.dataclass
+class EvalResult:
+    accuracy: float  # agreement w/ original model (non-exits count correct)
+    mean_saved_ms: float  # mean latency delta vs vanilla (can be < 0)
+    exit_rate: float
+    exit_sites: np.ndarray  # per-sample site (-1 = none)
+
+
+def evaluate_config(
+    window_data,
+    thresholds: np.ndarray,
+    active: Sequence[int],
+    profile,
+    bs: int = 1,
+) -> EvalResult:
+    """Evaluate (thresholds, active-set) on recorded samples against the
+    latency profile. window_data = (unc, correct, valid)."""
+    unc, correct, valid = window_data
+    N = unc.shape[0]
+    if N == 0:
+        return EvalResult(1.0, 0.0, 0.0, np.full(0, -1, np.int64))
+    ex = simulate_exits(unc, valid, thresholds, active)
+    acc = np.where(ex >= 0, correct[np.arange(N), np.clip(ex, 0, None)], True).mean()
+    act = np.asarray(sorted(active))
+    ovh = np.asarray([profile.ramp_overhead(s, bs) for s in act]) if len(act) else np.zeros(0)
+    total_ovh = ovh.sum()
+    saved = np.full(N, -total_ovh)
+    for i, s in enumerate(act):
+        m = ex == s
+        if m.any():
+            # released after ramp s: save downstream layers; pay ramps ≤ s
+            saved[m] = profile.savings_at_site(s, bs) - ovh[: i + 1].sum()
+    return EvalResult(float(acc), float(saved.mean()), float((ex >= 0).mean()), ex)
+
+
+def ramp_utilities(
+    window_data,
+    thresholds: np.ndarray,
+    active: Sequence[int],
+    profile,
+    bs: int = 1,
+) -> dict:
+    """Paper §3.3: utility(r) = Σ savings(exits at r) − Σ ovh(r)·(alive non-
+    exits at r). Returns {site: utility_ms_total} over the window."""
+    unc, correct, valid = window_data
+    N = unc.shape[0]
+    ex = simulate_exits(unc, valid, thresholds, active)
+    act = sorted(active)
+    out = {}
+    alive = np.ones(N, bool)
+    for s in act:
+        exits_here = ex == s
+        savings = profile.savings_at_site(s, bs)
+        ovh = profile.ramp_overhead(s, bs)
+        util = exits_here.sum() * savings - (alive & ~exits_here).sum() * ovh
+        out[s] = float(util)
+        alive = alive & ~exits_here
+    return out
+
+
+def exit_rates(window_data, thresholds, active) -> dict:
+    unc, correct, valid = window_data
+    ex = simulate_exits(unc, valid, thresholds, active)
+    N = max(len(ex), 1)
+    return {s: float((ex == s).sum() / N) for s in sorted(active)}

@@ -1,0 +1,251 @@
+"""Layerwise latency profiles.
+
+The paper profiles per-layer runtimes once per model (different batch
+sizes) and uses them for (a) ramp utility scoring and (b) translating exit
+locations into latency savings. On this CPU-only container we derive the
+profile analytically from the architecture's per-layer FLOPs / bytes and
+the TPU v5e roofline constants — the same model used in EXPERIMENTS.md
+§Roofline — so measured profiles can drop in unchanged on real hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+# TPU v5e (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+
+def _layer_flops_bytes(cfg, seq: int, mode: str) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-layer (FLOPs, HBM bytes) for one input at seq length `seq`.
+    mode: 'prefill' (process seq tokens) | 'decode' (1 token, seq-long cache)."""
+    from repro.models.transformer import build_plan
+
+    d = cfg.d_model
+    bpe = 2  # bf16
+    if cfg.family == "resnet":
+        return _resnet_flops_bytes(cfg)
+    if cfg.family in ("encdec", "encoder_cls"):
+        L = cfg.n_dec_layers if cfg.family == "encdec" else cfg.n_layers
+        specs = ["attn"] * L
+    else:
+        specs = [s.mixer for s in build_plan(cfg).layer_specs()]
+    flops, bytes_ = [], []
+    ntok = seq if mode == "prefill" else 1
+    kvlen = seq
+    for i, mixer in enumerate(specs):
+        f = b = 0.0
+        if mixer == "attn":
+            H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+            wqkvo = d * H * hd * 2 + d * K * hd * 2 + H * hd * d
+            f += 2 * ntok * wqkvo
+            b += wqkvo * bpe
+            att_len = min(kvlen, cfg.window) if (cfg.window and _is_local(cfg, i)) else kvlen
+            f += 2 * ntok * att_len * (H * hd) * 2  # qk + pv
+            b += ntok * att_len * K * hd * 2 * bpe if mode == "decode" else 0
+        elif mixer == "mla":
+            r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+            H = cfg.n_heads
+            w = d * H * (dn + dr) + d * (r + dr) + r * H * dn + r * H * dv + H * dv * d
+            f += 2 * ntok * w
+            b += w * bpe
+            if mode == "decode":
+                # naive path re-expands the latent cache per step
+                f += 2 * kvlen * r * H * (dn + dv)
+                b += kvlen * (r + dr) * bpe
+            f += 2 * ntok * kvlen * H * (dn + dr + dv)
+        elif mixer == "mamba":
+            di, N, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_headdim
+            Hs, G = di // hp, cfg.ssm_ngroups
+            w = d * (2 * di + 2 * G * N + Hs) + di * d
+            f += 2 * ntok * w
+            b += w * bpe
+            f += ntok * (di * N * 6)  # ssd state update + output
+            b += Hs * hp * N * 4 if mode == "decode" else 0
+        # ffn
+        ffn_kind = _ffn_kind(cfg, i)
+        if ffn_kind == "dense":
+            w = 3 * d * cfg.d_ff
+            f += 2 * ntok * w
+            b += w * bpe
+        elif ffn_kind == "moe":
+            w_active = 3 * d * cfg.moe_d_ff * (cfg.top_k + cfg.n_shared_experts)
+            f += 2 * ntok * w_active
+            # decode touches top_k expert weights per token
+            b += w_active * bpe
+        flops.append(f)
+        bytes_.append(b)
+    return np.asarray(flops), np.asarray(bytes_)
+
+
+def _is_local(cfg, i: int) -> bool:
+    if not cfg.local_global_pattern:
+        return False
+    return (i % (cfg.local_global_pattern + 1)) < cfg.local_global_pattern
+
+
+def _ffn_kind(cfg, i: int) -> str:
+    if cfg.family == "resnet":
+        return "none"
+    if cfg.ssm and not cfg.hybrid_period:
+        return "none"
+    if cfg.hybrid_period:
+        return "moe" if (cfg.moe and i % cfg.moe_every == 1) else "dense"
+    if cfg.moe:
+        return "dense" if i < cfg.first_k_dense else "moe"
+    return "dense"
+
+
+def _resnet_flops_bytes(cfg) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-residual-block FLOPs for img_size inputs (CV latency skews early —
+    exactly the skew the paper calls out in §3.3)."""
+    flops, bytes_ = [], []
+    hw = cfg.img_size
+    cin = cfg.resnet_widths[0]
+    for stage, (n, w) in enumerate(zip(cfg.resnet_blocks, cfg.resnet_widths)):
+        wout = w * (4 if cfg.resnet_bottleneck else 1)
+        for b in range(n):
+            stride = 2 if (b == 0 and stage > 0) else 1
+            hw = hw // stride
+            if cfg.resnet_bottleneck:
+                f = 2 * hw * hw * (cin * w + 9 * w * w + w * wout)
+                nbytes = (cin * w + 9 * w * w + w * wout) * 4
+            else:
+                f = 2 * hw * hw * (9 * cin * w + 9 * w * wout)
+                nbytes = (9 * cin * w + 9 * w * wout) * 4
+            flops.append(f)
+            bytes_.append(nbytes)
+            cin = wout
+    return np.asarray(flops, np.float64), np.asarray(bytes_, np.float64)
+
+
+@dataclasses.dataclass
+class LatencyProfile:
+    """Cumulative layerwise serving-time model.
+
+    layer_flops/layer_bytes: per-layer, per-input (reference seq).
+    head_flops/head_bytes: final head (norm + unembed).
+    ramp_flops/ramp_bytes: per-site ramp overhead.
+    chips: devices the model is sharded over.
+    """
+
+    layer_flops: np.ndarray
+    layer_bytes: np.ndarray
+    head_flops: float
+    head_bytes: float
+    ramp_flops: np.ndarray
+    ramp_bytes: np.ndarray
+    sites: Tuple[int, ...]
+    chips: int = 1
+    flops_scale: float = 1.0  # efficiency derate (MXU util)
+
+    def _time(self, flops, nbytes, bs: int) -> float:
+        """Roofline time (ms) for a batch of `bs` inputs."""
+        c = max(self.chips, 1)
+        t_c = flops * bs / (PEAK_FLOPS * c * self.flops_scale)
+        t_m = nbytes / (HBM_BW * c)
+        return float(np.maximum(t_c, t_m)) * 1e3
+
+    def layer_time(self, i: int, bs: int) -> float:
+        return self._time(self.layer_flops[i], self.layer_bytes[i], bs)
+
+    def time_to_layer(self, i: int, bs: int) -> float:
+        """Time through layer i inclusive (no ramps, no head)."""
+        return sum(self.layer_time(j, bs) for j in range(i + 1))
+
+    def head_time(self, bs: int) -> float:
+        return self._time(self.head_flops, self.head_bytes, bs)
+
+    def ramp_overhead(self, site_idx: int, bs: int) -> float:
+        return self._time(self.ramp_flops[site_idx], self.ramp_bytes[site_idx], bs)
+
+    def vanilla_time(self, bs: int) -> float:
+        return self.time_to_layer(len(self.layer_flops) - 1, bs) + self.head_time(bs)
+
+    def time_to_site(self, site_idx: int, bs: int) -> float:
+        """Time until ramp at `site_idx` produces its result (incl. its own
+        head compute)."""
+        return self.time_to_layer(self.sites[site_idx], bs) + self.ramp_overhead(site_idx, bs)
+
+    def savings_at_site(self, site_idx: int, bs: int) -> float:
+        """Raw latency avoided by releasing at this site (paper's savings)."""
+        return self.vanilla_time(bs) - self.time_to_layer(self.sites[site_idx], bs)
+
+    # convenience vectors (reference batch size)
+
+    def cum_times(self, bs: int) -> np.ndarray:
+        t = np.cumsum([self.layer_time(j, bs) for j in range(len(self.layer_flops))])
+        return t
+
+    def max_ramps_within_budget(self, budget_frac: float, bs: int) -> int:
+        ovh = np.sort([self.ramp_overhead(s, bs) for s in range(len(self.sites))])
+        lim = budget_frac * self.vanilla_time(bs)
+        return int(np.searchsorted(np.cumsum(ovh), lim, side="right"))
+
+
+def build_profile(
+    cfg,
+    *,
+    seq: int = 2048,
+    mode: str = "decode",
+    chips: int = 1,
+    sites: Optional[Sequence[int]] = None,
+    ramp_cost_mult: float = 1.0,
+    flops_scale: float = 0.6,
+) -> LatencyProfile:
+    lf, lb = _layer_flops_bytes(cfg, seq, mode)
+    if cfg.family == "resnet":
+        head_f = 2 * cfg.resnet_widths[-1] * (4 if cfg.resnet_bottleneck else 1) * cfg.n_classes
+        head_b = head_f * 2
+        if sites is None:
+            from repro.models import build_model
+
+            sites = build_model(cfg).sites
+        widths = _resnet_widths(cfg)
+        rf = np.asarray([2 * widths[s] * cfg.n_classes for s in sites], np.float64)
+        rb = rf * 2.0
+    else:
+        ntok = 1 if mode == "decode" else seq
+        # classification-served models (the paper's own: BERT/GPT2 sentiment)
+        # have tiny heads; token-serving LMs pay the full (padded) vocab head.
+        out_width = cfg.n_classes if cfg.n_classes > 0 else cfg.padded_vocab
+        head_f = 2 * ntok * cfg.d_model * out_width
+        head_b = cfg.d_model * out_width * 2
+        if sites is None:
+            if cfg.family == "lm":
+                from repro.models.transformer import ramp_sites
+
+                sites = ramp_sites(cfg)
+            else:
+                from repro.models import build_model
+
+                sites = build_model(cfg).sites
+        rf = np.full(len(sites), 2.0 * cfg.d_model * out_width * ramp_cost_mult)
+        if cfg.ramp_style == "tied":
+            # beyond-paper: ramp head shares the LM-head weights -> no extra
+            # HBM traffic beyond the per-site norm vector; compute unchanged.
+            rb = np.full(len(sites), cfg.d_model * 4.0 * ramp_cost_mult)
+        else:
+            rb = np.full(len(sites), cfg.d_model * out_width * 2.0 * ramp_cost_mult)
+    return LatencyProfile(
+        layer_flops=lf,
+        layer_bytes=lb,
+        head_flops=float(head_f),
+        head_bytes=float(head_b),
+        ramp_flops=np.asarray(rf, np.float64),
+        ramp_bytes=np.asarray(rb, np.float64),
+        sites=tuple(sites),
+        chips=chips,
+        flops_scale=flops_scale,
+    )
+
+
+def _resnet_widths(cfg):
+    widths = []
+    for n, w in zip(cfg.resnet_blocks, cfg.resnet_widths):
+        widths += [w * (4 if cfg.resnet_bottleneck else 1)] * n
+    return widths

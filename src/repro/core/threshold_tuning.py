@@ -1,0 +1,118 @@
+"""Accuracy-aware threshold tuning (paper §3.2, Algorithm 1).
+
+Greedy hill-climb over per-ramp thresholds exploiting EE monotonicity:
+raising any threshold monotonically increases exit rate / latency savings
+and monotonically decreases agreement accuracy. MIMD step sizing: a chosen
+ramp's step doubles (promising direction); an overstepped ramp's step
+halves (hone in on the accuracy boundary), lower-bounded at
+`smallest_step`. Runs on host numpy in ~ms (paper: up to 3 orders of
+magnitude faster than grid search, within 0–3.8% of optimal savings).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.exits import evaluate_config
+
+
+@dataclasses.dataclass
+class TuneResult:
+    thresholds: np.ndarray  # (n_sites,) full vector (inactive sites untouched)
+    savings_ms: float
+    accuracy: float
+    rounds: int
+    wall_s: float
+
+
+def tune_thresholds(
+    window_data,
+    active: Sequence[int],
+    profile,
+    *,
+    n_sites: int,
+    acc_constraint: float = 0.99,
+    init_step: float = 0.1,
+    smallest_step: float = 0.01,
+    bs: int = 1,
+    max_rounds: int = 10_000,
+) -> TuneResult:
+    """Paper Algorithm 1. Thresholds start at 0 (no exits) and climb."""
+    t0 = time.perf_counter()
+    act = sorted(active)
+    thr = np.zeros(n_sites, np.float32)
+    steps = {s: float(init_step) for s in act}
+    base = evaluate_config(window_data, thr, act, profile, bs)
+    cur_acc, cur_sav = base.accuracy, base.mean_saved_ms
+    rounds = 0
+    while rounds < max_rounds:
+        rounds += 1
+        best_s, best_score, best_eval = None, -np.inf, None
+        overstepped: List[int] = []
+        movable = False
+        for s in act:
+            if thr[s] >= 1.0:
+                continue
+            cand = thr.copy()
+            cand[s] = min(1.0, cand[s] + steps[s])
+            if cand[s] == thr[s]:
+                continue
+            movable = True
+            ev = evaluate_config(window_data, cand, act, profile, bs)
+            if ev.accuracy + 1e-9 < acc_constraint:
+                overstepped.append(s)
+                continue
+            d_sav = ev.mean_saved_ms - cur_sav
+            d_acc = max(cur_acc - ev.accuracy, 0.0)
+            score = d_sav / (d_acc + 1e-6)
+            if d_sav <= 0:
+                score = d_sav  # never prefer a savings regression
+            if score > best_score:
+                best_s, best_score, best_eval = s, score, ev
+        if best_s is not None and best_eval.mean_saved_ms >= cur_sav - 1e-12:
+            thr[best_s] = min(1.0, thr[best_s] + steps[best_s])
+            steps[best_s] = min(steps[best_s] * 2, 1.0)  # MI
+            cur_acc, cur_sav = best_eval.accuracy, best_eval.mean_saved_ms
+        else:
+            if all(steps[s] <= smallest_step for s in act) or not movable:
+                break
+            for s in overstepped:
+                steps[s] = max(steps[s] / 2, smallest_step)  # MD
+            # also shrink steps of ramps that produced no gain
+            for s in act:
+                if s not in overstepped:
+                    steps[s] = max(steps[s] / 2, smallest_step)
+    return TuneResult(thr, cur_sav, cur_acc, rounds, time.perf_counter() - t0)
+
+
+def grid_search_thresholds(
+    window_data,
+    active: Sequence[int],
+    profile,
+    *,
+    n_sites: int,
+    acc_constraint: float = 0.99,
+    step: float = 0.1,
+    bs: int = 1,
+) -> TuneResult:
+    """Exhaustive O((1/step)^R) baseline (paper Fig 11 comparison)."""
+    t0 = time.perf_counter()
+    act = sorted(active)
+    grid = np.arange(0.0, 1.0 + 1e-9, step)
+    best = (np.zeros(n_sites, np.float32), 0.0, 1.0)
+    n = 0
+    base = evaluate_config(window_data, best[0], act, profile, bs)
+    best = (best[0], base.mean_saved_ms, base.accuracy)
+    for combo in itertools.product(grid, repeat=len(act)):
+        n += 1
+        thr = np.zeros(n_sites, np.float32)
+        for s, v in zip(act, combo):
+            thr[s] = v
+        ev = evaluate_config(window_data, thr, act, profile, bs)
+        if ev.accuracy + 1e-9 >= acc_constraint and ev.mean_saved_ms > best[1]:
+            best = (thr, ev.mean_saved_ms, ev.accuracy)
+    return TuneResult(best[0], best[1], best[2], n, time.perf_counter() - t0)

@@ -1,0 +1,3 @@
+from repro.data.synthetic import Stream, TokenPipeline, make_image_stream, make_token_stream
+
+__all__ = ["Stream", "TokenPipeline", "make_image_stream", "make_token_stream"]

@@ -1,0 +1,7 @@
+from repro.distributed.collectives import (
+    compressed_psum,
+    dequantize_int8,
+    make_compressed_grad_allreduce,
+    quantize_int8,
+)
+from repro.distributed.pipeline import pipeline_apply

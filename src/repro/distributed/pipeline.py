@@ -1,0 +1,69 @@
+"""GPipe-style pipeline parallelism demonstrator (shard_map + ppermute).
+
+Maps a stack of identical stages onto a mesh axis: microbatches stream
+through stages with collective_permute between neighbors; the classic
+(S + M - 1) schedule. This demonstrates PP composition for configs where
+DP×TP×EP is not enough (e.g. >8k-chip jobs); the assigned cells use
+DP/FSDP×TP×EP which is the right fit for v5e pods (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(
+    mesh,
+    axis: str,
+    stage_fn: Callable,  # (stage_params, x) -> x
+    stacked_params,  # leaves with leading dim = n_stages
+    x,  # (n_micro, mb, ...) microbatched input
+):
+    """Run x through n_stages stages living on mesh axis `axis`."""
+    n_stages = mesh.shape[axis]
+
+    def mapped(params, xs):
+        # params: this stage's slice (leading dim 1); xs: full microbatch set
+        sid = jax.lax.axis_index(axis)
+        p = jax.tree.map(lambda a: a[0], params)
+        n_micro = xs.shape[0]
+        total = n_micro + n_stages - 1
+        buf = jnp.zeros_like(xs[0])  # current in-flight microbatch
+        outs = jnp.zeros_like(xs)
+
+        def step(t, carry):
+            buf, outs = carry
+            # stage 0 injects microbatch t (if any); others take the permuted input
+            inject = jnp.where(t < n_micro, t, 0)
+            x_in = jnp.where(sid == 0, xs[inject], buf)
+            y = stage_fn(p, x_in)
+            # last stage writes result for microbatch (t - n_stages + 1)
+            out_idx = t - (n_stages - 1)
+            write = (sid == n_stages - 1) & (out_idx >= 0)
+            outs = jax.lax.cond(
+                write,
+                lambda o: o.at[jnp.maximum(out_idx, 0)].set(y),
+                lambda o: o,
+                outs,
+            )
+            # pass activations downstream
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            buf = jax.lax.ppermute(y, axis, perm)
+            return buf, outs
+
+        buf, outs = jax.lax.fori_loop(0, n_micro + n_stages - 1, step, (buf, outs))
+        # results live on the last stage only; broadcast (all other stages
+        # contributed zeros, so a psum is an exact broadcast)
+        return jax.lax.psum(outs, axis)
+
+    in_specs = (
+        jax.tree.map(lambda _: P(axis), stacked_params),
+        P(),  # microbatches replicated in; real deployments shard the batch dim
+    )
+    return jax.shard_map(
+        mapped, mesh=mesh, in_specs=in_specs, out_specs=P(), check_vma=False,
+    )(stacked_params, x)

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for perf-critical compute (validated in interpret
+mode on CPU; see tests/test_kernels_*.py). Each subpackage: kernel.py
+(pl.pallas_call + BlockSpec), ops.py (jit wrapper), ref.py (jnp oracle)."""

@@ -1,0 +1,3 @@
+from repro.kernels.decode_attention.kernel import decode_attention
+from repro.kernels.decode_attention.ops import attend_decode
+from repro.kernels.decode_attention.ref import decode_attention_ref

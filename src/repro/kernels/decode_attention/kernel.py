@@ -1,0 +1,100 @@
+"""Flash-decode Pallas kernel: single-token query against a long KV cache.
+
+The dominant cost of decode attention is streaming the KV cache HBM→VMEM;
+this kernel does one pass with online-softmax accumulation (grid:
+(B·H, S/bs), key tiles innermost sequential). A scalar `pos` masks cache
+slots beyond the current length. GQA handled by index-map head folding.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, bs, scale, n_s):
+    js = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)  # (1, hd)
+    k = k_ref[0].astype(jnp.float32)  # (bs, hd)
+    v = v_ref[0].astype(jnp.float32)
+    pos = pos_ref[0, 0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (1, bs)
+    kpos = js * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    mask = kpos <= pos
+    s = jnp.where(mask, s, NEG_INF)
+    tile_m = jnp.max(s, axis=-1)
+
+    @pl.when(js == 0)
+    def _init():
+        m_ref[0] = tile_m
+        p = jnp.where(mask, jnp.exp(s - tile_m[:, None]), 0.0)
+        l_ref[0] = jnp.sum(p, -1)
+        o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(js > 0)
+    def _step():
+        m_old = m_ref[0]
+        m_new = jnp.maximum(m_old, tile_m)
+        alpha = jnp.exp(m_old - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        l_ref[0] = l_ref[0] * alpha + jnp.sum(p, -1)
+        o_ref[0] = o_ref[0] * alpha[:, None] + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        m_ref[0] = m_new
+
+    @pl.when(js == n_s - 1)
+    def _final():
+        o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-30)[:, None]
+
+
+def decode_attention(
+    q: jax.Array,  # (B, H, hd) single query token
+    k: jax.Array,  # (B, KH, S, hd) cache
+    v: jax.Array,
+    pos,  # int32 scalar: current cache length - 1 (attend to <= pos)
+    *,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, hd = q.shape
+    KH, S = k.shape[1], k.shape[2]
+    G = H // KH
+    bs = min(block_s, S)
+    assert S % bs == 0
+    n_s = S // bs
+    scale = 1.0 / math.sqrt(hd)
+    qf = q.reshape(B * H, 1, hd)
+    kf = k.reshape(B * KH, S, hd)
+    vf = v.reshape(B * KH, S, hd)
+    pos_arr = jnp.full((1, 1), 0, jnp.int32) + pos
+
+    def kv_map(bh, js):
+        return ((bh // H) * KH + (bh % H) // G, js, 0)
+
+    kernel = functools.partial(_kernel, bs=bs, scale=scale, n_s=n_s)
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=(B * H, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bh, js: (0, 0)),
+            pl.BlockSpec((1, 1, hd), lambda bh, js: (bh, 0, 0)),
+            pl.BlockSpec((1, bs, hd), kv_map),
+            pl.BlockSpec((1, bs, hd), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, hd), lambda bh, js: (bh, 0, 0)),
+            pl.BlockSpec((1, 1), lambda bh, js: (bh, 0)),
+            pl.BlockSpec((1, 1), lambda bh, js: (bh, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, 1, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, qf, kf, vf)
+    return o.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,16 @@
+"""Jitted wrapper for flash-decode."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def attend_decode(q, k, v, pos, *, use_kernel=True, interpret=False):
+    if use_kernel:
+        return decode_attention(q, k, v, pos, interpret=interpret)
+    return decode_attention_ref(q, k, v, pos)

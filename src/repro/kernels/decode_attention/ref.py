@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for flash-decode."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, pos):
+    """q: (B,H,hd); k,v: (B,KH,S,hd); attend to cache slots <= pos."""
+    B, H, hd = q.shape
+    KH, S = k.shape[1], k.shape[2]
+    G = H // KH
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    mask = jnp.arange(S)[None, None] <= pos
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p, vv.astype(jnp.float32)).astype(q.dtype)

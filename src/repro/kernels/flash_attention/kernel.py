@@ -1,0 +1,111 @@
+"""Flash attention (prefill) Pallas kernel: causal / sliding-window / GQA.
+
+Grid: (B·H, Sq/bq, Sk/bk), key tiles innermost. Online-softmax
+accumulators (m, l, acc) live in VMEM output blocks whose index maps
+ignore the key index; the final key step normalizes. Block shapes are
+MXU-aligned (bq, bk multiples of the 128 lane width at production sizes;
+tests shrink them for interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, bq, bk, scale, causal, window, n_k):
+    jq = pl.program_id(1)
+    jk = pl.program_id(2)
+    q = q_ref[0].astype(jnp.float32)  # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)  # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, bk)
+    qpos = jq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+    tile_m = jnp.max(s, axis=-1)  # (bq,)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[0] = tile_m
+        p = jnp.exp(s - tile_m[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_ref[0] = jnp.sum(p, -1)
+        o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(jk > 0)
+    def _step():
+        m_old = m_ref[0]
+        m_new = jnp.maximum(m_old, tile_m)
+        alpha = jnp.exp(m_old - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_ref[0] = l_ref[0] * alpha + jnp.sum(p, -1)
+        o_ref[0] = o_ref[0] * alpha[:, None] + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        m_ref[0] = m_new
+
+    @pl.when(jk == n_k - 1)
+    def _final():
+        o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-30)[:, None]
+
+
+def flash_attention(
+    q: jax.Array,  # (B, H, Sq, hd)
+    k: jax.Array,  # (B, KH, Sk, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, hd = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    G = H // KH
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0
+    scale = 1.0 / math.sqrt(hd)
+    qf = q.reshape(B * H, Sq, hd)
+    kf = k.reshape(B * KH, Sk, hd)
+    vf = v.reshape(B * KH, Sk, hd)
+    n_k = Sk // bk
+    kernel = functools.partial(
+        _kernel, bq=bq, bk=bk, scale=scale, causal=causal, window=window, n_k=n_k
+    )
+
+    def kv_map(bh, iq, jk):
+        return ((bh // H) * KH + (bh % H) // G, jk, 0)
+
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=(B * H, Sq // bq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, iq, jk: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, hd), kv_map),
+            pl.BlockSpec((1, bk, hd), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, iq, jk: (bh, iq, 0)),
+            pl.BlockSpec((1, bq), lambda bh, iq, jk: (bh, iq)),
+            pl.BlockSpec((1, bq), lambda bh, iq, jk: (bh, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, Sq, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, Sq), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, Sq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)

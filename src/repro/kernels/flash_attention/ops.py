@@ -1,0 +1,16 @@
+"""Jitted wrapper for flash attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "use_kernel", "interpret"))
+def attention(q, k, v, *, causal=True, window=None, use_kernel=True, interpret=False):
+    if use_kernel:
+        return flash_attention(q, k, v, causal=causal, window=window, interpret=interpret)
+    return attention_ref(q, k, v, causal=causal, window=window)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=None):
+    """q: (B,H,Sq,hd); k,v: (B,KH,Sk,hd); GQA broadcast; f32 softmax."""
+    B, H, Sq, hd = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    G = H // KH
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.ramp_head.kernel import ramp_head_stats
+from repro.kernels.ramp_head.ops import ramp_confidence
+from repro.kernels.ramp_head.ref import ramp_head_stats_ref, stats_to_confidence

@@ -1,0 +1,101 @@
+"""Fused ramp-head confidence kernel (the paper's per-ramp record, §3.2).
+
+Computes, for pooled hidden states h (B, d) against a ramp/LM head
+W (d, V): argmax label, max logit, logsumexp and Σ l·eˡ accumulators —
+WITHOUT materializing the (B, V) logits in HBM. Vocab is tiled through
+VMEM with an online (max, Σe, Σl·e, argmax) merge; this is the TPU-native
+analogue of streaming the paper's ~1KB per-ramp records: O(V) compute,
+O(1) memory.
+
+Grid: (B/bb, V/bv) with the vocab dimension innermost (sequential
+accumulation); batch tiles are parallel. All accumulators live in VMEM
+output blocks whose index map ignores the vocab index.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(h_ref, w_ref, m_ref, s_ref, t_ref, idx_ref, *, bv: int, v_limit: int):
+    j = pl.program_id(1)
+    h = h_ref[...]
+    w = w_ref[...]
+    logits = jnp.dot(
+        h.astype(jnp.float32), w.astype(jnp.float32), preferred_element_type=jnp.float32
+    )  # (bb, bv)
+    bb = logits.shape[0]
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    # mask padded-vocab columns (vocab rounded up for even sharding)
+    logits = jnp.where(col + j * bv < v_limit, logits, -1e30)
+    tile_max = jnp.max(logits, axis=-1)  # (bb,)
+    tile_arg = jnp.min(
+        jnp.where(logits == tile_max[:, None], col, jnp.int32(bv)), axis=-1
+    ) + j * bv
+    e = jnp.exp(logits - tile_max[:, None])
+    tile_s = jnp.sum(e, axis=-1)
+    tile_t = jnp.sum(logits * e, axis=-1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = tile_max
+        s_ref[...] = tile_s
+        t_ref[...] = tile_t
+        idx_ref[...] = tile_arg
+
+    @pl.when(j > 0)
+    def _merge():
+        m_old = m_ref[...]
+        new_m = jnp.maximum(m_old, tile_max)
+        a = jnp.exp(m_old - new_m)
+        b = jnp.exp(tile_max - new_m)
+        s_ref[...] = s_ref[...] * a + tile_s * b
+        t_ref[...] = t_ref[...] * a + tile_t * b
+        idx_ref[...] = jnp.where(tile_max > m_old, tile_arg, idx_ref[...])
+        m_ref[...] = new_m
+
+
+def ramp_head_stats(
+    h: jax.Array,
+    w: jax.Array,
+    *,
+    block_b: int = 8,
+    block_v: int = 1024,
+    interpret: bool = False,
+    v_limit: int | None = None,
+):
+    """h: (B, d); w: (d, V). Returns (m, s, t, argmax):
+    m = max logit, s = Σ e^{l−m}, t = Σ l·e^{l−m}, argmax (B,) int32.
+    Columns >= v_limit (padded vocab) are masked to −inf."""
+    B, d = h.shape
+    V = w.shape[1]
+    bb = min(block_b, B)
+    bv = min(block_v, V)
+    assert B % bb == 0 and V % bv == 0, (B, V, bb, bv)
+    grid = (B // bb, V // bv)
+    kernel = functools.partial(_kernel, bv=bv, v_limit=v_limit if v_limit is not None else V)
+    m, s, t, idx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bv), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb,), lambda i, j: (i,)),
+            pl.BlockSpec((bb,), lambda i, j: (i,)),
+            pl.BlockSpec((bb,), lambda i, j: (i,)),
+            pl.BlockSpec((bb,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(h, w)
+    return m, s, t, idx

@@ -1,0 +1,29 @@
+"""Jitted wrapper: ramp confidence records from pooled hiddens."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ramp_head.kernel import ramp_head_stats
+from repro.kernels.ramp_head.ref import ramp_head_stats_ref, stats_to_confidence
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "interpret", "block_v"))
+def ramp_confidence(
+    h: jax.Array,
+    w: jax.Array,
+    *,
+    use_kernel: bool = True,
+    interpret: bool = False,
+    block_v: int = 1024,
+):
+    """h: (B, d) pooled hiddens; w: (d, V) head. Returns the paper's per-ramp
+    record: {label, maxprob, entropy, lse} — O(1) memory on TPU."""
+    if use_kernel:
+        m, s, t, idx = ramp_head_stats(h, w, block_v=block_v, interpret=interpret)
+    else:
+        m, s, t, idx = ramp_head_stats_ref(h, w)
+    label, maxprob, entropy, lse = stats_to_confidence(m, s, t, idx)
+    return {"label": label, "maxprob": maxprob, "entropy": entropy, "lse": lse}

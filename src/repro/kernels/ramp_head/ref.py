@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the ramp-head confidence kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ramp_head_stats_ref(h: jax.Array, w: jax.Array):
+    """Returns (m, s, t, argmax) with the same semantics as the kernel."""
+    logits = jnp.dot(
+        h.astype(jnp.float32), w.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+    m = jnp.max(logits, axis=-1)
+    e = jnp.exp(logits - m[:, None])
+    s = jnp.sum(e, axis=-1)
+    t = jnp.sum(logits * e, axis=-1)
+    idx = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return m, s, t, idx
+
+
+def stats_to_confidence(m, s, t, idx):
+    """(label, maxprob, entropy, lse) from the streaming accumulators."""
+    lse = m + jnp.log(s)
+    maxprob = 1.0 / s  # exp(m - lse)
+    entropy = lse - t / s  # H = lse − E[l]
+    return idx, maxprob, entropy, lse

@@ -1,0 +1,3 @@
+from repro.kernels.ssd.kernel import ssd_chunked
+from repro.kernels.ssd.ops import ssd
+from repro.kernels.ssd.ref import ssd_chunked_ref

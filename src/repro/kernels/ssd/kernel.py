@@ -1,0 +1,93 @@
+"""Mamba2 SSD chunk kernel (state-space duality, arXiv:2405.21060).
+
+One grid step processes one (batch, head, chunk) cell: the intra-chunk
+quadratic block (attention-like, MXU-friendly (ck×ck)·(ck×hp) matmuls) plus
+the running inter-chunk state recurrence. The state (hp, N) lives in a VMEM
+output block whose index map ignores the chunk index — chunks form the
+innermost sequential grid dimension, exactly the TPU-idiomatic replacement
+for the GPU scan: the systolic array does the within-chunk work, the
+sequential grid carries the recurrence.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *, ck, hp, n):
+    jc = pl.program_id(2)
+    x = x_ref[0, 0].astype(jnp.float32)  # (ck, hp)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (ck,)
+    A = a_ref[0, 0]  # scalar (negative)
+    Bm = b_ref[0].astype(jnp.float32)  # (ck, n)
+    Cm = c_ref[0].astype(jnp.float32)  # (ck, n)
+
+    a = dt * A  # (ck,)
+    cum = jnp.cumsum(a)  # inclusive
+    xdt = x * dt[:, None]
+
+    # intra-chunk: Y = ((C Bᵀ) ⊙ L) X, L[i,j] = exp(cum_i − cum_j) for j ≤ i
+    qpos = jax.lax.broadcasted_iota(jnp.int32, (ck, ck), 0)
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (ck, ck), 1)
+    L = jnp.where(kpos <= qpos, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+    scores = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32) * L
+    y = jnp.dot(scores, xdt, preferred_element_type=jnp.float32)
+
+    @pl.when(jc == 0)
+    def _init():
+        state_ref[0, 0] = jnp.zeros((hp, n), jnp.float32)
+
+    state_in = state_ref[0, 0]  # (hp, n)
+    # inter-chunk contribution: y += exp(cum) * (C · state_inᵀ)
+    y = y + jnp.dot(Cm, state_in.T, preferred_element_type=jnp.float32) * jnp.exp(cum)[:, None]
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # state update: S' = exp(cum_last)·S + Σ_c exp(cum_last − cum_c)·(x·dt)_c ⊗ B_c
+    decay_out = jnp.exp(cum[-1] - cum)  # (ck,)
+    state_ref[0, 0] = state_in * jnp.exp(cum[-1]) + jnp.dot(
+        (xdt * decay_out[:, None]).T, Bm, preferred_element_type=jnp.float32
+    )
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, H, S, hp)
+    dt: jax.Array,  # (B, H, S)
+    A: jax.Array,  # (H,) negative
+    Bm: jax.Array,  # (B, S, N)   (ngroups=1, shared across heads)
+    Cm: jax.Array,  # (B, S, N)
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+):
+    """Returns (y (B,H,S,hp) f32, final_state (B,H,hp,N) f32)."""
+    B, H, S, hp = x.shape
+    N = Bm.shape[-1]
+    ck = min(chunk, S)
+    assert S % ck == 0
+    nc = S // ck
+    a2 = jnp.broadcast_to(A[None, :, None], (B, H, 1)).astype(jnp.float32)
+    kernel = functools.partial(_kernel, ck=ck, hp=hp, n=N)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, ck, hp), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, ck), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, c: (b, h, 0)),
+            pl.BlockSpec((1, ck, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, ck, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, ck, hp), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, hp, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, hp), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, hp, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, a2, Bm, Cm)
+    return y, state

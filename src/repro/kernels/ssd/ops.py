@@ -1,0 +1,16 @@
+"""Jitted wrapper for the SSD kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ssd.kernel import ssd_chunked
+from repro.kernels.ssd.ref import ssd_chunked_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_kernel", "interpret"))
+def ssd(x, dt, A, Bm, Cm, *, chunk=64, use_kernel=True, interpret=False):
+    if use_kernel:
+        return ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+    return ssd_chunked_ref(x, dt, A, Bm, Cm, chunk=chunk)

@@ -1,0 +1,15 @@
+"""Oracle: reuse the model substrate's chunked SSD reference."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.mamba import ssd_ref
+
+
+def ssd_chunked_ref(x, dt, A, Bm, Cm, *, chunk=64):
+    """Same layout as the kernel: x (B,H,S,hp), dt (B,H,S), Bm/Cm (B,S,N).
+    Returns (y (B,H,S,hp) f32, final_state (B,H,hp,N) f32)."""
+    xs = jnp.swapaxes(x, 1, 2)        # (B,S,H,hp)
+    dts = jnp.swapaxes(dt, 1, 2)      # (B,S,H)
+    y, st = ssd_ref(xs, dts, A, Bm[:, :, None], Cm[:, :, None], chunk=chunk)
+    return jnp.swapaxes(y, 1, 2), st

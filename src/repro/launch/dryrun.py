@@ -1,0 +1,417 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run: lower + compile every (arch × shape × mesh) cell and
+extract the roofline terms from the compiled artifact.
+
+MUST be run as its own process (the XLA flag above is set before any jax
+import — 512 placeholder host devices stand in for the 512 v5e chips).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, cell_is_runnable, get_config
+from repro.core.profiles import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.launch.mesh import make_production_mesh, mesh_axes
+from repro.models import build_model
+from repro.models.common import abstract_from_schema, param_count, sanitize_specs
+from repro.models.layers import resolve_schema
+from repro.training.optim import AdamWConfig, adamw_update
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+
+COLLECTIVE_W = {
+    "all-reduce": 2.0,  # ring: 2N per device
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|c64)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device wire bytes by collective type, from post-SPMD HLO."""
+    out = {k: 0.0 for k in COLLECTIVE_W}
+    counts = {k: 0 for k in COLLECTIVE_W}
+    for line in hlo_text.splitlines():
+        for op, w in COLLECTIVE_W.items():
+            token = f" {op}(" if not op.endswith("start") else op
+            if f" {op}(" in line or f" {op}-start(" in line:
+                # result shapes appear before the op name
+                head = line.split(f" {op}", 1)[0]
+                nbytes = 0.0
+                for m in _SHAPE_RE.finditer(head):
+                    dt, dims = m.group(1), m.group(2)
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    nbytes += n * _DTYPE_BYTES[dt]
+                out[op] += nbytes * w
+                counts[op] += 1
+                break
+    return {"bytes": out, "counts": counts}
+
+
+def model_flops(cfg, shape_info):
+    """Reference useful FLOPs: 6·N_active·D (train) / 2·N_active·D (serve);
+    N excludes ramp heads (the technique's overhead is reported separately)."""
+    model = build_model(cfg)
+    schema = model.schema()
+    n_total = param_count(schema)
+    n_ramps = param_count(schema.get("ramps", {})) if isinstance(schema, dict) else 0
+    n_backbone = n_total - n_ramps
+    n_active = n_backbone
+    if cfg.moe:
+        e_tot, e_act = cfg.n_experts, cfg.top_k
+        expert_params = 3 * cfg.d_model * cfg.moe_d_ff
+        n_moe_layers = sum(
+            1 for i in range(cfg.n_layers)
+            if (not cfg.hybrid_period or i % cfg.moe_every == 1) and i >= cfg.first_k_dense
+        )
+        n_active = n_backbone - n_moe_layers * (e_tot - e_act) * expert_params
+    D = shape_info["global_batch"] * (shape_info["seq_len"] if shape_info["kind"] != "decode" else 1)
+    mult = 6.0 if shape_info["kind"] == "train" else 2.0
+    return mult * n_active * D, n_total, n_active
+
+
+def metric_overrides(cfg):
+    """Two reduced-depth fully-unrolled lowerings for exact per-period cost
+    extrapolation (scan bodies are otherwise counted once by cost_analysis).
+    Returns ([ovr1, ovr2], (units1, units2, units_full))."""
+    from repro.models.transformer import build_plan
+
+    if cfg.family == "encdec":
+        return (
+            [dict(n_enc_layers=2, n_dec_layers=2, n_layers=4, scan_unroll=True),
+             dict(n_enc_layers=3, n_dec_layers=3, n_layers=6, scan_unroll=True)],
+            (2, 3, cfg.n_dec_layers),
+        )
+    plan = build_plan(cfg)
+    P, pre, suf = len(plan.period), len(plan.prefix), len(plan.suffix)
+    u1 = 1 if pre + P + suf >= 2 else 2  # ensure >=1 ramp site at u1
+    u2 = u1 + 1
+    return (
+        [dict(n_layers=pre + u1 * P + suf, scan_unroll=True),
+         dict(n_layers=pre + u2 * P + suf, scan_unroll=True)],
+        (u1, u2, plan.n_periods),
+    )
+
+
+def _shard(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def abstract_with_sharding(abstracts, specs, mesh):
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=_shard(mesh, s)),
+        abstracts,
+        specs,
+    )
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, moe_impl="ep", overrides=None):
+    """Returns (fn, args_abstract, donate) ready for jit().lower()."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    info = SHAPES[shape_name]
+    model = build_model(cfg)
+    kind = info["kind"]
+    GB, S = info["global_batch"], info["seq_len"]
+    axes = mesh_axes(mesh, fsdp=(kind == "train"))
+    schema = resolve_schema(model.schema(), axes)
+    p_specs = sanitize_specs(
+        jax.tree.map(lambda i: i.spec, schema, is_leaf=lambda x: hasattr(x, "spec") and hasattr(x, "init")),
+        abstract_from_schema(schema),
+        mesh,
+    )
+    p_abs = abstract_with_sharding(abstract_from_schema(schema), p_specs, mesh)
+    dspec = axes.aspec("data")
+    K = cfg.ramp_budget_slots
+    act_abs = jax.ShapeDtypeStruct((K,), jnp.int32, sharding=_shard(mesh, P()))
+
+    if kind == "train":
+        opt_abs = {
+            "step": jax.ShapeDtypeStruct((), jnp.int32, sharding=_shard(mesh, P())),
+            "mu": p_abs,
+            "nu": p_abs,
+        }
+        tok_abs = jax.ShapeDtypeStruct(
+            (GB, S if cfg.family != "encdec" else S // 8), jnp.int32,
+            sharding=_shard(mesh, P(dspec[0], None)),
+        )
+        batch_abs = {"tokens": tok_abs, "labels": tok_abs}
+        if cfg.family == "encdec":
+            batch_abs["frames"] = jax.ShapeDtypeStruct(
+                (GB, S, cfg.d_frontend), jnp.dtype(cfg.dtype),
+                sharding=_shard(mesh, P(dspec[0], None, None)),
+            )
+        if cfg.cross_attn_every:
+            batch_abs["image_embeds"] = jax.ShapeDtypeStruct(
+                (GB, cfg.n_image_tokens, cfg.d_frontend), jnp.dtype(cfg.dtype),
+                sharding=_shard(mesh, P(dspec[0], None, None)),
+            )
+        opt_cfg = AdamWConfig()
+
+        def train_step(params, opt, batch):
+            def loss_fn(p):
+                return model.loss(
+                    p, batch, axes=axes, mesh=mesh, moe_impl=moe_impl,
+                    remat=cfg.train_remat,
+                )
+
+            (loss, mets), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            newp, newopt, gn = adamw_update(params, grads, opt, opt_cfg)
+            return newp, newopt, loss, gn
+
+        return train_step, (p_abs, opt_abs, batch_abs), (0, 1)
+
+    if kind == "prefill":
+        B = GB
+        tok_abs = jax.ShapeDtypeStruct(
+            (B, S if cfg.family != "encdec" else 64), jnp.int32,
+            sharding=_shard(mesh, P(dspec[0], None)),
+        )
+        extra = {}
+        if cfg.family == "encdec":
+            extra["frames"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_frontend), jnp.dtype(cfg.dtype),
+                sharding=_shard(mesh, P(dspec[0], None, None)),
+            )
+        if cfg.cross_attn_every:
+            extra["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_image_tokens, cfg.d_frontend), jnp.dtype(cfg.dtype),
+                sharding=_shard(mesh, P(dspec[0], None, None)),
+            )
+
+        if cfg.family == "encdec":
+
+            def prefill(params, tokens, active, frames):
+                cache, outs = model.prefill(
+                    params, frames, tokens, active_sites=active, axes=axes, mesh=mesh
+                )
+                return cache, outs
+
+            return prefill, (p_abs, tok_abs, act_abs, extra["frames"]), ()
+
+        def prefill(params, tokens, active, **kw):
+            cache, outs = model.prefill(
+                params, tokens, active_sites=active, axes=axes, mesh=mesh,
+                moe_impl=moe_impl, **kw,
+            )
+            return cache, outs
+
+        args = (p_abs, tok_abs, act_abs)
+        if cfg.cross_attn_every:
+            return partial(prefill_vlm, model, axes, mesh, moe_impl), (
+                p_abs, tok_abs, act_abs, extra["image_embeds"],
+            ), ()
+        return prefill, args, ()
+
+    # decode
+    B = GB
+    shard_batch = B >= 16
+    if cfg.family == "encdec":
+        Sc_self, M = 4096, S
+        cdt = jnp.dtype(cfg.dtype)
+        L, KH, hd = cfg.n_dec_layers, cfg.n_kv_heads, cfg.hd
+        bspec = dspec[0] if shard_batch else None
+        sspec = None if shard_batch else dspec[0]
+        cache_abs = {
+            "k": jax.ShapeDtypeStruct((L, B, Sc_self, KH, hd), cdt, sharding=_shard(mesh, P(None, bspec, sspec, None, None))),
+            "v": jax.ShapeDtypeStruct((L, B, Sc_self, KH, hd), cdt, sharding=_shard(mesh, P(None, bspec, sspec, None, None))),
+            "xkv": {
+                "k": jax.ShapeDtypeStruct((L, B, M, KH, hd), cdt, sharding=_shard(mesh, P(None, bspec, sspec, None, None))),
+                "v": jax.ShapeDtypeStruct((L, B, M, KH, hd), cdt, sharding=_shard(mesh, P(None, bspec, sspec, None, None))),
+            },
+        }
+    else:
+        c_schema = resolve_schema(model.cache_schema(B, S, shard_batch), axes)
+        c_specs = sanitize_specs(
+            jax.tree.map(lambda i: i.spec, c_schema, is_leaf=lambda x: hasattr(x, "init") and hasattr(x, "spec")),
+            abstract_from_schema(c_schema),
+            mesh,
+        )
+        cache_abs = abstract_with_sharding(abstract_from_schema(c_schema), c_specs, mesh)
+    tok_abs = jax.ShapeDtypeStruct(
+        (B, 1), jnp.int32,
+        sharding=_shard(mesh, P(dspec[0] if shard_batch else None, None)),
+    )
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32, sharding=_shard(mesh, P()))
+
+    def serve_step(params, cache, tokens, pos, active):
+        new_cache, outs = model.decode(
+            params, cache, tokens, pos, active_sites=active, axes=axes, mesh=mesh,
+            **({} if cfg.family == "encdec" else {"moe_impl": moe_impl}),
+        )
+        return new_cache, outs
+
+    return serve_step, (p_abs, cache_abs, tok_abs, pos_abs, act_abs), (1,)
+
+
+def prefill_vlm(model, axes, mesh, moe_impl, params, tokens, active, image_embeds):
+    return model.prefill(
+        params, tokens, active_sites=active, axes=axes, mesh=mesh,
+        moe_impl=moe_impl, image_embeds=image_embeds,
+    )
+
+
+def _compile_and_measure(arch, shape_name, mesh, overrides):
+    fn, args, donate = build_cell(arch, shape_name, mesh, overrides=overrides)
+    t0 = time.time()
+    lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+    t_lower = time.time() - t0
+    t1 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t1
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    m = {
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "collectives": collective_bytes(text),
+        "hlo_chars": len(text),
+    }
+    try:
+        ma = compiled.memory_analysis()
+        m["memory"] = {
+            k: int(getattr(ma, k))
+            for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+            )
+            if hasattr(ma, k)
+        }
+    except Exception as e:  # pragma: no cover
+        m["memory"] = {"error": str(e)}
+    return m
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, overrides=None,
+             tag="", metrics: bool = True):
+    """Compile the full (scanned) program — the shardability/memory proof —
+    plus, for single-pod roofline metrics, two reduced-depth unrolled
+    lowerings whose exact per-period costs extrapolate to full depth."""
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = int(np.prod(mesh.devices.shape))
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    info = SHAPES[shape_name]
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "chips": chips,
+        "kind": info["kind"], "seq_len": info["seq_len"],
+        "global_batch": info["global_batch"], "tag": tag, "ok": False,
+    }
+    t0 = time.time()
+    try:
+        full = _compile_and_measure(arch, shape_name, mesh, overrides)
+        rec.update({f"full_{k}": v for k, v in full.items()})
+        mf, n_tot, n_act = model_flops(cfg, info)
+        rec["model_flops_ref"] = mf
+        rec["params_total"] = n_tot
+        rec["params_active"] = n_act
+        if metrics:
+            ovrs, (u1, u2, uf) = metric_overrides(cfg)
+            base = dict(overrides or {})
+            m1 = _compile_and_measure(arch, shape_name, mesh, {**base, **ovrs[0]})
+            m2 = _compile_and_measure(arch, shape_name, mesh, {**base, **ovrs[1]})
+
+            def xp(a, b):  # linear extrapolation in period count
+                slope = (b - a) / (u2 - u1)
+                return a + slope * (uf - u1)
+
+            rec["xp_flops"] = xp(m1["flops"], m2["flops"])
+            rec["xp_bytes"] = xp(m1["bytes"], m2["bytes"])
+            c1 = m1["collectives"]["bytes"]
+            c2 = m2["collectives"]["bytes"]
+            rec["xp_collectives"] = {k: xp(c1[k], c2[k]) for k in c1}
+            rec["metric_points"] = {"u": [u1, u2, uf],
+                                    "flops": [m1["flops"], m2["flops"]],
+                                    "bytes": [m1["bytes"], m2["bytes"]]}
+            # roofline terms (seconds, per device; cost_analysis is
+            # post-SPMD per-device on the host backend)
+            coll = sum(rec["xp_collectives"].values())
+            rec["t_compute_s"] = rec["xp_flops"] / PEAK_FLOPS
+            rec["t_memory_s"] = rec["xp_bytes"] / HBM_BW
+            rec["t_collective_s"] = coll / ICI_BW
+            terms = {"compute": rec["t_compute_s"], "memory": rec["t_memory_s"],
+                     "collective": rec["t_collective_s"]}
+            rec["bottleneck"] = max(terms, key=terms.get)
+            rec["useful_flops_ratio"] = rec["model_flops_ref"] / max(
+                rec["xp_flops"] * chips, 1.0
+            )
+        rec["ok"] = True
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = time.time() - t0
+    os.makedirs(ART_DIR, exist_ok=True)
+    sfx = f"__{tag}" if tag else ""
+    path = os.path.join(ART_DIR, f"{arch}__{shape_name}__{mesh_kind}{sfx}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = "OK" if rec["ok"] else f"FAIL ({rec.get('error','')[:120]})"
+    print(f"[{arch} × {shape_name} × {mesh_kind}{sfx}] {status}  total {rec['total_s']:.1f}s  "
+          f"bottleneck={rec.get('bottleneck','-')}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                if cell_is_runnable(a, s):
+                    cells.append((a, s))
+    else:
+        cells.append((args.arch, args.shape))
+    n_ok = 0
+    for a, s in cells:
+        for mk in meshes:
+            path = os.path.join(ART_DIR, f"{a}__{s}__{mk}.json")
+            if args.skip_existing and os.path.exists(path):
+                with open(path) as f:
+                    if json.load(f).get("ok"):
+                        n_ok += 1
+                        continue
+            # roofline metric lowerings are single-pod only (see DESIGN.md)
+            rec = run_cell(a, s, mk, metrics=(mk == "single"))
+            n_ok += bool(rec["ok"])
+    print(f"dryrun: {n_ok}/{len(cells) * len(meshes)} cells OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

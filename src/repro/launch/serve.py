@@ -1,0 +1,104 @@
+"""Production serving launcher: end-to-end Apparate serving on a trained
+(tiny) model with a drifting synthetic workload.
+
+  PYTHONPATH=src python -m repro.launch.serve --domain cv --n 3000
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs import get_bench, get_config
+from repro.core import ApparateController, ControllerConfig, build_profile
+from repro.data import make_image_stream, make_token_stream
+from repro.models import build_model
+from repro.serving import (
+    ClassifierRunner,
+    PlatformConfig,
+    ServingSimulator,
+    make_requests,
+    maf_trace,
+    savings_vs,
+    summarize,
+    video_trace,
+)
+from repro.training import TrainConfig, train
+
+
+def build_domain(domain: str, n: int, seed: int = 2):
+    """Train a paper-shape bench model on the bootstrap split (first 10%,
+    paper §4) and return (model, params, stream, profile)."""
+    if domain == "cv":
+        cfg = get_bench("resnet18").replace(n_classes=10)
+        model = build_model(cfg)
+        stream = make_image_stream(n, img_size=cfg.img_size, n_classes=10, mode="cv", seed=seed)
+        batch_key = "images"
+        prof_cfg = get_config("resnet18").replace(resnet_widths=(64, 128, 256, 512), img_size=224)
+        lr, steps = 3e-3, 150
+    else:
+        cfg = get_bench("bert-base").replace(n_classes=10)
+        model = build_model(cfg)
+        stream = make_token_stream(n, seq_len=32, vocab=cfg.vocab_size, n_classes=10, mode="nlp", seed=seed)
+        batch_key = "tokens"
+        prof_cfg = get_config("bert-base")
+        lr, steps = 1e-3, 200
+    boot = max(n // 10, 256)
+
+    def batches(s):
+        rng = np.random.default_rng(s)
+        idx = rng.integers(0, boot, 64)
+        return {batch_key: stream.data[idx], "labels": stream.labels[idx]}
+
+    state, _ = train(model, batches, TrainConfig(steps=steps, lr=lr), verbose=False)
+    profile = build_profile(prof_cfg, mode="decode", chips=1)
+    return cfg, model, state["params"], stream, profile, boot
+
+
+def serve(domain: str, n: int, *, policy="tfserve", budget=0.02, acc=0.99,
+          load=0.5, seed=2, slots=6, verbose=True):
+    cfg, model, params, stream, prof, boot = build_domain(domain, n, seed)
+    runner = ClassifierRunner(model, params, stream.data, max_slots=slots)
+    ctl = ApparateController(
+        len(model.sites), prof,
+        ControllerConfig(max_slots=slots, ramp_budget_frac=budget, acc_constraint=acc),
+    )
+    exec1 = prof.vanilla_time(1)
+    n_serve = n - boot
+    if domain == "cv":
+        arrivals = video_trace(n_serve, fps=load * 1000.0 / exec1)
+    else:
+        arrivals = maf_trace(n_serve, mean_qps=load * 1000.0 / exec1, seed=seed)
+    reqs = make_requests(arrivals, slo_ms=2 * exec1, items=np.arange(boot, n))
+    pf = PlatformConfig(policy=policy, max_batch_size=8, batch_timeout_ms=exec1)
+    base = ServingSimulator(prof, pf).run(reqs)
+    resp = ServingSimulator(prof, pf, runner, ctl).run(reqs)
+    van = runner.vanilla_labels(n)
+    agree = float(np.mean([r.label == van[boot + r.rid] for r in resp if not r.dropped]))
+    mb, mo = summarize(base), summarize(resp)
+    out = {
+        "domain": domain, "vanilla": mb, "apparate": mo, "accuracy": agree,
+        "wins": savings_vs(mb, mo), "controller": dict(ctl.stats),
+        "active_ramps": list(map(int, ctl.active)),
+    }
+    if verbose:
+        print(json.dumps(out, indent=1, default=float))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--domain", default="cv", choices=["cv", "nlp"])
+    ap.add_argument("--n", type=int, default=3000)
+    ap.add_argument("--policy", default="tfserve", choices=["tfserve", "clockwork"])
+    ap.add_argument("--budget", type=float, default=0.02)
+    ap.add_argument("--acc", type=float, default=0.99)
+    ap.add_argument("--load", type=float, default=0.5)
+    args = ap.parse_args(argv)
+    serve(args.domain, args.n, policy=args.policy, budget=args.budget,
+          acc=args.acc, load=args.load)
+
+
+if __name__ == "__main__":
+    main()

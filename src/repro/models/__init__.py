@@ -1,0 +1,22 @@
+"""Model construction dispatch."""
+from __future__ import annotations
+
+
+def build_model(cfg):
+    if cfg.family == "lm":
+        from repro.models.transformer import LM
+
+        return LM(cfg)
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDecLM
+
+        return EncDecLM(cfg)
+    if cfg.family == "encoder_cls":
+        from repro.models.encdec import EncoderClassifier
+
+        return EncoderClassifier(cfg)
+    if cfg.family == "resnet":
+        from repro.models.resnet import ResNet
+
+        return ResNet(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

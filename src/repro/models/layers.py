@@ -1,0 +1,441 @@
+"""Shared neural-net building blocks (functional, schema-driven).
+
+Conventions:
+  * params are nested dicts of arrays; schemas are the same trees of
+    ``ParamInfo`` (see common.py).
+  * compute happens in ``cfg.dtype`` with float32 softmax / norms.
+  * ``axes`` (MeshAxes) carries the mesh axis names used in PartitionSpecs,
+    so the same model code serves single-pod, multi-pod, and 1-device test
+    meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParamInfo
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Mesh axis naming + sharding policy.
+
+    data: axis (or tuple of axes) for batch / FSDP sharding.
+    model: axis for tensor/expert parallelism.
+    fsdp: if True, parameters are additionally sharded over `data`
+          (training); if False they are sharded over `model` only (serving).
+    """
+
+    data: Tuple[str, ...] = ("data",)
+    model: Optional[str] = "model"
+    fsdp: bool = True
+
+    @property
+    def d(self):  # data spec entry
+        return self.data if len(self.data) > 1 else self.data[0]
+
+    def wspec(self, *entries) -> P:
+        """Weight spec: replace 'data' by the data axes iff fsdp, 'model' by
+        the model axis (or None when the mesh has no model axis)."""
+        out = []
+        for e in entries:
+            if e == "data":
+                out.append(self.d if self.fsdp else None)
+            elif e == "model":
+                out.append(self.model)
+            else:
+                out.append(e)
+        return P(*out)
+
+    def aspec(self, *entries) -> P:
+        """Activation spec: 'data' always maps to the data axes."""
+        out = []
+        for e in entries:
+            if e == "data":
+                out.append(self.d)
+            elif e == "model":
+                out.append(self.model)
+            else:
+                out.append(e)
+        return P(*out)
+
+
+TEST_AXES = MeshAxes(data=("data",), model="model", fsdp=False)
+
+
+def constrain(x, spec: P, mesh):
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec)
+    )
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+
+
+def rms_norm(x, w, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    y = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def norm_schema(cfg, L=None) -> dict:
+    d = cfg.d_model
+    shp = (d,) if L is None else (L, d)
+    if cfg.norm_type == "ln":
+        return {
+            "w": ParamInfo(shp, jnp.float32, P(), "ones"),
+            "b": ParamInfo(shp, jnp.float32, P(), "zeros"),
+        }
+    return {"w": ParamInfo(shp, jnp.float32, P(), "zeros")}
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm_type == "ln":
+        return layer_norm(x, p["w"], p["b"])
+    return rms_norm(x, p["w"])
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+
+
+def rope_sincos(positions, dim: int, theta: float):
+    """positions: int32[...]. Returns (sin, cos) of shape positions.shape+(dim/2,)."""
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x: (..., S, n, dim) ; sin/cos: (..., S, dim/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s, c = sin[..., None, :], cos[..., None, :]
+    # broadcast: x is (..., S, n, half); sin is (..., S, half) -> (..., S, 1, half)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(
+        x.dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# dense FFN (SwiGLU / MLP)
+
+
+def ffn_schema(cfg, d_ff: int, L=None, dtype=None) -> dict:
+    d = cfg.d_model
+    dt = dtype or jnp.dtype(cfg.dtype)
+    pre = () if L is None else (L,)
+    pfx = (None,) * len(pre)
+    sc = 0.02 / math.sqrt(2 * max(cfg.n_layers, 1))
+    return {
+        "w_gate": ParamInfo(pre + (d, d_ff), dt, P(*pfx, "data", "model"), "normal:0.02"),
+        "w_up": ParamInfo(pre + (d, d_ff), dt, P(*pfx, "data", "model"), "normal:0.02"),
+        "w_down": ParamInfo(pre + (d_ff, d), dt, P(*pfx, "model", "data"), f"normal:{sc}"),
+    }
+
+
+def ffn_apply(cfg, p, x, axes: MeshAxes, mesh=None):
+    a = act_fn(cfg.act)
+    h = a(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = constrain(h, axes.aspec("data", None, "model"), mesh)
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+
+def _resolve_spec(info: ParamInfo, axes: MeshAxes) -> ParamInfo:
+    """Rewrite placeholder axis names 'data'/'model' in a spec via axes."""
+    return dataclasses.replace(info, spec=axes.wspec(*info.spec))
+
+
+def resolve_schema(schema, axes: MeshAxes):
+    from repro.models.common import is_info
+
+    return jax.tree.map(lambda i: _resolve_spec(i, axes), schema, is_leaf=is_info)
+
+
+def gqa_schema(cfg, L=None) -> dict:
+    """Standard GQA attention params. Specs use placeholder names resolved
+    later against MeshAxes."""
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = jnp.dtype(cfg.dtype)
+    pre = () if L is None else (L,)
+    pfx = (None,) * len(pre)
+    sc = 0.02 / math.sqrt(2 * max(cfg.n_layers, 1))
+    sch = {
+        "wq": ParamInfo(pre + (d, H * hd), dt, P(*pfx, "data", "model"), "normal:0.02"),
+        "wk": ParamInfo(pre + (d, K * hd), dt, P(*pfx, "data", "model"), "normal:0.02"),
+        "wv": ParamInfo(pre + (d, K * hd), dt, P(*pfx, "data", "model"), "normal:0.02"),
+        "wo": ParamInfo(pre + (H * hd, d), dt, P(*pfx, "model", "data"), f"normal:{sc}"),
+    }
+    if cfg.qkv_bias:
+        sch["bq"] = ParamInfo(pre + (H * hd,), dt, P(*pfx, "model"), "zeros")
+        sch["bk"] = ParamInfo(pre + (K * hd,), dt, P(*pfx, "model"), "zeros")
+        sch["bv"] = ParamInfo(pre + (K * hd,), dt, P(*pfx, "model"), "zeros")
+    if cfg.qk_norm:
+        sch["qnorm"] = ParamInfo(pre + (hd,), jnp.float32, P(), "zeros")
+        sch["knorm"] = ParamInfo(pre + (hd,), jnp.float32, P(), "zeros")
+    return sch
+
+
+def sdpa(q, k, v, mask, scale=None):
+    """q: (B,Sq,H,hd) k,v: (B,Sk,K,hd); GQA expansion; f32 softmax.
+    mask: broadcastable to (B, H, Sq, Sk) (bool, True = attend)."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K if K else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qh = q.reshape(B, Sq, K, G, hd) if K else q
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qh, k).astype(jnp.float32) * scale
+    if mask is not None:
+        m = mask if mask.ndim == 4 else mask[:, None]
+        m = m.reshape(B, K, G, Sq, -1) if m.shape[1] == H else m[:, :, None]
+        logits = jnp.where(m, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, v.shape[-1])  # v head dim may differ (MLA)
+
+
+def causal_mask(Sq: int, Sk: int, q_offset) -> jnp.ndarray:
+    """(1, 1, Sq, Sk) True where key position <= query position."""
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    return (kpos <= qpos)[None, None]
+
+
+def window_mask(Sq: int, Sk: int, q_offset, window: int) -> jnp.ndarray:
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    return ((kpos <= qpos) & (kpos > qpos - window))[None, None]
+
+
+def attn_apply(
+    cfg,
+    p,
+    x,
+    *,
+    positions,
+    mask,
+    axes: MeshAxes,
+    mesh=None,
+    cache=None,
+    cache_index=None,
+    rope_theta=None,
+    ring_window=None,
+):
+    """GQA attention. If `cache` (dict k,v: (B, S, K, hd)) is given, new k/v
+    are written at `cache_index` and attention runs against the cache.
+    `ring_window=W` stores only the last W tokens (slot = pos % W): the
+    windowed-cache optimization for local-attention layers — the caller
+    passes `cache_index = pos % W` at decode and a ring mask.
+    Returns (out, new_cache)."""
+    B, S, d = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qnorm"])
+        k = rms_norm(k, p["knorm"])
+    if cfg.pos_type == "rope":
+        theta = rope_theta if rope_theta is not None else cfg.rope_theta
+        sin, cos = rope_sincos(positions, hd, theta)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    new_cache = None
+    if cache is not None:
+        if ring_window is not None and S > 1:
+            # prefill into a ring: slot j holds the newest token t ≡ j (mod W)
+            W = ring_window
+            j = jnp.arange(W)
+            t = (S - 1) - ((S - 1 - j) % W)
+            rk = jnp.take(k, jnp.clip(t, 0), axis=1).astype(cache["k"].dtype)
+            rv = jnp.take(v, jnp.clip(t, 0), axis=1).astype(cache["v"].dtype)
+            new_cache = {"k": rk, "v": rv}
+            # attention runs against the full in-flight k/v (window-masked)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
+            new_cache = {"k": ck, "v": cv}
+            k, v = ck, cv
+    q = constrain(q, axes.aspec("data", None, "model", None), mesh)
+    out = sdpa(q, k, v, mask)
+    out = out.reshape(B, S, H * hd)
+    return out @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+
+
+def mla_schema(cfg, L=None) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    pre = () if L is None else (L,)
+    pfx = (None,) * len(pre)
+    sc = 0.02 / math.sqrt(2 * max(cfg.n_layers, 1))
+    return {
+        "wq": ParamInfo(pre + (d, H * (dn + dr)), dt, P(*pfx, "data", "model"), "normal:0.02"),
+        "w_dkv": ParamInfo(pre + (d, r + dr), dt, P(*pfx, "data", None), "normal:0.02"),
+        "kv_norm": ParamInfo(pre + (r,), jnp.float32, P(), "zeros"),
+        "w_uk": ParamInfo(pre + (r, H * dn), dt, P(*pfx, "data", "model"), "normal:0.02"),
+        "w_uv": ParamInfo(pre + (r, H * dv), dt, P(*pfx, "data", "model"), "normal:0.02"),
+        "wo": ParamInfo(pre + (H * dv, d), dt, P(*pfx, "model", "data"), f"normal:{sc}"),
+    }
+
+
+def mla_apply(
+    cfg,
+    p,
+    x,
+    *,
+    positions,
+    mask,
+    axes: MeshAxes,
+    mesh=None,
+    cache=None,
+    cache_index=None,
+    absorbed: bool = False,
+):
+    """MLA attention. Cache holds the compressed kv latent (B,S,r) and the
+    shared rope key (B,S,dr). `absorbed=True` uses the latent-space decode
+    path (beyond-paper perf optimization; math-equivalent)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    ckv = x @ p["w_dkv"]  # (B,S,r+dr)
+    c, k_pe = ckv[..., :r], ckv[..., r:]
+    c = rms_norm(c, p["kv_norm"])
+    sin, cos = rope_sincos(positions, dr, cfg.rope_theta)
+    q_pe = apply_rope(q_pe, sin, cos)
+    k_pe = apply_rope(k_pe[:, :, None, :], sin, cos)[:, :, 0]  # single shared head
+    new_cache = None
+    if cache is not None:
+        cc = jax.lax.dynamic_update_slice_in_dim(cache["c"], c.astype(cache["c"].dtype), cache_index, axis=1)
+        cp = jax.lax.dynamic_update_slice_in_dim(cache["k_pe"], k_pe.astype(cache["k_pe"].dtype), cache_index, axis=1)
+        new_cache = {"c": cc, "k_pe": cp}
+        c, k_pe = cc, cp
+    Sk = c.shape[1]
+    scale = 1.0 / math.sqrt(dn + dr)
+    if absorbed:
+        # q_nope' = q_nope @ w_uk^T  -> score against latent directly
+        wuk = p["w_uk"].reshape(r, H, dn)
+        q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, wuk)
+        s_nope = jnp.einsum("bqhr,bsr->bhqs", q_lat, c)
+        s_pe = jnp.einsum("bqhn,bsn->bhqs", q_pe, k_pe)
+        logits = (s_nope + s_pe).astype(jnp.float32) * scale
+        if mask is not None:
+            logits = jnp.where(mask, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(c.dtype)
+        ctx = jnp.einsum("bhqs,bsr->bqhr", probs, c)
+        wuv = p["w_uv"].reshape(r, H, dv)
+        out = jnp.einsum("bqhr,rhv->bqhv", ctx, wuv)
+    else:
+        k_nope = jnp.einsum("bsr,rx->bsx", c, p["w_uk"]).reshape(B, Sk, H, dn)
+        v = jnp.einsum("bsr,rx->bsx", c, p["w_uv"]).reshape(B, Sk, H, dv)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe[:, :, None], (B, Sk, H, dr))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_pe], axis=-1)
+        out = sdpa(qq, k, v, mask, scale=scale)
+    out = out.reshape(B, S, H * dv)
+    return out @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (VLM image layers / enc-dec decoder)
+
+
+def cross_attn_schema(cfg, L=None, d_kv_in: Optional[int] = None) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dk = d_kv_in or d
+    dt = jnp.dtype(cfg.dtype)
+    pre = () if L is None else (L,)
+    pfx = (None,) * len(pre)
+    sc = 0.02 / math.sqrt(2 * max(cfg.n_layers, 1))
+    return {
+        "wq": ParamInfo(pre + (d, H * hd), dt, P(*pfx, "data", "model"), "normal:0.02"),
+        "wk": ParamInfo(pre + (dk, K * hd), dt, P(*pfx, "data", "model"), "normal:0.02"),
+        "wv": ParamInfo(pre + (dk, K * hd), dt, P(*pfx, "data", "model"), "normal:0.02"),
+        "wo": ParamInfo(pre + (H * hd, d), dt, P(*pfx, "model", "data"), f"normal:{sc}"),
+        "gate": ParamInfo(pre + (), jnp.float32, P(*pfx), "zeros"),
+    }
+
+
+def cross_attn_apply(cfg, p, x, memory=None, kv_cache=None, *, axes, mesh=None):
+    """x: (B,S,d); memory: (B,M,dk) or precomputed kv_cache {k,v}: (B,M,K,hd).
+    Gated (tanh) residual as in Llama-vision. Returns (out, kv)."""
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    if kv_cache is not None:
+        k, v = kv_cache["k"], kv_cache["v"]
+    else:
+        M = memory.shape[1]
+        k = (memory @ p["wk"]).reshape(B, M, K, hd)
+        v = (memory @ p["wv"]).reshape(B, M, K, hd)
+    out = sdpa(q, k, v, mask=None)
+    out = out.reshape(B, S, H * hd) @ p["wo"]
+    out = jnp.tanh(p["gate"].astype(jnp.float32)).astype(out.dtype) * out
+    return out, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+
+
+def embed_schema(cfg) -> dict:
+    # vocab-parallel (Megatron): vocab over `model` so the unembed's partial
+    # sums stay weight-sized; `data` FSDP on the d dim.
+    Vp, d = cfg.padded_vocab, cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    sch = {"embed": ParamInfo((Vp, d), dt, P("model", "data"), "embed:0.02")}
+    if cfg.pos_type == "learned":
+        sch["pos_embed"] = ParamInfo((cfg.max_position, d), dt, P(None, "model"), "embed:0.02")
+    if not cfg.tie_embeddings:
+        sch["lm_head"] = ParamInfo((d, Vp), dt, P("data", "model"), "normal:0.02")
+    return sch
+
+
+def embed_apply(cfg, p, tokens, positions=None):
+    h = p["embed"][tokens]
+    if cfg.pos_type == "learned":
+        h = h + p["pos_embed"][positions]
+    return h
+
+
+def unembed(cfg, p, h):
+    w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    return h @ w

@@ -1,0 +1,204 @@
+"""Mamba2 (SSD — state-space duality) block [arXiv:2405.21060].
+
+Layout follows the published block: in_proj -> [z | x | B | C | dt],
+causal depthwise conv over [x|B|C], SSD scan, gated RMSNorm, out_proj.
+
+``ssd_ref`` is the chunked reference (pure jnp; also the oracle for the
+Pallas kernel in repro/kernels/ssd). ``ssd_decode_step`` is the O(1)
+recurrent step used for serving.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParamInfo
+from repro.models.layers import MeshAxes, rms_norm
+
+
+def mamba_schema(cfg, L=None) -> dict:
+    d, di, N, hp = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_headdim
+    H = di // hp
+    G = cfg.ssm_ngroups
+    conv_dim = di + 2 * G * N
+    dt = jnp.dtype(cfg.dtype)
+    pre = () if L is None else (L,)
+    pfx = (None,) * len(pre)
+    d_in_proj = 2 * di + 2 * G * N + H
+    sc = 0.02 / math.sqrt(2 * max(cfg.n_layers, 1))
+    return {
+        "in_proj": ParamInfo(pre + (d, d_in_proj), dt, P(*pfx, "data", "model"), "normal:0.02"),
+        "conv_w": ParamInfo(pre + (cfg.d_conv, conv_dim), dt, P(*pfx, None, "model"), "normal:0.2"),
+        "conv_b": ParamInfo(pre + (conv_dim,), dt, P(*pfx, "model"), "zeros"),
+        "A_log": ParamInfo(pre + (H,), jnp.float32, P(*pfx), "ssm_a"),
+        "D": ParamInfo(pre + (H,), jnp.float32, P(*pfx), "ones"),
+        "dt_bias": ParamInfo(pre + (H,), jnp.float32, P(*pfx), "dt_bias"),
+        "norm_w": ParamInfo(pre + (di,), jnp.float32, P(*pfx), "zeros"),
+        "out_proj": ParamInfo(pre + (di, d), dt, P(*pfx, "model", "data"), f"normal:{sc}"),
+    }
+
+
+def segsum(a):
+    """Stable segment-sum: out[..., i, j] = sum a[..., j+1:i+1], -inf for j>i.
+    a: (..., T) -> (..., T, T)."""
+    T = a.shape[-1]
+    x = jnp.repeat(a[..., None], T, axis=-1)  # x[..., i, j] = a_i
+    mask = jnp.tril(jnp.ones((T, T), bool), -1)
+    x = jnp.where(mask, x, 0.0)
+    x = jnp.cumsum(x, axis=-2)  # out[i,j] = Σ_{j<i'<=i} a_i'
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, x, -jnp.inf)
+
+
+def ssd_ref(x, dt, A, B, C, chunk: int = 64, init_state=None):
+    """Chunked SSD (Mamba2 Algorithm; fp32 internals).
+
+    x: (b, s, h, p); dt: (b, s, h) (post-softplus); A: (h,) (negative);
+    B, C: (b, s, g, n). Returns (y (b,s,h,p), final_state (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    x, dt = x.astype(jnp.float32), dt.astype(jnp.float32)
+    B = jnp.repeat(B.astype(jnp.float32), rep, axis=2)  # (b,s,h,n)
+    C = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, h, n)
+    Cc = C.reshape(b, nc, chunk, h, n)
+    a = dtc * A  # (b,nc,l,h)
+    a = jnp.moveaxis(a, -1, -2)  # (b,nc,h,l)
+    a_cum = jnp.cumsum(a, axis=-1)
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(segsum(a))  # (b,nc,h,l,l)
+    Ydiag = jnp.einsum("bclhn,bcshn,bchls,bcshp->bclhp", Cc, Bc, L, xc * dtc[..., None])
+    # 2. chunk states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)  # (b,nc,h,l)
+    states = jnp.einsum("bclhn,bchl,bclhp->bchpn", Bc, decay_states, xc * dtc[..., None])
+    # 3. inter-chunk recurrence
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+    chunk_decay = jnp.exp(a_cum[..., -1])  # (b,nc,h)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit state *entering* the chunk
+
+    final, entering = jax.lax.scan(
+        step,
+        init_state,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    entering = jnp.moveaxis(entering, 0, 1)  # (b,nc,h,p,n)
+    # 4. state -> output contribution
+    state_decay = jnp.exp(a_cum)  # (b,nc,h,l)
+    Yoff = jnp.einsum("bclhn,bchpn,bchl->bclhp", Cc, entering, state_decay)
+    y = (Ydiag + Yoff).reshape(b, s, h, p)
+    return y, final
+
+
+def ssd_decode_step(state, x, dt, A, B, C):
+    """One recurrent step. state: (b,h,p,n); x: (b,h,p); dt: (b,h);
+    A: (h,); B,C: (b,g,n). Returns (y (b,h,p), new_state)."""
+    b, h, p = x.shape
+    g = B.shape[1]
+    rep = h // g
+    x, dt = x.astype(jnp.float32), dt.astype(jnp.float32)
+    B = jnp.repeat(B.astype(jnp.float32), rep, axis=1)  # (b,h,n)
+    C = jnp.repeat(C.astype(jnp.float32), rep, axis=1)
+    dA = jnp.exp(dt * A)  # (b,h)
+    new_state = state * dA[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhpn", B, x * dt[..., None]
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, C)
+    return y, new_state
+
+
+def _conv_step(conv_state, xbc, w, b):
+    """Depthwise causal conv, single step. conv_state: (B, d_conv-1, D);
+    xbc: (B, D). Returns (out (B,D), new_state)."""
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # (B,d_conv,D)
+    out = jnp.einsum("bkd,kd->bd", window, w) + b
+    return jax.nn.silu(out), window[:, 1:]
+
+
+def mamba_apply(
+    cfg,
+    p,
+    x,
+    *,
+    axes: MeshAxes,
+    mesh=None,
+    cache: Optional[dict] = None,
+    chunk: int = 64,
+):
+    """Mamba2 block. x: (B,S,d). If cache given (decode, S==1): uses
+    recurrent step; cache = {'conv': (B,d_conv-1,convdim), 'ssm': (B,h,p,n)}.
+    Returns (out (B,S,d), new_cache)."""
+    Bb, S, d = x.shape
+    di, N, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_headdim
+    H, G = di // hp, cfg.ssm_ngroups
+    conv_dim = di + 2 * G * N
+
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + conv_dim]
+    dt_raw = zxbcdt[..., di + conv_dim :]  # (B,S,H)
+    A = -jnp.exp(p["A_log"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+
+    if cache is not None and S == 1:
+        xbc_t, new_conv = _conv_step(cache["conv"], xbc[:, 0], p["conv_w"], p["conv_b"])
+        xs = xbc_t[:, :di].reshape(Bb, H, hp)
+        Bmat = xbc_t[:, di : di + G * N].reshape(Bb, G, N)
+        Cmat = xbc_t[:, di + G * N :].reshape(Bb, G, N)
+        y, new_ssm = ssd_decode_step(cache["ssm"], xs, dt[:, 0], A, Bmat, Cmat)
+        y = y + p["D"][:, None] * xs.astype(jnp.float32)
+        y = y.reshape(Bb, 1, di)
+        new_cache = {"conv": new_conv, "ssm": new_ssm}
+    else:
+        # causal depthwise conv over sequence
+        pad = jnp.zeros((Bb, cfg.d_conv - 1, conv_dim), xbc.dtype)
+        xpad = jnp.concatenate([pad, xbc], axis=1)
+        idx = jnp.arange(S)[:, None] + jnp.arange(cfg.d_conv)[None]
+        windows = xpad[:, idx]  # (B,S,d_conv,convdim)
+        xbc_c = jax.nn.silu(jnp.einsum("bskd,kd->bsd", windows, p["conv_w"]) + p["conv_b"])
+        xs = xbc_c[..., :di].reshape(Bb, S, H, hp)
+        Bmat = xbc_c[..., di : di + G * N].reshape(Bb, S, G, N)
+        Cmat = xbc_c[..., di + G * N :].reshape(Bb, S, G, N)
+        ck = chunk if S % chunk == 0 else S
+        y, final = ssd_ref(xs, dt, A, Bmat, Cmat, chunk=ck)
+        y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(Bb, S, di)
+        new_cache = None
+        if cache is not None:  # prefill: fill caches for subsequent decode
+            new_cache = {
+                "conv": xpad[:, S : S + cfg.d_conv - 1] if cfg.d_conv > 1 else xpad[:, :0],
+                "ssm": final,
+            }
+            # conv state = last (d_conv-1) inputs
+            new_cache["conv"] = xpad[:, -(cfg.d_conv - 1) :]
+
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y = rms_norm(y, p["norm_w"])
+    return y @ p["out_proj"], new_cache
+
+
+def mamba_cache_schema(cfg, batch: int, L=None) -> dict:
+    di, N, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_headdim
+    H, G = di // hp, cfg.ssm_ngroups
+    conv_dim = di + 2 * G * N
+    dt = jnp.dtype(cfg.dtype)
+    pre = () if L is None else (L,)
+    pfx = (None,) * len(pre)
+    return {
+        "conv": ParamInfo(pre + (batch, cfg.d_conv - 1, conv_dim), dt, P(*pfx, "data", None, "model"), "zeros"),
+        "ssm": ParamInfo(pre + (batch, H, hp, N), jnp.float32, P(*pfx, "data", "model", None, None), "zeros"),
+    }

@@ -1,0 +1,156 @@
+"""ResNet — the paper's CV family (BranchyNet comparison base).
+
+Residual blocks are the cut vertices; ramps = global-avg-pool + FC (the
+paper's default CV ramp, §3.1). GroupNorm replaces BatchNorm (no running
+stats — keeps training purely functional; noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParamInfo, init_from_schema, specs_from_schema
+
+
+def _conv_info(cin, cout, k):
+    scale = 1.0 / math.sqrt(cin * k * k)
+    return ParamInfo((k, k, cin, cout), jnp.float32, P(), f"normal:{scale}")
+
+
+def _gn_info(c):
+    return {
+        "w": ParamInfo((c,), jnp.float32, P(), "ones"),
+        "b": ParamInfo((c,), jnp.float32, P(), "zeros"),
+    }
+
+
+def conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def group_norm(x, p, groups=8):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    while C % g:
+        g -= 1
+    xg = x.reshape(B, H, W, g, C // g)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xn = ((xg - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(B, H, W, C)
+    return xn * p["w"] + p["b"]
+
+
+class ResNet:
+    """cfg.resnet_blocks: blocks per stage; widths per stage; stride 2 between
+    stages. n_layers == total residual blocks == ramp-feasible sites."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.block_widths: List[int] = []
+        for stage, (n, w) in enumerate(zip(cfg.resnet_blocks, cfg.resnet_widths)):
+            for b in range(n):
+                self.block_widths.append(w * (4 if cfg.resnet_bottleneck else 1))
+        self.sites = tuple(range(len(self.block_widths) - 1))
+
+    def schema(self) -> dict:
+        cfg = self.cfg
+        w0 = cfg.resnet_widths[0]
+        sch = {
+            "stem": {"conv": _conv_info(3, w0, 3), "gn": _gn_info(w0)},
+            "blocks": [],
+        }
+        cin = w0
+        for stage, (n, w) in enumerate(zip(cfg.resnet_blocks, cfg.resnet_widths)):
+            wout = w * (4 if cfg.resnet_bottleneck else 1)
+            for b in range(n):
+                blk = {}
+                if cfg.resnet_bottleneck:
+                    blk["c1"] = _conv_info(cin, w, 1)
+                    blk["g1"] = _gn_info(w)
+                    blk["c2"] = _conv_info(w, w, 3)
+                    blk["g2"] = _gn_info(w)
+                    blk["c3"] = _conv_info(w, wout, 1)
+                    blk["g3"] = _gn_info(wout)
+                else:
+                    blk["c1"] = _conv_info(cin, w, 3)
+                    blk["g1"] = _gn_info(w)
+                    blk["c2"] = _conv_info(w, wout, 3)
+                    blk["g2"] = _gn_info(wout)
+                if cin != wout or (b == 0 and stage > 0):
+                    blk["proj"] = _conv_info(cin, wout, 1)
+                sch["blocks"].append(blk)
+                cin = wout
+        sch["fc"] = ParamInfo((cin, cfg.n_classes), jnp.float32, P(), "normal:0.02")
+        sch["ramps"] = {
+            "head": [
+                ParamInfo((bw, cfg.n_classes), jnp.float32, P(), "normal:0.02")
+                for bw in self.block_widths[:-1]
+            ]
+        }
+        return sch
+
+    def init(self, key):
+        return init_from_schema(self.schema(), key)
+
+    def pspecs(self, axes=None):
+        return specs_from_schema(self.schema())
+
+    def forward(self, params, images, *, active_sites=None, axes=None, mesh=None):
+        """images: (B,H,W,3) f32. Returns {'final': stats, 'ramps': stats}."""
+        cfg = self.cfg
+        x = jax.nn.relu(group_norm(conv(images, params["stem"]["conv"]), params["stem"]["gn"]))
+        pooled: List = []
+        i = 0
+        for stage, (n, w) in enumerate(zip(cfg.resnet_blocks, cfg.resnet_widths)):
+            for b in range(n):
+                blk = params["blocks"][i]
+                stride = 2 if (b == 0 and stage > 0) else 1
+                if cfg.resnet_bottleneck:
+                    h = jax.nn.relu(group_norm(conv(x, blk["c1"]), blk["g1"]))
+                    h = jax.nn.relu(group_norm(conv(h, blk["c2"], stride), blk["g2"]))
+                    h = group_norm(conv(h, blk["c3"]), blk["g3"])
+                else:
+                    h = jax.nn.relu(group_norm(conv(x, blk["c1"], stride), blk["g1"]))
+                    h = group_norm(conv(h, blk["c2"]), blk["g2"])
+                sc = x
+                if "proj" in blk:
+                    sc = conv(x, blk["proj"], stride)
+                elif stride != 1:
+                    sc = conv(x, jnp.eye(x.shape[-1])[None, None], stride)
+                x = jax.nn.relu(h + sc)
+                pooled.append(jnp.mean(x, axis=(1, 2)))  # GAP (paper's CV pooling)
+                i += 1
+        from repro.models.transformer import _stats
+
+        feats = pooled[-1]
+        logits = (feats.astype(jnp.float32) @ params["fc"]).astype(jnp.float32)
+        outs = {"final": _stats(logits), "final_logits": logits}
+        if active_sites is not None:
+            rls = []
+            for s in active_sites:
+                s = int(s)
+                rls.append(pooled[s].astype(jnp.float32) @ params["ramps"]["head"][s])
+            rl = jnp.stack(rls) if rls else jnp.zeros((0, images.shape[0], cfg.n_classes))
+            outs["ramps"] = _stats(rl)
+            outs["ramp_logits"] = rl
+        return outs
+
+    def loss(self, params, batch, **kw):
+        images, labels = batch["images"], batch["labels"]
+        outs = self.forward(params, images, active_sites=list(self.sites))
+        lf = outs["final_logits"]
+        ce = -jnp.mean(jnp.take_along_axis(jax.nn.log_softmax(lf), labels[:, None], 1))
+        rl = outs["ramp_logits"]
+        # stop-grad on features is implicit: ramp heads see `pooled` values
+        # which also receive backbone grads; freeze via optimizer masking in
+        # ramp-only training (training/ramp_training.py)
+        rce = -jnp.mean(
+            jnp.take_along_axis(jax.nn.log_softmax(rl, -1), labels[None, :, None], 2)
+        )
+        return ce + rce, {"cls_loss": ce, "ramp_loss": rce}

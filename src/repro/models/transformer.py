@@ -1,0 +1,692 @@
+"""Decoder-only LM covering all assigned transformer/SSM/hybrid archs.
+
+The layer stack is described by a *plan*: an optional unrolled prefix, a
+scanned period of heterogeneous slots, and an unrolled suffix. Parameters
+for scanned slots carry a leading ``n_periods`` dim; everything inside one
+period is unrolled in the scan body. This keeps HLO small (compile time ~
+period size, not n_layers) while supporting interleave patterns
+(gemma3 5:1 local:global, jamba 1 attn : 7 mamba, llama-vision cross-attn
+every 5th layer, deepseek-v2 leading dense layer).
+
+Early-exit ramps (the paper's technique) attach at block boundaries (cut
+vertices): pooled hidden -> per-ramp RMSNorm -> per-ramp LM-head. All ramp
+weights exist at every feasible site; serving gathers a dynamic
+``active_sites`` subset so the active-ramp set changes with **zero
+recompiles** (beyond-paper, TPU-native — see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as LY
+from repro.models import mamba as MB
+from repro.models import moe as MOE
+from repro.models.common import (
+    ParamInfo,
+    abstract_from_schema,
+    init_from_schema,
+    is_info,
+    specs_from_schema,
+)
+from repro.models.layers import MeshAxes
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotSpec:
+    mixer: str = "attn"  # 'attn' | 'mla' | 'mamba'
+    ffn: str = "dense"  # 'dense' | 'moe' | 'none'
+    is_local: bool = False
+    cross: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    prefix: Tuple[SlotSpec, ...]
+    period: Tuple[SlotSpec, ...]
+    n_periods: int
+    suffix: Tuple[SlotSpec, ...]
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.prefix) + self.n_periods * len(self.period) + len(self.suffix)
+
+    def layer_specs(self) -> List[SlotSpec]:
+        return (
+            list(self.prefix)
+            + [s for _ in range(self.n_periods) for s in self.period]
+            + list(self.suffix)
+        )
+
+
+def build_plan(cfg) -> Plan:
+    L = cfg.n_layers
+    if cfg.ssm and not cfg.hybrid_period:  # mamba2
+        return Plan((), (SlotSpec("mamba", "none"),), L, ())
+    if cfg.hybrid_period:  # jamba
+        p = cfg.hybrid_period
+        period = tuple(
+            SlotSpec(
+                mixer=("attn" if i == p // 2 else "mamba"),
+                ffn=("moe" if (cfg.moe and i % cfg.moe_every == 1) else "dense"),
+            )
+            for i in range(p)
+        )
+        assert L % p == 0, (L, p)
+        return Plan((), period, L // p, ())
+    if cfg.local_global_pattern:  # gemma3
+        pat = cfg.local_global_pattern
+        period = tuple(SlotSpec("attn", "dense", is_local=(i < pat)) for i in range(pat + 1))
+        n = L // (pat + 1)
+        rem = L - n * (pat + 1)
+        suffix = tuple(SlotSpec("attn", "dense", is_local=True) for _ in range(rem))
+        return Plan((), period, n, suffix)
+    if cfg.cross_attn_every:  # llama-vision
+        k = cfg.cross_attn_every
+        period = tuple(
+            SlotSpec("attn", "dense", cross=(i == k - 1)) for i in range(k)
+        )
+        assert L % k == 0, (L, k)
+        return Plan((), period, L // k, ())
+    mixer = "mla" if cfg.mla else "attn"
+    ffn = "moe" if cfg.moe else "dense"
+    prefix = tuple(SlotSpec(mixer, "dense") for _ in range(cfg.first_k_dense))
+    return Plan(prefix, (SlotSpec(mixer, ffn),), L - cfg.first_k_dense, ())
+
+
+# ---------------------------------------------------------------------------
+# schema assembly
+
+
+def _slot_schema(cfg, slot: SlotSpec, L=None) -> dict:
+    sch: Dict[str, Any] = {"ln1": LY.norm_schema(cfg, L)}
+    if slot.mixer == "attn":
+        sch["mixer"] = LY.gqa_schema(cfg, L)
+    elif slot.mixer == "mla":
+        sch["mixer"] = LY.mla_schema(cfg, L)
+    elif slot.mixer == "mamba":
+        sch["mixer"] = MB.mamba_schema(cfg, L)
+    if slot.cross:
+        sch["lnx"] = LY.norm_schema(cfg, L)
+        sch["xattn"] = LY.cross_attn_schema(cfg, L)
+    if slot.ffn != "none":
+        sch["ln2"] = LY.norm_schema(cfg, L)
+        sch["ffn"] = MOE.moe_schema(cfg, L) if slot.ffn == "moe" else LY.ffn_schema(cfg, cfg.d_ff, L)
+    return sch
+
+
+def ramp_sites(cfg, max_sites: int = 12) -> Tuple[int, ...]:
+    """Feasible ramp sites = block boundaries (cut vertices); thinned to at
+    most `max_sites`, never including the final layer (that's the model)."""
+    L = cfg.n_layers
+    n = min(L - 1, max_sites)
+    if n <= 0:
+        return ()
+    stride = (L - 1) / n
+    sites = sorted({int(math.floor((i + 1) * stride)) - 1 for i in range(n)})
+    return tuple(s for s in sites if 0 <= s < L - 1) or (0,)
+
+
+def ramp_schema(cfg) -> dict:
+    S = len(ramp_sites(cfg))
+    d, Vp = cfg.d_model, cfg.padded_vocab
+    dt = jnp.dtype(cfg.dtype)
+    sch = {"norm_w": ParamInfo((S, d), jnp.float32, P(), "zeros")}
+    if cfg.ramp_style != "tied":  # 'tied' shares the model's own LM head
+        sch["head"] = ParamInfo((S, d, Vp), dt, P(None, "data", "model"), "normal:0.02")
+    if cfg.ramp_style == "mlp":  # heavier ramps (paper Fig 9 comparison)
+        sch["w1"] = ParamInfo((S, d, cfg.ramp_hidden), dt, P(None, "data", None), "normal:0.02")
+        sch["w2"] = ParamInfo((S, cfg.ramp_hidden, d), dt, P(None, None, "data"), "normal:0.02")
+    return sch
+
+
+class LM:
+    """Functional model wrapper (see DESIGN.md §3)."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.plan = build_plan(cfg)
+        self.sites = ramp_sites(cfg)
+
+    # -- schema / init ------------------------------------------------------
+
+    def schema(self) -> dict:
+        cfg, plan = self.cfg, self.plan
+        sch: Dict[str, Any] = {"tok": LY.embed_schema(cfg)}
+        if plan.prefix:
+            sch["prefix"] = [_slot_schema(cfg, s) for s in plan.prefix]
+        sch["blocks"] = [_slot_schema(cfg, s, L=plan.n_periods) for s in plan.period]
+        if plan.suffix:
+            sch["suffix"] = [_slot_schema(cfg, s) for s in plan.suffix]
+        sch["final_norm"] = LY.norm_schema(cfg)
+        sch["ramps"] = ramp_schema(cfg)
+        if cfg.cross_attn_every:
+            sch["frontend"] = {
+                "proj": ParamInfo(
+                    (cfg.d_frontend, cfg.d_model), jnp.dtype(cfg.dtype), P(None, "model"), "normal:0.02"
+                )
+            }
+        return sch
+
+    def init(self, key) -> dict:
+        return init_from_schema(self.schema(), key)
+
+    def pspecs(self, axes: MeshAxes) -> dict:
+        return specs_from_schema(LY.resolve_schema(self.schema(), axes))
+
+    def abstract(self) -> dict:
+        return abstract_from_schema(self.schema())
+
+    # -- cache --------------------------------------------------------------
+
+    def _slot_cache_schema(self, cfg, slot: SlotSpec, B, S, shard_batch, L=None):
+        dt = jnp.dtype(cfg.dtype)
+        pre = () if L is None else (L,)
+        pfx = (None,) * len(pre)
+        bspec, sspec = ("data", None) if shard_batch else (None, "data")
+        if cfg.kv_seq_shard:
+            # flash-decode layout: seq sharded over `model` (softmax partials
+            # psum small stats instead of all-reducing full score tensors)
+            sspec = ("data", "model") if not shard_batch else "model"
+        if slot.mixer == "attn":
+            K, hd = cfg.n_kv_heads, cfg.hd
+            hspec = ("model" if hd % 16 == 0 else None) if not cfg.kv_seq_shard else None
+            Sl = S
+            if cfg.windowed_cache and slot.is_local and cfg.window:
+                Sl = min(cfg.window, S)
+            c = {
+                "k": ParamInfo(pre + (B, Sl, K, hd), dt, P(*pfx, bspec, sspec, None, hspec), "zeros"),
+                "v": ParamInfo(pre + (B, Sl, K, hd), dt, P(*pfx, bspec, sspec, None, hspec), "zeros"),
+            }
+        elif slot.mixer == "mla":
+            r, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+            c = {
+                "c": ParamInfo(pre + (B, S, r), dt, P(*pfx, bspec, sspec, None), "zeros"),
+                "k_pe": ParamInfo(pre + (B, S, dr), dt, P(*pfx, bspec, sspec, None), "zeros"),
+            }
+        elif slot.mixer == "mamba":
+            c = MB.mamba_cache_schema(cfg, B, L=None)
+            # add period dim manually
+            if L is not None:
+                c = jax.tree.map(
+                    lambda i: ParamInfo((L,) + i.shape, i.dtype, P(None, *i.spec), i.init),
+                    c,
+                    is_leaf=is_info,
+                )
+        else:
+            c = {}
+        if slot.cross:
+            K, hd = cfg.n_kv_heads, cfg.hd
+            M = cfg.n_image_tokens
+            hspec = "model" if hd % 16 == 0 else None
+            c["xkv"] = {
+                "k": ParamInfo(pre + (B, M, K, hd), dt, P(*pfx, bspec, None, None, hspec), "zeros"),
+                "v": ParamInfo(pre + (B, M, K, hd), dt, P(*pfx, bspec, None, None, hspec), "zeros"),
+            }
+        return c
+
+    def cache_schema(self, B: int, S: int, shard_batch: bool = True) -> dict:
+        cfg, plan = self.cfg, self.plan
+        sch: Dict[str, Any] = {}
+        if plan.prefix:
+            sch["prefix"] = [
+                self._slot_cache_schema(cfg, s, B, S, shard_batch) for s in plan.prefix
+            ]
+        sch["blocks"] = [
+            self._slot_cache_schema(cfg, s, B, S, shard_batch, L=plan.n_periods)
+            for s in plan.period
+        ]
+        if plan.suffix:
+            sch["suffix"] = [
+                self._slot_cache_schema(cfg, s, B, S, shard_batch) for s in plan.suffix
+            ]
+        return sch
+
+    def init_cache(self, B: int, S: int) -> dict:
+        return jax.tree.map(
+            lambda i: jnp.zeros(i.shape, i.dtype), self.cache_schema(B, S), is_leaf=is_info
+        )
+
+    def cache_pspecs(self, B, S, axes: MeshAxes, shard_batch=True) -> dict:
+        return specs_from_schema(
+            LY.resolve_schema(self.cache_schema(B, S, shard_batch), axes)
+        )
+
+    # -- forward ------------------------------------------------------------
+
+    def _block(
+        self,
+        slot: SlotSpec,
+        p,
+        h,
+        *,
+        positions,
+        mask_full,
+        mask_local,
+        axes,
+        mesh,
+        cache,
+        cache_index,
+        memory,
+        moe_impl,
+        rope_theta_local=10_000.0,
+    ):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        x = LY.apply_norm(cfg, p["ln1"], h)
+        new_cache = dict(cache) if cache is not None else None
+        if slot.mixer == "attn":
+            mask = mask_local if slot.is_local else mask_full
+            theta = rope_theta_local if slot.is_local else cfg.rope_theta
+            sub = {k: cache[k] for k in ("k", "v")} if cache is not None else None
+            ring = cfg.window if (cfg.windowed_cache and slot.is_local and cfg.window) else None
+            ci = cache_index
+            if ring is not None and ci is not None:
+                ci = cache_index % ring  # ring slot at decode
+            out, nc = LY.attn_apply(
+                cfg, p["mixer"], x, positions=positions, mask=mask, axes=axes,
+                mesh=mesh, cache=sub, cache_index=ci, rope_theta=theta,
+                ring_window=ring,
+            )
+            if nc is not None:
+                new_cache.update(nc)
+        elif slot.mixer == "mla":
+            sub = {k: cache[k] for k in ("c", "k_pe")} if cache is not None else None
+            out, nc = LY.mla_apply(
+                cfg, p["mixer"], x, positions=positions, mask=mask_full, axes=axes,
+                mesh=mesh, cache=sub, cache_index=cache_index,
+                absorbed=getattr(cfg, "mla_absorbed", False),
+            )
+            if nc is not None:
+                new_cache.update(nc)
+        elif slot.mixer == "mamba":
+            sub = (
+                {k: cache[k] for k in ("conv", "ssm")} if cache is not None else None
+            )
+            out, nc = MB.mamba_apply(cfg, p["mixer"], x, axes=axes, mesh=mesh, cache=sub)
+            if nc is not None:
+                new_cache.update(nc)
+        h = h + out
+        if slot.cross:
+            xx = LY.apply_norm(cfg, p["lnx"], h)
+            kvc = cache.get("xkv") if cache is not None else None
+            out, kv = LY.cross_attn_apply(
+                cfg, p["xattn"], xx, memory=memory, kv_cache=kvc, axes=axes, mesh=mesh
+            )
+            if new_cache is not None:
+                new_cache["xkv"] = kv
+            h = h + out
+        if slot.ffn != "none":
+            x = LY.apply_norm(cfg, p["ln2"], h)
+            if slot.ffn == "moe":
+                out, a = MOE.moe_apply(cfg, p["ffn"], x, axes, mesh, impl=moe_impl)
+                aux = aux + a
+            else:
+                out = LY.ffn_apply(cfg, p["ffn"], x, axes, mesh)
+            h = h + out
+        return h, new_cache, aux
+
+    def _stack(
+        self,
+        params,
+        h,
+        *,
+        positions,
+        mask_full,
+        mask_local,
+        axes,
+        mesh,
+        caches,
+        cache_index,
+        memory,
+        moe_impl,
+        pool_idx,
+        remat=False,
+    ):
+        """Run prefix + scanned periods + suffix. Returns
+        (h, pooled (L,B,npos,d), new_caches, aux)."""
+        cfg, plan = self.cfg, self.plan
+        pooled_all: List = []
+        aux_total = jnp.zeros((), jnp.float32)
+
+        def pool(hh):
+            return jnp.take(hh, pool_idx, axis=1)  # (B, npos, d)
+
+        kw = dict(
+            positions=positions, mask_full=mask_full, mask_local=mask_local,
+            axes=axes, mesh=mesh, cache_index=cache_index, memory=memory,
+            moe_impl=moe_impl,
+        )
+        new_caches: Dict[str, Any] = {}
+        if plan.prefix:
+            new_caches["prefix"] = []
+            for i, slot in enumerate(plan.prefix):
+                c = caches["prefix"][i] if caches else None
+                h, nc, a = self._block(slot, params["prefix"][i], h, cache=c, **kw)
+                new_caches["prefix"].append(nc)
+                aux_total = aux_total + a
+                pooled_all.append(pool(h))
+
+        def body(carry, xs):
+            hh, auxc = carry
+            pblocks, cblocks = xs
+            pooled_s, cout = [], []
+            for s, slot in enumerate(plan.period):
+                c = cblocks[s] if cblocks is not None else None
+                hh, nc, a = self._block(slot, pblocks[s], hh, cache=c, **kw)
+                auxc = auxc + a
+                pooled_s.append(pool(hh))
+                cout.append(nc if nc is not None else 0)
+            return (hh, auxc), (jnp.stack(pooled_s), cout)
+
+        if remat:
+            policy = (
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                if cfg.remat_policy == "dots"
+                else None  # save nothing: recompute everything
+            )
+            body = jax.checkpoint(body, policy=policy)
+        cblocks = caches["blocks"] if caches else None
+        (h, aux_total), (pooled_scan, cache_scan) = jax.lax.scan(
+            body, (h, aux_total), (params["blocks"], cblocks),
+            unroll=True if cfg.scan_unroll else 1,
+        )
+        # pooled_scan: (n_periods, n_slots, B, npos, d) -> flatten layer-major
+        ps = pooled_scan.reshape((-1,) + pooled_scan.shape[2:])
+        new_caches["blocks"] = cache_scan if caches else None
+
+        if plan.suffix:
+            new_caches["suffix"] = []
+            for i, slot in enumerate(plan.suffix):
+                c = caches["suffix"][i] if caches else None
+                h, nc, a = self._block(slot, params["suffix"][i], h, cache=c, **kw)
+                new_caches["suffix"].append(nc)
+                aux_total = aux_total + a
+                pooled_all.append(pool(h))
+
+        # assemble pooled (L, B, npos, d): prefix ++ scan ++ suffix
+        n_pre = len(plan.prefix)
+        parts = []
+        if n_pre:
+            parts.append(jnp.stack(pooled_all[:n_pre]))
+        parts.append(ps)
+        if plan.suffix:
+            parts.append(jnp.stack(pooled_all[n_pre:]))
+        pooled = jnp.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+        return h, pooled, (new_caches if caches else None), aux_total
+
+    # -- ramp heads ----------------------------------------------------------
+
+    def ramp_outputs(self, params, pooled, site_idx=None, stop_grad=True,
+                     axes=None, mesh=None):
+        """pooled: (L,B,npos,d). site_idx: int32[K] (dynamic) or None=all
+        sites. Returns ramp logits (K,B,npos,Vp) in f32, vocab-sharded."""
+        cfg = self.cfg
+        sites = jnp.asarray(self.sites, jnp.int32)
+        if site_idx is None:
+            site_idx = jnp.arange(len(self.sites), dtype=jnp.int32)
+        layer_idx = sites[site_idx]
+        hs = jnp.take(pooled, layer_idx, axis=0)  # (K,B,npos,d)
+        if stop_grad:
+            hs = jax.lax.stop_gradient(hs)
+        nw = jnp.take(params["ramps"]["norm_w"], site_idx, axis=0)  # (K,d)
+        hs = LY.rms_norm(hs, nw[:, None, None, :])
+        if cfg.ramp_style == "mlp":
+            w1 = jnp.take(params["ramps"]["w1"], site_idx, axis=0)
+            w2 = jnp.take(params["ramps"]["w2"], site_idx, axis=0)
+            hs = hs + jnp.einsum(
+                "kbnh,khd->kbnd", jax.nn.gelu(jnp.einsum("kbnd,kdh->kbnh", hs, w1)), w2
+            )
+        if cfg.ramp_style == "tied":
+            hw = params["tok"]["embed"].T if cfg.tie_embeddings else params["tok"]["lm_head"]
+            out = jnp.einsum("kbnd,dv->kbnv", hs, hw).astype(jnp.float32)
+        else:
+            hw = jnp.take(params["ramps"]["head"], site_idx, axis=0)  # (K,d,Vp)
+            out = jnp.einsum("kbnd,kdv->kbnv", hs, hw).astype(jnp.float32)
+        if axes is not None:
+            # keep vocab sharded over `model` (a d-contraction against an
+            # FSDP-sharded head otherwise all-reduces full f32 logits)
+            out = LY.constrain(out, axes.aspec(None, "data", None, "model"), mesh)
+        return out
+
+    # -- public entry points --------------------------------------------------
+
+    def loss(self, params, batch, *, axes=LY.TEST_AXES, mesh=None, moe_impl="ep",
+             remat=False, ramp_positions=16, train_mode="full"):
+        """batch: {'tokens': (B,S) int32, 'labels': (B,S) int32 (-1 = pad)}.
+        Returns (loss, metrics). Ramp losses always use stop-grad features
+        (paper: backbone frozen w.r.t. ramps; ramps trained on all inputs)."""
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S = tokens.shape
+        positions = jnp.arange(S)[None, :]
+        h = LY.embed_apply(cfg, params["tok"], tokens, positions)
+        h = LY.constrain(h, axes.aspec("data", None, None), mesh)
+        mask_full = LY.causal_mask(S, S, 0)
+        mask_local = LY.window_mask(S, S, 0, cfg.window) if cfg.window else mask_full
+        npos = min(ramp_positions, S)
+        pool_idx = jnp.linspace(S // npos - 1, S - 1, npos).astype(jnp.int32)
+        memory = None
+        if cfg.cross_attn_every:
+            memory = batch["image_embeds"] @ params["frontend"]["proj"]
+        h, pooled, _, aux = self._stack(
+            params, h, positions=positions, mask_full=mask_full,
+            mask_local=mask_local, axes=axes, mesh=mesh, caches=None,
+            cache_index=None, memory=memory, moe_impl=moe_impl,
+            pool_idx=pool_idx, remat=remat,
+        )
+        h = LY.apply_norm(cfg, params["final_norm"], h)
+        logits = LY.unembed(cfg, params["tok"], h)
+        logits = LY.constrain(logits, axes.aspec("data", None, "model"), mesh)
+        lm = _masked_ce(cfg, logits, labels)
+        if len(self.sites):
+            ramp_logits = self.ramp_outputs(params, pooled, axes=axes, mesh=mesh)
+            R = ramp_logits.shape[0]
+            ramp_labels = jnp.take(labels, pool_idx, axis=1)  # (B,npos)
+            rloss = _masked_ce(
+                cfg,
+                ramp_logits.reshape(R * B, npos, -1),
+                jnp.tile(ramp_labels, (R, 1)),
+            )
+        else:  # reduced-depth metric lowerings can have zero ramp sites
+            rloss = jnp.zeros((), jnp.float32)
+        if train_mode == "ramps_only":
+            loss = rloss + 0.0 * lm
+        else:
+            loss = lm + rloss + 0.01 * aux
+        return loss, {"lm_loss": lm, "ramp_loss": rloss, "moe_aux": aux}
+
+    def prefill(self, params, tokens, *, cache_len=None, active_sites=None,
+                axes=LY.TEST_AXES, mesh=None, moe_impl="ep", image_embeds=None,
+                shard_batch=True, with_cache=True):
+        """tokens: (B,S). Returns (cache|None, outs) where outs carries final
+        + per-active-ramp stats for the LAST position (the generated token)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        cache_len = cache_len or S
+        positions = jnp.arange(S)[None, :]
+        h = LY.embed_apply(cfg, params["tok"], tokens, positions)
+        h = LY.constrain(h, axes.aspec("data", None, None), mesh)
+        mask_full = LY.causal_mask(S, cache_len, 0) if with_cache else LY.causal_mask(S, S, 0)
+        if cfg.window:
+            # with windowed (ring) caches, local prefill attention runs
+            # against the in-flight (S-long) k/v, not the padded cache
+            kl = S if (cfg.windowed_cache or not with_cache) else cache_len
+            mask_local = LY.window_mask(S, kl, 0, cfg.window)
+        else:
+            mask_local = mask_full
+        pool_idx = jnp.asarray([S - 1], jnp.int32)
+        memory = None
+        if cfg.cross_attn_every and image_embeds is not None:
+            memory = image_embeds @ params["frontend"]["proj"]
+        caches = self.init_cache(B, cache_len) if with_cache else None
+        h, pooled, caches, _ = self._stack(
+            params, h, positions=positions, mask_full=mask_full,
+            mask_local=mask_local, axes=axes, mesh=mesh, caches=caches,
+            cache_index=0, memory=memory, moe_impl=moe_impl, pool_idx=pool_idx,
+        )
+        outs = self._head_stats(params, h[:, -1:], pooled, active_sites,
+                                axes=axes, mesh=mesh)
+        return caches, outs
+
+    def decode(self, params, cache, tokens, pos, *, active_sites=None,
+               axes=LY.TEST_AXES, mesh=None, moe_impl="ep"):
+        """One decode step. tokens: (B,1); pos: int32 scalar (write index).
+        Returns (new_cache, outs)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        assert S == 1
+        positions = jnp.full((1, 1), 0, jnp.int32) + pos
+        h = LY.embed_apply(cfg, params["tok"], tokens, positions)
+        # cache length from any attn cache leaf (mamba-only models have none)
+        try:
+            Sc = _cache_len(cache)
+            kpos = jnp.arange(Sc)[None, :]
+            mask_full = (kpos <= pos)[None, None]
+            if cfg.windowed_cache and cfg.window:
+                # ring semantics: slot j holds token pos − ((pos − j) mod W)
+                j = jnp.arange(cfg.window)
+                mask_local = (((pos - j) % cfg.window) <= pos)[None, None, None, :]
+            elif cfg.window:
+                mask_local = ((kpos <= pos) & (kpos > pos - cfg.window))[None, None]
+            else:
+                mask_local = mask_full
+        except ValueError:
+            mask_full = mask_local = None
+        pool_idx = jnp.asarray([0], jnp.int32)
+        h, pooled, new_cache, _ = self._stack(
+            params, h, positions=positions, mask_full=mask_full,
+            mask_local=mask_local, axes=axes, mesh=mesh, caches=cache,
+            cache_index=pos, memory=None, moe_impl=moe_impl, pool_idx=pool_idx,
+        )
+        outs = self._head_stats(params, h, pooled, active_sites,
+                                axes=axes, mesh=mesh)
+        return new_cache, outs
+
+    def _head_stats(self, params, h_last, pooled, active_sites,
+                    axes=None, mesh=None):
+        """Final + ramp confidence stats for serving. h_last: (B,1,d).
+
+        With cfg.pallas_head != 'off', stats stream through the fused
+        ramp_head kernel — (B,V) logits are never materialized in HBM."""
+        cfg = self.cfg
+        h = LY.apply_norm(cfg, params["final_norm"], h_last)
+        if cfg.pallas_head != "off":
+            return self._head_stats_pallas(params, h, pooled, active_sites)
+        logits = LY.unembed(cfg, params["tok"], h)[:, 0].astype(jnp.float32)
+        if axes is not None:
+            logits = LY.constrain(logits, axes.aspec("data", "model"), mesh)
+        logits = _mask_pad_vocab(cfg, logits)
+        outs = {"final": _stats(logits)}
+        if active_sites is not None:
+            rl = self.ramp_outputs(params, pooled, site_idx=active_sites,
+                                   axes=axes, mesh=mesh)
+            rl = _mask_pad_vocab(cfg, rl[:, :, 0])  # (K,B,V)
+            outs["ramps"] = _stats(rl)
+        return outs
+
+    def _head_stats_pallas(self, params, h_normed, pooled, active_sites):
+        from repro.kernels.ramp_head import ramp_head_stats, stats_to_confidence
+
+        cfg = self.cfg
+        interp = cfg.pallas_head == "interpret"
+        wf = params["tok"]["embed"].T if cfg.tie_embeddings else params["tok"]["lm_head"]
+
+        def stats_of(hb, w):
+            m, s, t, idx = ramp_head_stats(
+                hb, w, interpret=interp, v_limit=cfg.vocab_size,
+                block_b=min(8, hb.shape[0]), block_v=min(1024, w.shape[1]),
+            )
+            label, maxprob, entropy, _ = stats_to_confidence(m, s, t, idx)
+            return {"label": label, "maxprob": maxprob, "entropy": entropy}
+
+        outs = {"final": stats_of(h_normed[:, 0], wf)}
+        if active_sites is not None:
+            site_idx = jnp.asarray(active_sites, jnp.int32)
+            sites = jnp.asarray(self.sites, jnp.int32)
+            hs = jnp.take(pooled, jnp.take(sites, site_idx), axis=0)[:, :, 0]  # (K,B,d)
+            nw = jnp.take(params["ramps"]["norm_w"], site_idx, axis=0)
+            hs = LY.rms_norm(hs, nw[:, None, :])
+            K = hs.shape[0]
+            per = []
+            for kk in range(K):  # K is small & static (ramp budget slots)
+                w = wf if cfg.ramp_style == "tied" else jnp.take(
+                    params["ramps"]["head"], site_idx[kk], axis=0
+                )
+                per.append(stats_of(hs[kk], w))
+            outs["ramps"] = {
+                key: jnp.stack([p[key] for p in per]) for key in per[0]
+            }
+        return outs
+
+
+def _stats(logits):
+    """logits: (..., V) f32 -> {label, maxprob, entropy} (paper's ~1KB
+    per-ramp record: top-1 result + error score)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    label = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    maxprob = jnp.exp(jnp.max(logits, axis=-1) - lse)
+    p = jax.nn.softmax(logits, axis=-1)
+    plogp = jnp.where(p > 0, p * jnp.log(jnp.clip(p, 1e-30)), 0.0)
+    entropy = -jnp.sum(plogp, axis=-1)
+    return {"label": label, "maxprob": maxprob, "entropy": entropy}
+
+
+def _mask_pad_vocab(cfg, logits):
+    """Sharding-friendly pad-vocab mask (no concat/gather: keeps the vocab
+    dim sharded over `model` with zero resharding)."""
+    V = cfg.vocab_size
+    if logits.shape[-1] == V:
+        return logits
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(col < V, logits, -1e30)
+
+
+def _masked_ce(cfg, logits, labels):
+    """Cross-entropy with -1 padding labels and padded-vocab masking.
+    The label log-prob is extracted with an iota/where reduction rather than
+    take_along_axis — a vocab-sharded gather would all-gather full logits
+    (hundreds of GB at train_4k scale); the reduction psums a scalar."""
+    logits = logits.astype(jnp.float32)
+    V, Vp = cfg.vocab_size, logits.shape[-1]
+    if Vp > V:
+        logits = _mask_pad_vocab(cfg, logits)
+    valid = labels >= 0
+    lab = jnp.clip(labels, 0)
+    m = jnp.max(logits, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    ll = jnp.sum(jnp.where(col == lab[..., None], logits, 0.0), axis=-1)
+    nll = (lse - ll) * valid
+    return jnp.sum(nll) / jnp.clip(jnp.sum(valid), 1)
+
+
+def _cache_len(cache) -> int:
+    # attn caches have shape (..., B, S, K, hd); mla (..., B, S, r).
+    # With windowed local caches present, the GLOBAL (longest) length is the
+    # decode mask length -> take the max across leaves.
+    found: List[int] = []
+
+    def _find(c):
+        if isinstance(c, dict):
+            if "k" in c and hasattr(c["k"], "shape"):
+                found.append(c["k"].shape[-3])
+            if "c" in c and hasattr(c["c"], "shape"):
+                found.append(c["c"].shape[-2])
+            for key, v in c.items():
+                if key not in ("k", "v", "c", "k_pe"):
+                    _find(v)
+        elif isinstance(c, (list, tuple)):
+            for v in c:
+                _find(v)
+
+    _find(cache)
+    if not found:
+        raise ValueError("cache has no attention leaves; decode mask undefined")
+    return max(found)

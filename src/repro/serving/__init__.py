@@ -1,0 +1,19 @@
+from repro.serving.arrivals import maf_trace, video_trace
+from repro.serving.metrics import savings_vs, summarize
+from repro.serving.platform import PlatformConfig, ServingSimulator, make_requests
+from repro.serving.request import Request, Response
+from repro.serving.runner import ClassifierRunner, LMTokenRunner
+
+__all__ = [
+    "maf_trace",
+    "video_trace",
+    "savings_vs",
+    "summarize",
+    "PlatformConfig",
+    "ServingSimulator",
+    "make_requests",
+    "Request",
+    "Response",
+    "ClassifierRunner",
+    "LMTokenRunner",
+]

@@ -1,0 +1,52 @@
+"""Serving metrics: latency percentiles, throughput, accuracy-vs-original."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.request import Response
+
+
+def summarize(
+    responses: List[Response],
+    *,
+    vanilla_labels: Optional[np.ndarray] = None,
+    horizon_ms: Optional[float] = None,
+) -> Dict[str, float]:
+    ok = [r for r in responses if not r.dropped]
+    lat = np.asarray([r.latency_ms for r in ok])
+    out = {
+        "n": float(len(responses)),
+        "dropped": float(sum(r.dropped for r in responses)),
+        "p25_ms": float(np.percentile(lat, 25)) if len(lat) else np.nan,
+        "p50_ms": float(np.percentile(lat, 50)) if len(lat) else np.nan,
+        "p95_ms": float(np.percentile(lat, 95)) if len(lat) else np.nan,
+        "p99_ms": float(np.percentile(lat, 99)) if len(lat) else np.nan,
+        "mean_batch": float(np.mean([r.batch_size for r in ok])) if ok else np.nan,
+        "exit_rate": float(np.mean([r.exit_site >= 0 for r in ok])) if ok else 0.0,
+    }
+    if ok:
+        span = (
+            horizon_ms
+            if horizon_ms is not None
+            else max(r.release_ms for r in ok) - min(0.0, min(r.release_ms for r in ok))
+        )
+        out["throughput_qps"] = len(ok) / max(span / 1000.0, 1e-9)
+    if vanilla_labels is not None and ok:
+        # accuracy = agreement with the original model's label (paper metric)
+        agree = [r.label == vanilla_labels[r.rid] for r in ok]
+        out["accuracy"] = float(np.mean(agree))
+    return out
+
+
+def savings_vs(base: Dict[str, float], ours: Dict[str, float]) -> Dict[str, float]:
+    out = {}
+    for k in ("p25_ms", "p50_ms", "p95_ms", "p99_ms"):
+        if np.isfinite(base.get(k, np.nan)) and np.isfinite(ours.get(k, np.nan)):
+            out[k.replace("_ms", "_win_pct")] = 100.0 * (base[k] - ours[k]) / base[k]
+    if base.get("throughput_qps") and ours.get("throughput_qps"):
+        out["throughput_delta_pct"] = (
+            100.0 * (ours["throughput_qps"] - base["throughput_qps"]) / base["throughput_qps"]
+        )
+    return out

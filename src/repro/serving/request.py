@@ -1,0 +1,24 @@
+"""Serving request/response records."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival_ms: float
+    slo_ms: float
+    item: int  # index into the workload stream
+
+
+@dataclasses.dataclass
+class Response:
+    rid: int
+    release_ms: float
+    label: int
+    exit_site: int  # -1 = full model
+    latency_ms: float
+    batch_size: int
+    dropped: bool = False

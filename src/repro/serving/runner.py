@@ -1,0 +1,138 @@
+"""Model runners: execute the real (tiny, CPU-trained) models per batch and
+stream ramp records to the controller.
+
+On hardware this is the accelerator side: a single jitted program computes
+the full model + K gathered ramp heads; only ~KB stat arrays (top-1 label,
+max-prob, entropy per ramp) travel to the host — never logits. Batches are
+padded to power-of-two buckets to bound compilation count.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _bucket(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+class ClassifierRunner:
+    """ResNet / BERT-style classifier serving (the paper's workloads)."""
+
+    def __init__(self, model, params, data: np.ndarray, max_slots: int = 8):
+        self.model = model
+        self.params = params
+        self.data = data  # (N, ...) images or token sequences
+        self.max_slots = max_slots
+        self._fns = {}
+        self.compiles = 0  # ramp-set changes recompile (paper: model re-upload)
+
+    def _fn(self, bs: int, act: tuple):
+        key = (bs, act)
+        if key not in self._fns:
+            m = self.model
+            self.compiles += 1
+
+            @jax.jit
+            def f(params, x):
+                outs = m.forward(params, x, active_sites=list(act))
+                return (
+                    outs["ramps"]["label"],
+                    1.0 - outs["ramps"]["maxprob"],
+                    outs["final"]["label"],
+                )
+
+            self._fns[key] = f
+        return self._fns[key]
+
+    def infer(self, items: np.ndarray, active: Sequence[int]):
+        bs = _bucket(len(items))
+        idx = np.pad(items, (0, bs - len(items)), mode="edge")
+        x = jnp.asarray(self.data[idx])
+        act = tuple(sorted(active))[: self.max_slots]
+        k = len(act)
+        labels, unc, final = self._fn(bs, act if act else (0,))(self.params, x)
+        labels = np.asarray(labels)[:, : len(items)]
+        unc = np.asarray(unc)[:, : len(items)]
+        final = np.asarray(final)[: len(items)]
+        if k == 0:
+            return np.zeros((0, len(items)), np.int64), np.zeros((0, len(items)), np.float32), final
+        return labels[:k], unc[:k].astype(np.float32), final
+
+    def vanilla_labels(self, n: Optional[int] = None) -> np.ndarray:
+        """Original-model labels for the whole stream (accuracy ground truth)."""
+        n = n or len(self.data)
+        out = []
+        for lo in range(0, n, 256):
+            hi = min(lo + 256, n)
+            idx = np.arange(lo, hi)
+            _, _, f = self.infer(idx, [0])
+            out.append(f)
+        return np.concatenate(out)
+
+
+class LMTokenRunner:
+    """Per-token early-exit serving for decoder LMs: each request is a
+    context; the served result is the next token (prefill path)."""
+
+    def __init__(self, model, params, data: np.ndarray, max_slots: int = 8):
+        self.model = model
+        self.params = params
+        self.data = data  # (N, S) int32 contexts
+        self.max_slots = max_slots
+        self._fns = {}
+
+    def _fn(self, bs: int):
+        if bs not in self._fns:
+            m = self.model
+
+            @jax.jit
+            def f(params, toks, active):
+                _, outs = m.prefill(
+                    params, toks, active_sites=active, with_cache=False, moe_impl="dense"
+                )
+                return (
+                    outs["ramps"]["label"][:, :, 0] if outs["ramps"]["label"].ndim == 3 else outs["ramps"]["label"],
+                    1.0 - (outs["ramps"]["maxprob"][:, :, 0] if outs["ramps"]["maxprob"].ndim == 3 else outs["ramps"]["maxprob"]),
+                    outs["final"]["label"][:, 0] if outs["final"]["label"].ndim == 2 else outs["final"]["label"],
+                )
+
+            self._fns[bs] = f
+        return self._fns[bs]
+
+    def infer(self, items: np.ndarray, active: Sequence[int]):
+        bs = _bucket(len(items))
+        idx = np.pad(items, (0, bs - len(items)), mode="edge")
+        toks = jnp.asarray(self.data[idx])
+        act = list(active)[: self.max_slots]
+        if not act:
+            act = [0]
+        pad_act = act + [act[-1]] * (self.max_slots - len(act))
+        labels, unc, final = self._fn(bs)(
+            self.params, toks, jnp.asarray(pad_act, jnp.int32)
+        )
+        k = len(list(active)) if active else 0
+        final = np.asarray(final)[: len(items)]
+        if k == 0:
+            return np.zeros((0, len(items)), np.int64), np.zeros((0, len(items)), np.float32), final
+        return (
+            np.asarray(labels)[:k, : len(items)],
+            np.asarray(unc)[:k, : len(items)].astype(np.float32),
+            final,
+        )
+
+    def vanilla_labels(self, n: Optional[int] = None) -> np.ndarray:
+        n = n or len(self.data)
+        out = []
+        for lo in range(0, n, 128):
+            idx = np.arange(lo, min(lo + 128, n))
+            _, _, f = self.infer(idx, [0])
+            out.append(f)
+        return np.concatenate(out)

@@ -1,0 +1,11 @@
+from repro.training.optim import (
+    AdamWConfig,
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+    global_norm,
+)
+from repro.training.ramp_training import train_ramps
+from repro.training.train_loop import TrainConfig, init_state, make_train_step, ramp_mask, train

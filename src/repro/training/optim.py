@@ -1,0 +1,123 @@
+"""Hand-built optimizers (no optax dependency): AdamW + Adafactor-lite,
+global-norm clipping, cosine/linear schedules, and parameter masking (for
+frozen-backbone ramp training)."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    state_dtype: Any = jnp.float32
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    z = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(z, params),
+        "nu": jax.tree.map(z, params),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig, lr_scale=1.0, mask=None):
+    """mask: pytree of bools (True = trainable). Frozen params keep value."""
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gn + 1e-9)) if cfg.clip_norm else 1.0
+
+    def upd(p, g, mu, nu, m):
+        g = g.astype(jnp.float32) * scale
+        mu2 = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu2 = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu2 / (1 - cfg.b1 ** step.astype(jnp.float32))
+        nhat = nu2 / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - cfg.lr * lr_scale * delta
+        if m is not None:
+            newp = jnp.where(m, newp, p.astype(jnp.float32))
+            mu2 = jnp.where(m, mu2, mu)
+            nu2 = jnp.where(m, nu2, nu)
+        return newp.astype(p.dtype), mu2.astype(mu.dtype), nu2.astype(nu.dtype)
+
+    if mask is None:
+        mask = jax.tree.map(lambda _: None, params)
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"], mask,
+                       is_leaf=lambda x: x is None)
+    newp = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return newp, {"step": step, "mu": mu, "nu": nu}, gn
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        return base_lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * prog)) / base_lr
+
+    return f  # returns lr_scale in [0,1]
+
+
+# --- Adafactor-lite: factored second moments for huge embeddings -----------
+
+
+def adafactor_init(params):
+    def z(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"step": jnp.zeros((), jnp.int32), "v": jax.tree.map(z, params)}
+
+
+def adafactor_update(params, grads, state, lr=1e-2, decay=0.8, eps=1e-30, clip=1.0):
+    step = state["step"] + 1
+    beta = 1.0 - (step.astype(jnp.float32) + 1) ** (-decay)
+
+    def upd(p, g, v):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if p.ndim >= 2:
+            vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, -1, keepdims=True), eps)
+            u = g / jnp.sqrt(
+                vr[..., None] * vc[..., None, :] / denom[..., None] + eps
+            )
+            nv = {"vr": vr, "vc": vc}
+        else:
+            nv = {"v": beta * v["v"] + (1 - beta) * g2}
+            u = g / jnp.sqrt(nv["v"] + eps)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+        u = u / jnp.maximum(1.0, rms / clip)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), nv
+
+    out = jax.tree.map(
+        upd, params, grads, state["v"],
+        is_leaf=lambda x: isinstance(x, dict) and ("vr" in x or "v" in x),
+    )
+    newp = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    nv = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return newp, {"step": step, "v": nv}

@@ -1,0 +1,129 @@
+"""pjit training loop with remat, grad-accum, checkpoint/restart.
+
+`TrainState` is a plain pytree (params + optimizer state + step); the
+update step is a single jitted function whose in/out shardings come from
+the model schema — the same function lowers on the 1-device test mesh and
+the 512-chip production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import TEST_AXES, MeshAxes
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 200
+    lr: float = 3e-4
+    warmup: int = 20
+    weight_decay: float = 0.01
+    grad_accum: int = 1
+    remat: bool = False
+    moe_impl: str = "dense"
+    train_mode: str = "full"  # 'full' | 'ramps_only'
+    log_every: int = 20
+    checkpoint_every: int = 0  # 0 = off
+    seed: int = 0
+
+
+def ramp_mask(params) -> Any:
+    """True only for ramp parameters (frozen-backbone ramp training).
+    The paper freezes original weights so non-EE behavior is unchanged."""
+
+    def walk(tree, under_ramp):
+        if isinstance(tree, dict):
+            return {k: walk(v, under_ramp or k == "ramps") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            t = type(tree)
+            return t(walk(v, under_ramp) for v in tree)
+        return jnp.full(tree.shape, under_ramp, bool) if hasattr(tree, "shape") else under_ramp
+
+    return walk(params, False)
+
+
+def make_train_step(model, tcfg: TrainConfig, axes: MeshAxes = TEST_AXES, mesh=None,
+                    opt_cfg: Optional[AdamWConfig] = None):
+    opt_cfg = opt_cfg or AdamWConfig(lr=tcfg.lr, weight_decay=tcfg.weight_decay)
+    sched = cosine_schedule(tcfg.lr, tcfg.warmup, tcfg.steps)
+
+    def loss_fn(params, batch):
+        return model.loss(
+            params, batch, axes=axes, mesh=mesh, moe_impl=tcfg.moe_impl,
+            remat=tcfg.remat, train_mode=tcfg.train_mode,
+        ) if model.cfg.family == "lm" else model.loss(params, batch, axes=axes, mesh=mesh)
+
+    def step_fn(state, batch):
+        params, opt, step = state["params"], state["opt"], state["step"]
+        if tcfg.grad_accum > 1:
+            def micro(i, acc):
+                g_acc, l_acc = acc
+                mb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // tcfg.grad_accum), x.shape[0] // tcfg.grad_accum, 0
+                    ),
+                    batch,
+                )
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                return jax.tree.map(jnp.add, g_acc, g), l_acc + l
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, loss = jax.lax.fori_loop(0, tcfg.grad_accum, micro, (zeros, 0.0))
+            grads = jax.tree.map(lambda g: g / tcfg.grad_accum, grads)
+            loss = loss / tcfg.grad_accum
+            metrics = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        mask = ramp_mask(params) if tcfg.train_mode == "ramps_only" else None
+        newp, newopt, gn = adamw_update(
+            params, grads, opt, opt_cfg, lr_scale=sched(step), mask=mask
+        )
+        out = {"loss": loss, "grad_norm": gn, **metrics}
+        return {"params": newp, "opt": newopt, "step": step + 1}, out
+
+    return step_fn, opt_cfg
+
+
+def init_state(model, key, opt_cfg: AdamWConfig):
+    params = model.init(key)
+    return {"params": params, "opt": adamw_init(params, opt_cfg), "step": jnp.zeros((), jnp.int32)}
+
+
+def train(
+    model,
+    batches: Callable[[int], Dict[str, np.ndarray]],
+    tcfg: TrainConfig,
+    *,
+    state=None,
+    checkpoint_mgr=None,
+    start_step: int = 0,
+    verbose: bool = True,
+):
+    """Simple driver used by examples/tests; production uses launch/train.py."""
+    step_fn, opt_cfg = make_train_step(model, tcfg)
+    jstep = jax.jit(step_fn)
+    if state is None:
+        state = init_state(model, jax.random.PRNGKey(tcfg.seed), opt_cfg)
+    logs = []
+    t0 = time.perf_counter()
+    for s in range(start_step, tcfg.steps):
+        batch = {k: jnp.asarray(v) for k, v in batches(s).items()}
+        state, out = jstep(state, batch)
+        if s % tcfg.log_every == 0 or s == tcfg.steps - 1:
+            logs.append({k: float(v) for k, v in out.items()})
+            if verbose:
+                print(f"  step {s:5d} loss {logs[-1]['loss']:.4f} gnorm {logs[-1]['grad_norm']:.3f}")
+        if checkpoint_mgr and tcfg.checkpoint_every and (s + 1) % tcfg.checkpoint_every == 0:
+            checkpoint_mgr.save(state, step=s + 1)
+    if verbose:
+        dt = time.perf_counter() - t0
+        print(f"  trained {tcfg.steps - start_step} steps in {dt:.1f}s")
+    return state, logs

@@ -1,0 +1,231 @@
+"""Apparate core: exit evaluation, Algorithm-1 tuner, ramp adjustment,
+controller — including hypothesis property tests on EE invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import (
+    ApparateController,
+    ControllerConfig,
+    build_profile,
+    evaluate_config,
+    exit_rates,
+    grid_search_thresholds,
+    ramp_utilities,
+    simulate_exits,
+    tune_thresholds,
+)
+from repro.core.exits import RecordWindow
+from repro.core.ramp_adjust import adjust_ramps
+
+PROF = build_profile(get_config("gpt2-medium"), mode="decode", chips=1)
+NS = len(PROF.sites)
+
+
+def synth_window(n=256, n_sites=NS, seed=0, difficulty=0.5, active=None):
+    rng = np.random.default_rng(seed)
+    active = list(range(n_sites)) if active is None else active
+    unc = np.full((n, n_sites), np.nan, np.float32)
+    cor = np.zeros((n, n_sites), bool)
+    val = np.zeros((n, n_sites), bool)
+    for s in active:
+        frac = (s + 1) / n_sites
+        p_agree = np.clip(1 - difficulty * (1 - frac) ** 1.5, 0, 1)
+        cor[:, s] = rng.random(n) < p_agree
+        unc[:, s] = np.clip(difficulty * (1 - frac) + rng.normal(0, 0.08, n), 0, 1)
+        val[:, s] = True
+    return unc, cor, val
+
+
+# -- exit semantics -----------------------------------------------------------
+
+
+def test_simulate_exits_first_site():
+    unc = np.asarray([[0.5, 0.1, 0.0], [0.9, 0.9, 0.9], [0.0, 0.9, 0.9]], np.float32)
+    val = np.ones_like(unc, bool)
+    thr = np.asarray([0.2, 0.2, 0.2], np.float32)
+    ex = simulate_exits(unc, val, thr, [0, 1, 2])
+    assert ex.tolist() == [1, -1, 0]
+    # inactive ramps never exit
+    ex = simulate_exits(unc, val, thr, [2])
+    assert ex.tolist() == [2, -1, -1]
+
+
+def test_zero_thresholds_no_exits():
+    wd = synth_window()
+    ev = evaluate_config(wd, np.zeros(NS, np.float32), list(range(NS)), PROF)
+    # threshold 0 admits only unc==0 samples; accuracy stays ~1
+    assert ev.accuracy >= 0.99
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 100),
+    site=st.integers(0, NS - 1),
+    t1=st.floats(0, 1),
+    t2=st.floats(0, 1),
+)
+def test_monotonicity_property(seed, site, t1, t2):
+    """Paper §3.2: raising any single threshold monotonically increases exit
+    rate & latency savings. (Accuracy monotonicity is statistical — paper
+    footnote 2: used only for search efficiency, not correctness — so it is
+    asserted below only on windows with per-sample monotone correctness.)"""
+    lo, hi = sorted([t1, t2])
+    wd = synth_window(seed=seed, n=128)
+    base = np.full(NS, 0.3, np.float32)
+    a = base.copy(); a[site] = lo
+    b = base.copy(); b[site] = hi
+    act = list(range(NS))
+    ea = evaluate_config(wd, a, act, PROF)
+    eb = evaluate_config(wd, b, act, PROF)
+    assert eb.exit_rate >= ea.exit_rate - 1e-9
+    assert eb.mean_saved_ms >= ea.mean_saved_ms - 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 50), site=st.integers(0, NS - 1), hi=st.floats(0.1, 1))
+def test_accuracy_monotone_on_monotone_windows(seed, site, hi):
+    """When per-sample correctness is monotone in depth (later ramps at
+    least as correct), raising thresholds never raises accuracy."""
+    rng = np.random.default_rng(seed)
+    n = 128
+    unc = np.zeros((n, NS), np.float32)
+    cor = np.zeros((n, NS), bool)
+    hardness = rng.random(n)
+    for s in range(NS):
+        frac = (s + 1) / NS
+        cor[:, s] = hardness < frac + 0.15  # monotone in s per sample
+        unc[:, s] = np.clip(hardness * (1 - frac) + rng.normal(0, 0.02, n), 0, 1)
+    val = np.ones((n, NS), bool)
+    wd = (unc, cor, val)
+    base = np.full(NS, 0.2, np.float32)
+    b = base.copy(); b[site] = max(hi, base[site])
+    act = list(range(NS))
+    ea = evaluate_config(wd, base, act, PROF)
+    eb = evaluate_config(wd, b, act, PROF)
+    assert eb.accuracy <= ea.accuracy + 1e-9
+
+
+# -- threshold tuning ---------------------------------------------------------
+
+
+def test_tuner_meets_constraint():
+    for seed in range(4):
+        wd = synth_window(seed=seed, difficulty=0.6)
+        res = tune_thresholds(wd, list(range(NS)), PROF, n_sites=NS, acc_constraint=0.99)
+        assert res.accuracy >= 0.99 - 1e-9
+        assert res.savings_ms >= 0 or np.all(res.thresholds == 0)
+
+
+def test_tuner_vs_grid_quality_and_speed():
+    wd = synth_window(seed=3, difficulty=0.5)
+    act = [2, 6, 10]
+    g = grid_search_thresholds(wd, act, PROF, n_sites=NS, step=0.25)
+    t = tune_thresholds(wd, act, PROF, n_sites=NS)
+    assert t.accuracy >= 0.99 - 1e-9
+    # greedy with fine steps should match/beat a coarse grid
+    assert t.savings_ms >= g.savings_ms - 1e-6
+    # far fewer evaluations than the 5^3 grid
+    assert t.rounds < g.rounds
+
+
+def test_tuner_zero_start():
+    """Thresholds start at 0 (no exits) — the paper's safe bootstrap."""
+    wd = synth_window(seed=0)
+    res = tune_thresholds(wd, [0], PROF, n_sites=NS, acc_constraint=1.1)  # impossible
+    assert np.all(res.thresholds == 0)
+
+
+# -- ramp utilities / adjustment ----------------------------------------------
+
+
+def test_utilities_sign():
+    wd = synth_window(seed=1, difficulty=0.3)
+    thr = np.full(NS, 0.5, np.float32)
+    utils = ramp_utilities(wd, thr, list(range(NS)), PROF)
+    # easy workload + open thresholds: (almost) everything exits at ramp 0,
+    # which must be net positive; downstream ramps see nothing (utility ~0)
+    assert utils[0] > 0
+    assert all(utils[s] <= utils[0] for s in range(NS))
+    # with threshold 0 nothing exits -> every ramp utility <= 0
+    utils0 = ramp_utilities(wd, np.zeros(NS, np.float32), list(range(NS)), PROF)
+    assert all(u <= 0 for u in utils0.values())
+
+
+def test_adjust_deactivates_negative():
+    wd = synth_window(seed=2, difficulty=0.9)
+    thr = np.zeros(NS, np.float32)
+    thr[[1, 9]] = 0.4
+    res = adjust_ramps(
+        wd, [1, 9], thr, PROF, n_sites=NS, acc_constraint=0.99, budget_frac=0.05,
+        max_slots=4,
+    )
+    # early ramp 1 on a hard workload should be unprofitable -> removed
+    # (or rescued by tuning; both are valid paper behaviors)
+    assert res.reason in ("deactivated-negative", "rescued-by-tuning")
+    if res.reason == "deactivated-negative":
+        assert 1 not in res.active or 9 not in res.active
+
+
+def test_adjust_budget_respected():
+    wd = synth_window(seed=0, difficulty=0.2)
+    thr = np.full(NS, 0.6, np.float32)
+    res = adjust_ramps(
+        wd, list(range(NS)), thr, PROF, n_sites=NS, acc_constraint=0.9,
+        budget_frac=1e-9, max_slots=12,
+    )
+    assert res.reason in ("budget-shrink", "deactivated-negative")
+    ovh = sum(PROF.ramp_overhead(s, 1) for s in res.active)
+    assert ovh <= 1e-9 * PROF.vanilla_time(1) + 1e-12 or len(res.active) == 0
+
+
+# -- controller ---------------------------------------------------------------
+
+
+def _drive(ctl, n_steps, difficulty, seed=0, B=8):
+    rng = np.random.default_rng(seed)
+    accs = []
+    for _ in range(n_steps):
+        final = rng.integers(0, 50, B)
+        act = sorted(ctl.active)
+        K = len(act)
+        labels = np.zeros((max(K, 1), B), np.int64)
+        unc = np.ones((max(K, 1), B), np.float32)
+        for j, s in enumerate(act):
+            frac = (s + 1) / ctl.n_sites
+            agree = rng.random(B) < np.clip(1 - difficulty * (1 - frac) ** 1.5, 0, 1)
+            labels[j] = np.where(agree, final, (final + 1) % 50)
+            unc[j] = np.clip(difficulty * (1 - frac) + rng.normal(0, 0.08, B), 0, 1)
+        dec = ctl.observe(labels[:K] if K else labels[:0], unc[:K] if K else unc[:0], final)
+        accs.append(np.mean(dec.released_labels == final))
+    return np.asarray(accs)
+
+
+def test_controller_maintains_accuracy_through_drift():
+    ctl = ApparateController(NS, PROF, ControllerConfig(max_slots=4, tune_window=256))
+    a1 = _drive(ctl, 150, 0.3, seed=1)
+    a2 = _drive(ctl, 150, 0.8, seed=2)  # drift: harder
+    # paper Table 1: continual tuning holds ~98-99% through drift
+    assert a2[50:].mean() >= 0.96, a2[50:].mean()
+    assert ctl.stats["tunes"] > 0
+    assert ctl.stats["adjusts"] > 0
+
+
+def test_controller_initial_state_no_exits():
+    ctl = ApparateController(NS, PROF, ControllerConfig(max_slots=4))
+    assert np.all(ctl.thresholds == 0)  # threshold 0 = no exiting (paper)
+    assert len(ctl.active) >= 1
+    ovh = ctl.total_ramp_overhead(1)
+    assert ovh <= ctl.cfg.ramp_budget_frac * PROF.vanilla_time(1) + 1e-9
+
+
+def test_record_window_ring():
+    w = RecordWindow(4, capacity=8)
+    for i in range(5):
+        w.append([0, 2], np.full((2, 3), i / 10), np.ones((2, 3), bool))
+    unc, cor, val = w.last(6)
+    assert unc.shape == (6, 4)
+    assert val[:, 0].all() and val[:, 2].all()
+    assert not val[:, 1].any()
+    assert w.count == 15

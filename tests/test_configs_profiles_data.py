@@ -1,0 +1,103 @@
+"""Config registry, shape cells, latency profiles, synthetic data."""
+import numpy as np
+import pytest
+
+from repro.configs import (
+    ARCH_IDS,
+    PAPER_IDS,
+    SHAPES,
+    all_cells,
+    cell_is_runnable,
+    get_bench,
+    get_config,
+    get_tiny,
+)
+from repro.core import build_profile
+from repro.data import make_image_stream, make_token_stream
+
+
+def test_all_archs_resolve():
+    for a in ARCH_IDS + PAPER_IDS:
+        cfg = get_config(a)
+        tiny = get_tiny(a)
+        assert cfg.name == a
+        assert tiny.n_layers <= cfg.n_layers
+
+
+def test_cell_enumeration():
+    cells = list(all_cells())
+    assert len(cells) == 40  # 10 archs x 4 shapes
+    runnable = [c for c in cells if c[2]]
+    skipped = [c for c in cells if not c[2]]
+    # long_500k skipped exactly for the 7 pure full-attention archs
+    assert len(skipped) == 7
+    assert all(s == "long_500k" for _, s, _ in skipped)
+
+
+def test_production_divisibility():
+    """Key sharded dims divide the production mesh axes (or the sanitizer
+    replicates them — embeddings must always divide)."""
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        assert cfg.padded_vocab % 2048 == 0
+        assert cfg.padded_vocab % 16 == 0, a  # model axis
+        assert cfg.d_model % 16 == 0, a
+        if cfg.moe:
+            assert cfg.n_experts % 16 == 0, a  # EP over model axis
+
+
+def test_assigned_shapes_exact():
+    assert SHAPES["train_4k"] == dict(kind="train", seq_len=4096, global_batch=256)
+    assert SHAPES["prefill_32k"] == dict(kind="prefill", seq_len=32768, global_batch=32)
+    assert SHAPES["decode_32k"] == dict(kind="decode", seq_len=32768, global_batch=128)
+    assert SHAPES["long_500k"] == dict(kind="decode", seq_len=524288, global_batch=1)
+
+
+@pytest.mark.parametrize("arch", ["gpt2-medium", "resnet18", "deepseek-67b", "mamba2-2.7b"])
+def test_profile_sanity(arch):
+    cfg = get_config(arch)
+    prof = build_profile(cfg, mode="decode", chips=1)
+    t = prof.cum_times(1)
+    assert (np.diff(t) > 0).all()  # strictly increasing cumulative time
+    assert prof.vanilla_time(1) > t[-1]  # head adds time
+    assert prof.vanilla_time(8) >= prof.vanilla_time(1)  # batch monotone
+    for s in range(len(prof.sites)):
+        assert prof.savings_at_site(s, 1) > 0
+        assert prof.ramp_overhead(s, 1) >= 0
+    # earlier exits save more
+    sav = [prof.savings_at_site(s, 1) for s in range(len(prof.sites))]
+    assert (np.diff(sav) < 0).all()
+
+
+def test_resnet_latency_skew():
+    """Paper §3.3: CV latency skews toward early layers (high-res inputs)."""
+    cfg = get_config("resnet50").replace(resnet_widths=(64, 128, 256, 512), img_size=224)
+    prof = build_profile(cfg, chips=1)
+    times = [prof.layer_time(i, 1) for i in range(len(prof.layer_flops))]
+    first_half = sum(times[: len(times) // 2])
+    assert first_half > 0.35 * sum(times)
+
+
+def test_image_stream_temporal_correlation():
+    cv = make_image_stream(2000, mode="cv", seed=0)
+    nlp = make_image_stream(2000, mode="nlp", seed=0)
+    # CV labels persist; NLP labels iid
+    cv_flips = np.mean(cv.labels[1:] != cv.labels[:-1])
+    nlp_flips = np.mean(nlp.labels[1:] != nlp.labels[:-1])
+    assert cv_flips < 0.2 < nlp_flips
+    assert (cv.difficulty >= 0).all() and (cv.difficulty <= 1).all()
+
+
+def test_token_stream_compositional():
+    s = make_token_stream(500, seq_len=32, vocab=512, n_classes=10, seed=1)
+    assert s.data.shape == (500, 32)
+    assert (s.data[:, 0] == 0).all()  # CLS
+    assert s.data.max() < 512
+
+
+def test_bench_configs_preserve_depth():
+    for name in ("gpt2-medium", "bert-base", "resnet18"):
+        full, bench = get_config(name), get_bench(name)
+        assert bench.n_layers == full.n_layers
+        if name.startswith("resnet"):
+            assert bench.resnet_blocks == full.resnet_blocks

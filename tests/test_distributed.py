@@ -1,0 +1,140 @@
+"""Distribution: EP-vs-dense MoE equivalence, gradient compression,
+pipeline, mini dry-run — all in a subprocess with 4 fake devices so the
+rest of the suite keeps its single real device."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+# XLA's host-platform collective thunks occasionally abort under heavy CPU
+# oversubscription (observed only with the full suite running concurrently);
+# rerun rather than fail the suite on the race.
+pytestmark = pytest.mark.flaky(reruns=2)
+
+
+def run_sub(code: str):
+    env = dict(os.environ)
+    # cap per-device thread pools: 8 fake devices on 1 core can exhaust
+    # threads under load (observed as SIGABRT in Eigen worker spawn)
+    env["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=4 --xla_cpu_multi_thread_eigen=false"
+    )
+    env["PYTHONPATH"] = SRC
+    env["OMP_NUM_THREADS"] = "1"
+    for attempt in range(2):  # one retry for transient thread exhaustion
+        r = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(code)],
+            capture_output=True, text=True, timeout=560, env=env,
+        )
+        if r.returncode == 0:
+            return r.stdout
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+def test_moe_ep_matches_dense_on_mesh():
+    run_sub("""
+        import jax, jax.numpy as jnp
+        from repro.configs import get_tiny
+        from repro.models import build_model
+        from repro.models.layers import MeshAxes
+        mesh = jax.make_mesh((2, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        axes = MeshAxes(data=("data",), model="model", fsdp=True)
+        cfg = get_tiny("qwen3-moe-30b-a3b").replace(capacity_factor=8.0)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab_size)
+        batch = {"tokens": toks, "labels": toks}
+        f = lambda impl: float(jax.jit(lambda p, b: m.loss(p, b, axes=axes, mesh=mesh, moe_impl=impl)[0])(params, batch))
+        le, ld = f("ep"), f("dense")
+        assert abs(le - ld) < 1e-3, (le, ld)
+        print("ep==dense OK")
+    """)
+
+
+def test_moe_ep_small_batch_decode():
+    """Per-shard tokens < model ranks (the decode regime) must still work."""
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_tiny
+        from repro.models import build_model
+        from repro.models.layers import MeshAxes
+        mesh = jax.make_mesh((2, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        axes = MeshAxes(data=("data",), model="model", fsdp=False)
+        cfg = get_tiny("qwen3-moe-30b-a3b").replace(capacity_factor=8.0)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 3), 0, cfg.vocab_size)  # 6 tokens < 4-dev granularity
+        def f(impl):
+            _, outs = m.prefill(params, toks, active_sites=jnp.asarray([0], jnp.int32),
+                                with_cache=False, moe_impl=impl, axes=axes, mesh=mesh)
+            return np.asarray(outs["final"]["maxprob"])
+        np.testing.assert_allclose(f("ep"), f("dense"), rtol=2e-3, atol=2e-3)
+        print("small-batch ep OK")
+    """)
+
+
+def test_gradient_compression_and_pipeline():
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed import make_compressed_grad_allreduce, pipeline_apply
+        mesh = jax.make_mesh((2, 2), ("pod", "data"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        g = {"w": jax.random.normal(jax.random.PRNGKey(0), (33, 17)), "b": jnp.ones((5,))}
+        r = jax.tree.map(jnp.zeros_like, g)
+        out, res = make_compressed_grad_allreduce(mesh, "pod")(g, r)
+        for k in g:
+            np.testing.assert_allclose(np.asarray(out[k]), np.asarray(g[k]*2), atol=0.06, rtol=0.02)
+        # error feedback: residual holds the quantization error
+        assert float(sum(jnp.sum(jnp.abs(x)) for x in jax.tree.leaves(res))) > 0
+        mesh2 = jax.make_mesh((4,), ("stage",), axis_types=(jax.sharding.AxisType.Auto,))
+        W = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 16)) * 0.3
+        x = jax.random.normal(jax.random.PRNGKey(2), (6, 3, 16))
+        y = pipeline_apply(mesh2, "stage", lambda p, h: jnp.tanh(h @ p), W, x)
+        ref = x
+        for i in range(4): ref = jnp.tanh(ref @ W[i])
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5, atol=1e-5)
+        print("compression+pipeline OK")
+    """)
+
+
+def test_mini_dryrun_multidev():
+    """Lower+compile a tiny arch on a (2,2) mesh — the dry-run machinery
+    end-to-end without the 512-device cost."""
+    run_sub("""
+        import jax, numpy as np
+        import repro.launch.dryrun as DR
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh(2, 2)
+        fn, args, donate = DR.build_cell("qwen2-1.5b", "train_4k", mesh,
+            overrides=dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                           d_ff=128, vocab_size=2048, dtype="float32"))
+        # shrink the batch via rebuilt abstracts is overkill; just compile
+        compiled = jax.jit(fn, donate_argnums=donate).lower(*args).compile()
+        ca = compiled.cost_analysis()
+        assert ca.get("flops", 0) > 0
+        cb = DR.collective_bytes(compiled.as_text())
+        print("mini dryrun OK", sum(cb["bytes"].values()))
+    """)
+
+
+def test_elastic_restore_across_meshes():
+    """Checkpoint saved unsharded restores onto a different device layout."""
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np, tempfile
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.checkpoint import CheckpointManager
+        mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        x = jnp.arange(64.0).reshape(8, 8)
+        xs = jax.device_put(x, NamedSharding(mesh, P("data", None)))
+        d = tempfile.mkdtemp()
+        mgr = CheckpointManager(d)
+        mgr.save({"w": xs}, step=1)
+        mesh2 = jax.make_mesh((2, 2), ("a", "b"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        tree = mgr.restore(1, sharding_tree={"w": NamedSharding(mesh2, P("b", "a"))})
+        np.testing.assert_array_equal(np.asarray(tree["w"]), np.asarray(x))
+        print("elastic OK")
+    """)

@@ -1,0 +1,76 @@
+"""Dry-run tooling: HLO collective parser, metric extrapolation math,
+artifact sanity (runs against the checked-in artifacts when present)."""
+import glob
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.launch.dryrun import COLLECTIVE_W, collective_bytes, metric_overrides
+from repro.configs import ARCH_IDS, get_config
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def test_collective_parser_shapes():
+    hlo = """
+  %all-reduce.1 = f32[16,4096,1536]{2,1,0} all-reduce(%x), replica_groups={}
+  %ag = bf16[8,1024]{1,0} all-gather(%y), dimensions={0}
+  %t = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-reduce(%a, %b), channel_id=3
+  %p = f32[2,2]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %noise = f32[9,9]{1,0} add(%q, %r)
+"""
+    out = collective_bytes(hlo)
+    ar = out["bytes"]["all-reduce"]
+    # 16*4096*1536*4*2(w) + 2*(4*4*4)*2(w)
+    assert ar == 16 * 4096 * 1536 * 4 * 2 + 2 * 16 * 4 * 2
+    assert out["bytes"]["all-gather"] == 8 * 1024 * 2
+    assert out["bytes"]["collective-permute"] == 2 * 2 * 4
+    assert out["counts"]["all-reduce"] == 2
+    assert out["bytes"]["all-to-all"] == 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_metric_overrides_consistent(arch):
+    """Reduced-depth override configs must build valid plans whose period
+    structure matches the full config (same slots per period)."""
+    from repro.models.transformer import build_plan
+
+    cfg = get_config(arch)
+    ovrs, (u1, u2, uf) = metric_overrides(cfg)
+    assert u2 == u1 + 1 and uf >= u2
+    if cfg.family == "encdec":
+        return
+    full = build_plan(cfg)
+    for ovr, u in zip(ovrs, (u1, u2)):
+        p = build_plan(cfg.replace(**ovr))
+        assert p.period == full.period, arch
+        assert p.n_periods == u, arch
+        assert len(p.prefix) == len(full.prefix)
+        assert len(p.suffix) == len(full.suffix)
+
+
+def test_artifacts_if_present():
+    paths = [
+        p for p in glob.glob(os.path.join(ART, "*__single.json"))
+        if "opt" not in os.path.basename(p)
+    ]
+    if not paths:
+        pytest.skip("no dry-run artifacts checked in")
+    n_ok = 0
+    for p in paths:
+        d = json.load(open(p))
+        if not d.get("ok"):
+            continue
+        n_ok += 1
+        assert d["chips"] == 256
+        if "t_compute_s" in d:
+            assert d["t_compute_s"] >= 0
+            assert d["xp_flops"] >= 0
+            # extrapolation sanity: full-depth >= 2-period measurement
+            u = d["metric_points"]["u"]
+            f = d["metric_points"]["flops"]
+            if u[2] > u[1]:
+                assert d["xp_flops"] >= f[1] - 1e-6
+    assert n_ok >= 30  # 33 runnable cells

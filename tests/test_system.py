@@ -1,0 +1,74 @@
+"""End-to-end behaviour: train a real (tiny, paper-shape) model, serve a
+drifting stream through the simulator with the Apparate controller, and
+assert the paper's three headline properties:
+
+  1. median/p25 latency drops vs vanilla serving,
+  2. throughput (mean batch size) is unchanged and tail stays within the
+     ramp budget,
+  3. agreement accuracy with the original model's outputs meets the
+     constraint (within drift-transient slack, paper Table 1).
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_bench, get_config
+from repro.core import ApparateController, ControllerConfig, build_profile
+from repro.data import make_image_stream
+from repro.models import build_model
+from repro.serving import (
+    ClassifierRunner,
+    PlatformConfig,
+    ServingSimulator,
+    make_requests,
+    summarize,
+    video_trace,
+)
+from repro.training import TrainConfig, train
+
+
+@pytest.fixture(scope="module")
+def cv_setup():
+    cfg = get_bench("resnet18").replace(n_classes=10)
+    model = build_model(cfg)
+    stream = make_image_stream(2200, img_size=cfg.img_size, n_classes=10, mode="cv", seed=2)
+
+    def batches(s):
+        rng = np.random.default_rng(s)
+        idx = rng.integers(0, 220, 64)
+        return {"images": stream.data[idx], "labels": stream.labels[idx]}
+
+    state, _ = train(model, batches, TrainConfig(steps=120, lr=3e-3), verbose=False)
+    prof = build_profile(
+        get_config("resnet18").replace(resnet_widths=(64, 128, 256, 512), img_size=224),
+        mode="decode", chips=1,
+    )
+    runner = ClassifierRunner(model, state["params"], stream.data, max_slots=6)
+    return cfg, model, runner, stream, prof
+
+
+def test_end_to_end_cv_serving(cv_setup):
+    cfg, model, runner, stream, prof = cv_setup
+    n0, n = 220, 2200
+    exec1 = prof.vanilla_time(1)
+    arr = video_trace(n - n0, fps=0.5 * 1000.0 / exec1)
+    reqs = make_requests(arr, slo_ms=2 * exec1, items=np.arange(n0, n))
+    pf = PlatformConfig(policy="tfserve", max_batch_size=8, batch_timeout_ms=exec1)
+    base = ServingSimulator(prof, pf).run(reqs)
+    ctl = ApparateController(
+        len(model.sites), prof,
+        ControllerConfig(max_slots=6, ramp_budget_frac=0.02, acc_constraint=0.99),
+    )
+    resp = ServingSimulator(prof, pf, runner, ctl).run(reqs)
+    van = runner.vanilla_labels(n)
+    agree = np.mean([r.label == van[n0 + r.rid] for r in resp if not r.dropped])
+    mb, mo = summarize(base), summarize(resp)
+    # 1. latency wins
+    assert mo["p50_ms"] < mb["p50_ms"], (mo["p50_ms"], mb["p50_ms"])
+    assert mo["p25_ms"] < mb["p25_ms"]
+    # 2. throughput unchanged; tail within ramp budget
+    assert abs(mo["mean_batch"] - mb["mean_batch"]) < 1e-6
+    assert mo["p99_ms"] <= mb["p99_ms"] * 1.02 + 1e-6
+    # 3. accuracy constraint (drift-transient slack per paper Table 1)
+    assert agree >= 0.97, agree
+    # controller actually adapted
+    assert ctl.stats["adjusts"] > 0
