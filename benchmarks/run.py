@@ -269,6 +269,55 @@ def bench_fig17_slo():
         emit(f"fig17_slo{slo_mult}x", ours["p50_ms"] * 1e3, f"win_pct={win:.1f}")
 
 
+# ------------------------------------------------------ scale-out (ROADMAP)
+
+
+def bench_scaleout_goodput():
+    """N-worker cluster vs single worker on the bursty MAF trace: goodput
+    at equal SLO, with per-replica Apparate controllers staying inside the
+    ramp budget (the paper's claim, scaled out)."""
+    from repro.configs import get_config
+    from repro.core import ApparateController, ControllerConfig, build_profile
+    from repro.serving import (
+        ClusterConfig,
+        ClusterSimulator,
+        PlatformConfig,
+        SyntheticRunner,
+        make_requests,
+        maf_trace,
+        summarize,
+    )
+
+    prof = build_profile(get_config("gpt2-medium"), mode="decode", chips=1)
+    ns = len(prof.sites)
+    mbs = 8
+    qps_cap = mbs * 1000.0 / prof.vanilla_time(mbs)
+    arr = maf_trace(3000, mean_qps=4 * 0.6 * qps_cap, seed=7)
+    reqs = make_requests(arr, slo_ms=3 * prof.vanilla_time(1))
+    pf = PlatformConfig(policy="tfserve", max_batch_size=mbs,
+                        batch_timeout_ms=prof.vanilla_time(1))
+
+    def run(nw, dispatch):
+        ctls = [ApparateController(ns, prof, ControllerConfig(max_slots=4)) for _ in range(nw)]
+        sim = ClusterSimulator(
+            prof, ClusterConfig(n_workers=nw, dispatch=dispatch, platform=pf),
+            runner=SyntheticRunner(ns, exit_site=ns // 3), controllers=ctls,
+        )
+        m = summarize(sim.run(reqs), horizon_ms=sim.makespan_ms)
+        lim = ControllerConfig().ramp_budget_frac * prof.vanilla_time(1)
+        ok = all(c.total_ramp_overhead(1) <= lim + 1e-9 for c in ctls)
+        return m, ok
+
+    for nw in (1, 2, 4):
+        m, ok = run(nw, "jsq")
+        emit(f"scaleout_{nw}w_goodput", m["p50_ms"] * 1e3,
+             f"goodput_qps={m.get('goodput_qps', 0.0):.1f};budget_ok={ok}")
+    for dispatch in ("round_robin", "jsq", "slo_aware"):
+        m, _ = run(4, dispatch)
+        emit(f"scaleout_4w_{dispatch}", m["p50_ms"] * 1e3,
+             f"goodput_qps={m.get('goodput_qps', 0.0):.1f}")
+
+
 # ------------------------------------------------------------------ kernels
 
 
@@ -326,6 +375,7 @@ ALL = [
     bench_fig9_ramp_styles,
     bench_table4_platforms,
     bench_fig17_slo,
+    bench_scaleout_goodput,
     bench_kernels,
 ]
 

@@ -1,0 +1,35 @@
+"""Version-compat shims for the installed JAX.
+
+The repo targets the current ``jax.shard_map`` API; older JAX (≤0.4.x,
+as shipped in this container) exposes shard_map under
+``jax.experimental.shard_map`` and names the replication-check kwarg
+``check_rep`` instead of ``check_vma``. Route every shard_map call
+through here so call sites stay on the modern spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+        )
+
+
+def cost_analysis(compiled) -> dict:
+    """Normalized ``Compiled.cost_analysis()``: old JAX returns a one-element
+    list of dicts (one per program), current JAX returns the dict itself."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca

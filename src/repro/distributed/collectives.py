@@ -13,6 +13,8 @@ from functools import partial
 from typing import Tuple
 
 import jax
+
+from repro.compat import shard_map
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
@@ -77,7 +79,7 @@ def make_compressed_grad_allreduce(mesh, axis_name: str = "pod"):
 
     def run(grads, residuals):
         spec = jax.tree.map(lambda _: P(), grads)
-        return jax.shard_map(
+        return shard_map(
             mapped, mesh=mesh,
             in_specs=(spec, spec), out_specs=(spec, spec), check_vma=False,
         )(grads, residuals)

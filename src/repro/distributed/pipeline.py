@@ -12,6 +12,8 @@ from functools import partial
 from typing import Callable
 
 import jax
+
+from repro.compat import shard_map
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
@@ -64,6 +66,6 @@ def pipeline_apply(
         jax.tree.map(lambda _: P(axis), stacked_params),
         P(),  # microbatches replicated in; real deployments shard the batch dim
     )
-    return jax.shard_map(
+    return shard_map(
         mapped, mesh=mesh, in_specs=in_specs, out_specs=P(), check_vma=False,
     )(stacked_params, x)

@@ -286,7 +286,9 @@ def _compile_and_measure(arch, shape_name, mesh, overrides):
     t1 = time.time()
     compiled = lowered.compile()
     t_compile = time.time() - t1
-    ca = compiled.cost_analysis() or {}
+    from repro.compat import cost_analysis
+
+    ca = cost_analysis(compiled)
     text = compiled.as_text()
     m = {
         "lower_s": t_lower,

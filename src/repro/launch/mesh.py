@@ -13,12 +13,21 @@ import jax
 from repro.models.layers import MeshAxes
 
 
+def make_mesh(shape, axes):
+    """`jax.make_mesh` with explicit Auto axis types where the installed
+    JAX supports them (jax.sharding.AxisType landed after 0.4.x; older
+    versions already default every axis to Auto)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def mesh_axes(mesh, *, fsdp: bool = True) -> MeshAxes:
@@ -28,7 +37,4 @@ def mesh_axes(mesh, *, fsdp: bool = True) -> MeshAxes:
 
 
 def make_test_mesh(data: int = 1, model: int = 1):
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((data, model), ("data", "model"))

@@ -1,7 +1,10 @@
 """Production serving launcher: end-to-end Apparate serving on a trained
-(tiny) model with a drifting synthetic workload.
+(tiny) model with a drifting synthetic workload. With ``--workers N`` the
+stream is served by the scale-out cluster engine: a dispatcher spreads
+load across N replicas, each with its own Apparate controller.
 
   PYTHONPATH=src python -m repro.launch.serve --domain cv --n 3000
+  PYTHONPATH=src python -m repro.launch.serve --workers 4 --dispatch jsq
 """
 from __future__ import annotations
 
@@ -16,12 +19,15 @@ from repro.data import make_image_stream, make_token_stream
 from repro.models import build_model
 from repro.serving import (
     ClassifierRunner,
+    ClusterConfig,
+    ClusterSimulator,
     PlatformConfig,
     ServingSimulator,
     make_requests,
     maf_trace,
     savings_vs,
     summarize,
+    summarize_cluster,
     video_trace,
 )
 from repro.training import TrainConfig, train
@@ -57,31 +63,40 @@ def build_domain(domain: str, n: int, seed: int = 2):
 
 
 def serve(domain: str, n: int, *, policy="tfserve", budget=0.02, acc=0.99,
-          load=0.5, seed=2, slots=6, verbose=True):
+          load=0.5, seed=2, slots=6, workers=1, dispatch="jsq", verbose=True):
     cfg, model, params, stream, prof, boot = build_domain(domain, n, seed)
     runner = ClassifierRunner(model, params, stream.data, max_slots=slots)
-    ctl = ApparateController(
-        len(model.sites), prof,
-        ControllerConfig(max_slots=slots, ramp_budget_frac=budget, acc_constraint=acc),
-    )
+    ccfg = ControllerConfig(max_slots=slots, ramp_budget_frac=budget, acc_constraint=acc)
     exec1 = prof.vanilla_time(1)
     n_serve = n - boot
+    # the offered load scales with the cluster: each replica sees ~`load`
     if domain == "cv":
-        arrivals = video_trace(n_serve, fps=load * 1000.0 / exec1)
+        arrivals = video_trace(n_serve, fps=workers * load * 1000.0 / exec1)
     else:
-        arrivals = maf_trace(n_serve, mean_qps=load * 1000.0 / exec1, seed=seed)
+        arrivals = maf_trace(n_serve, mean_qps=workers * load * 1000.0 / exec1, seed=seed)
     reqs = make_requests(arrivals, slo_ms=2 * exec1, items=np.arange(boot, n))
     pf = PlatformConfig(policy=policy, max_batch_size=8, batch_timeout_ms=exec1)
-    base = ServingSimulator(prof, pf).run(reqs)
-    resp = ServingSimulator(prof, pf, runner, ctl).run(reqs)
+    ccl = ClusterConfig(n_workers=workers, dispatch=dispatch, platform=pf)
+    base_sim = ClusterSimulator(prof, ccl)
+    base = base_sim.run(reqs)
+    ctls = [ApparateController(len(model.sites), prof, ccfg) for _ in range(workers)]
+    sim = ClusterSimulator(prof, ccl, runner=runner, controllers=ctls)
+    resp = sim.run(reqs)
     van = runner.vanilla_labels(n)
     agree = float(np.mean([r.label == van[boot + r.rid] for r in resp if not r.dropped]))
-    mb, mo = summarize(base), summarize(resp)
+    rep_b = summarize_cluster(base, horizon_ms=base_sim.makespan_ms, n_workers=workers)
+    rep_o = summarize_cluster(resp, horizon_ms=sim.makespan_ms, n_workers=workers)
+    mb, mo = rep_b["aggregate"], rep_o["aggregate"]
     out = {
-        "domain": domain, "vanilla": mb, "apparate": mo, "accuracy": agree,
-        "wins": savings_vs(mb, mo), "controller": dict(ctl.stats),
-        "active_ramps": list(map(int, ctl.active)),
+        "domain": domain, "workers": workers, "dispatch": dispatch,
+        "vanilla": mb, "apparate": mo, "accuracy": agree,
+        "wins": savings_vs(mb, mo),
+        "controllers": [dict(c.stats) for c in ctls],
+        "active_ramps": [list(map(int, c.active)) for c in ctls],
     }
+    if workers > 1:
+        out["per_worker"] = rep_o["workers"]
+        out["worker_stats"] = sim.worker_stats()
     if verbose:
         print(json.dumps(out, indent=1, default=float))
     return out
@@ -95,9 +110,12 @@ def main(argv=None):
     ap.add_argument("--budget", type=float, default=0.02)
     ap.add_argument("--acc", type=float, default=0.99)
     ap.add_argument("--load", type=float, default=0.5)
+    ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--dispatch", default="jsq",
+                    choices=["round_robin", "jsq", "slo_aware"])
     args = ap.parse_args(argv)
     serve(args.domain, args.n, policy=args.policy, budget=args.budget,
-          acc=args.acc, load=args.load)
+          acc=args.acc, load=args.load, workers=args.workers, dispatch=args.dispatch)
 
 
 if __name__ == "__main__":

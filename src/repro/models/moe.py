@@ -19,6 +19,8 @@ from functools import partial
 from typing import Optional
 
 import jax
+
+from repro.compat import shard_map
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
@@ -189,7 +191,7 @@ def moe_apply_ep(cfg, p, x, axes: MeshAxes, mesh):
             y = jax.lax.all_gather(y, axes.model, axis=0, tiled=True)
             return y[:T_data] if pad else y
 
-        y = jax.shard_map(
+        y = shard_map(
             mapped,
             mesh=mesh,
             in_specs=(

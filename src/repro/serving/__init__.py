@@ -1,19 +1,36 @@
 from repro.serving.arrivals import maf_trace, video_trace
-from repro.serving.metrics import savings_vs, summarize
+from repro.serving.cluster import (
+    ClusterConfig,
+    ClusterSimulator,
+    Worker,
+    get_dispatcher,
+    release_offset,
+)
+from repro.serving.metrics import savings_vs, summarize, summarize_cluster
 from repro.serving.platform import PlatformConfig, ServingSimulator, make_requests
+from repro.serving.policies import BatchPolicy, get_policy
 from repro.serving.request import Request, Response
-from repro.serving.runner import ClassifierRunner, LMTokenRunner
+from repro.serving.runner import ClassifierRunner, LMTokenRunner, SyntheticRunner
 
 __all__ = [
     "maf_trace",
     "video_trace",
     "savings_vs",
     "summarize",
+    "summarize_cluster",
     "PlatformConfig",
     "ServingSimulator",
+    "ClusterConfig",
+    "ClusterSimulator",
+    "Worker",
+    "get_dispatcher",
+    "release_offset",
+    "BatchPolicy",
+    "get_policy",
     "make_requests",
     "Request",
     "Response",
     "ClassifierRunner",
     "LMTokenRunner",
+    "SyntheticRunner",
 ]

@@ -24,6 +24,8 @@ def maf_trace(
     seed: int = 0,
 ) -> np.ndarray:
     """Arrival times (ms) for n requests with lognormal AR(1) rate process."""
+    if mean_qps <= 0:
+        raise ValueError(f"mean_qps must be positive, got {mean_qps}")
     rng = np.random.default_rng(seed)
     times = []
     t = 0.0

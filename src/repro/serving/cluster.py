@@ -1,0 +1,257 @@
+"""Scale-out discrete-event serving engine.
+
+Generalizes the single-GPU ``ServingSimulator`` to N replicas: a
+dispatcher routes each request to a worker at its arrival instant, and
+every worker runs its own batching policy (`repro.serving.policies`)
+plus — when serving with Apparate — its **own** ``ApparateController``
+adapting from its own ramp-record stream. This mirrors the paper's
+CPU/GPU controller split per replica: records never cross workers, so
+threshold tuning and ramp adjustment stay an O(window) host-side loop
+regardless of cluster size.
+
+Dispatch strategies:
+
+  * ``round_robin`` — arrival-order striping (the baseline most serving
+    frontends ship);
+  * ``jsq`` — join-shortest-queue on queued + in-flight requests;
+  * ``slo_aware`` — earliest-estimated-completion: residual busy time +
+    backlog batches at the worker's current (ramp-aware) batch latency,
+    i.e. the replica most likely to meet this request's deadline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.policies import PlatformConfig, get_policy
+from repro.serving.request import Request, Response
+
+
+def release_offset(profile, site: int, bs: int, active: Sequence[int]) -> float:
+    """Time into batch execution at which a result exiting at ``site``
+    leaves the platform: the trunk compute through the site's layer plus
+    every active ramp head at or before it (all on the critical path)."""
+    ovh = 0.0
+    for s in sorted(active):
+        if s <= site:
+            ovh += profile.ramp_overhead(s, bs)
+    return profile.time_to_layer(profile.sites[site], bs) + ovh
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    n_workers: int = 1
+    dispatch: str = "round_robin"  # 'round_robin' | 'jsq' | 'slo_aware'
+    platform: PlatformConfig = dataclasses.field(default_factory=PlatformConfig)
+
+
+class Worker:
+    """One serving replica: its own queue, batching policy, and (optional)
+    Apparate controller fed exclusively by this replica's batches."""
+
+    def __init__(self, wid: int, profile, platform: PlatformConfig, runner=None, controller=None):
+        self.wid = wid
+        self.profile = profile
+        self.policy = get_policy(platform)
+        self.runner = runner
+        self.controller = controller
+        self.queue: List[Request] = []
+        self.free_at = 0.0
+        self.busy_ms = 0.0
+        self.n_batches = 0
+        self.n_served = 0
+        self.inflight_bs = 0  # size of the batch executing until free_at
+
+    def exec_time(self, bs: int) -> float:
+        t = self.profile.vanilla_time(bs)
+        if self.controller is not None:
+            t += self.controller.total_ramp_overhead(bs)
+        return t
+
+    def backlog_eta(self, now: float) -> float:
+        """Estimated completion delay for a request enqueued at ``now``."""
+        mbs = self.policy.cfg.max_batch_size
+        q = len(self.queue) + 1
+        n_batches = -(-q // mbs)
+        return max(self.free_at - now, 0.0) + n_batches * self.exec_time(min(q, mbs))
+
+    def execute(self, batch: List[Request], start: float) -> List[Response]:
+        bs = len(batch)
+        t_exec = self.exec_time(bs)
+        self.free_at = start + t_exec
+        self.busy_ms += t_exec
+        self.n_batches += 1
+        self.n_served += bs
+        self.inflight_bs = bs
+        ctl = self.controller
+        out: List[Response] = []
+        if self.runner is None or ctl is None:
+            for r in batch:
+                out.append(
+                    Response(r.rid, start + t_exec, 0, -1, start + t_exec - r.arrival_ms,
+                             bs, worker=self.wid, slo_ms=r.slo_ms)
+                )
+            return out
+        items = np.asarray([r.item for r in batch])
+        active = sorted(ctl.active)
+        ramp_labels, ramp_unc, final_labels = self.runner.infer(items, active)
+        dec = ctl.observe(ramp_labels, ramp_unc, final_labels)
+        for j, r in enumerate(batch):
+            site = int(dec.exit_sites[j])
+            off = release_offset(self.profile, site, bs, active) if site >= 0 else t_exec
+            rel = start + off
+            out.append(
+                Response(r.rid, rel, int(dec.released_labels[j]), site, rel - r.arrival_ms,
+                         bs, worker=self.wid, slo_ms=r.slo_ms)
+            )
+        return out
+
+    def stats(self) -> Dict[str, float]:
+        out = {
+            "busy_ms": self.busy_ms,
+            "batches": float(self.n_batches),
+            "served": float(self.n_served),
+            "mean_batch": self.n_served / self.n_batches if self.n_batches else 0.0,
+        }
+        if self.controller is not None:
+            out["ramp_overhead_ms"] = self.controller.total_ramp_overhead(1)
+            out["active_ramps"] = float(len(self.controller.active))
+        return out
+
+
+class Dispatcher:
+    name = "base"
+
+    def pick(self, workers: List[Worker], req: Request, now: float) -> Worker:
+        raise NotImplementedError
+
+
+class RoundRobinDispatcher(Dispatcher):
+    name = "round_robin"
+
+    def __init__(self):
+        self._next = 0
+
+    def pick(self, workers, req, now):
+        w = workers[self._next % len(workers)]
+        self._next += 1
+        return w
+
+
+class JSQDispatcher(Dispatcher):
+    """Join-shortest-queue on queued + in-flight requests."""
+
+    name = "jsq"
+
+    def pick(self, workers, req, now):
+        return min(
+            workers,
+            key=lambda w: (
+                len(w.queue) + (w.inflight_bs if w.free_at > now + 1e-9 else 0),
+                w.wid,
+            ),
+        )
+
+
+class SLOAwareDispatcher(Dispatcher):
+    """Earliest-estimated-completion routing (ramp-aware batch latency)."""
+
+    name = "slo_aware"
+
+    def pick(self, workers, req, now):
+        return min(workers, key=lambda w: (w.backlog_eta(now), w.wid))
+
+
+DISPATCHERS = {
+    d.name: d for d in (RoundRobinDispatcher, JSQDispatcher, SLOAwareDispatcher)
+}
+
+
+def get_dispatcher(name: str) -> Dispatcher:
+    try:
+        return DISPATCHERS[name]()
+    except KeyError:
+        raise ValueError(f"unknown dispatch strategy {name!r}; have {sorted(DISPATCHERS)}")
+
+
+class ClusterSimulator:
+    """N-worker discrete-event loop.
+
+    ``controllers`` — one per worker (each replica adapts independently),
+    or ``None`` for vanilla serving. The runner is shared: it is a pure
+    batch→records function, so replicas reuse its compile cache the way
+    replicas of one model reuse a compiled executable.
+    """
+
+    def __init__(self, profile, cluster: Optional[ClusterConfig] = None, runner=None,
+                 controllers: Optional[Sequence] = None):
+        cluster = cluster or ClusterConfig()
+        if cluster.n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {cluster.n_workers}")
+        if controllers is not None and len(controllers) != cluster.n_workers:
+            raise ValueError(
+                f"need one controller per worker: got {len(controllers)} "
+                f"for {cluster.n_workers} workers"
+            )
+        self.profile = profile
+        self.cfg = cluster
+        self.workers = [
+            Worker(i, profile, cluster.platform, runner,
+                   controllers[i] if controllers is not None else None)
+            for i in range(cluster.n_workers)
+        ]
+        self.dispatcher = get_dispatcher(cluster.dispatch)
+        self.makespan_ms = 0.0
+
+    def run(self, requests: List[Request]) -> List[Response]:
+        workers = self.workers
+        responses: List[Response] = []
+        i, n = 0, len(requests)
+        now = 0.0
+        while i < n or any(w.queue for w in workers):
+            # dispatch arrivals up to `now` (routing sees the state at arrival)
+            while i < n and requests[i].arrival_ms <= now + 1e-9:
+                self.dispatcher.pick(workers, requests[i], now).queue.append(requests[i])
+                i += 1
+            nxt = requests[i].arrival_ms if i < n else np.inf
+            # let every free worker with queued requests act at `now`
+            acted = False
+            for w in workers:
+                if not w.queue or now + 1e-9 < w.free_at:
+                    continue
+                batch = w.policy.form_batch(w.queue, now, nxt, w.exec_time)
+                if batch is None:
+                    continue
+                acted = True
+                if not batch:  # DROP sentinel: shed head-of-line request
+                    r = w.queue.pop(0)
+                    responses.append(
+                        Response(r.rid, now, -1, -1, now - r.arrival_ms, 0, True,
+                                 worker=w.wid, slo_ms=r.slo_ms)
+                    )
+                    continue
+                del w.queue[: len(batch)]
+                responses.extend(w.execute(batch, now))
+            if acted:
+                continue
+            # advance to the next decision point: arrival, a busy worker
+            # freeing up, or a waiting policy's timeout expiry
+            cand = [nxt]
+            for w in workers:
+                if not w.queue:
+                    continue
+                if now < w.free_at:
+                    cand.append(w.free_at)
+                else:
+                    cand.append(w.policy.next_wake(w.queue, now, nxt))
+            t = min(cand)
+            if not np.isfinite(t):
+                break  # defensive: nothing can ever progress
+            now = max(now, t)
+        self.makespan_ms = max([now] + [w.free_at for w in workers])
+        return responses
+
+    def worker_stats(self) -> Dict[int, Dict[str, float]]:
+        return {w.wid: w.stats() for w in self.workers}

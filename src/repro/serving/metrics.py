@@ -1,4 +1,5 @@
-"""Serving metrics: latency percentiles, throughput, accuracy-vs-original."""
+"""Serving metrics: latency percentiles, throughput, goodput (on-time
+completions/sec), accuracy-vs-original — per worker and cluster-wide."""
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Sequence
@@ -33,11 +34,52 @@ def summarize(
             else max(r.release_ms for r in ok) - min(0.0, min(r.release_ms for r in ok))
         )
         out["throughput_qps"] = len(ok) / max(span / 1000.0, 1e-9)
+        slo = np.asarray([r.slo_ms for r in ok])
+        if np.isfinite(slo).all():
+            on_time = lat <= slo + 1e-9
+            out["goodput_qps"] = float(on_time.sum()) / max(span / 1000.0, 1e-9)
+            # misses count drops too: a shed request is a violated SLO
+            out["slo_miss_rate"] = 1.0 - float(on_time.sum()) / max(len(responses), 1)
     if vanilla_labels is not None and ok:
         # accuracy = agreement with the original model's label (paper metric)
         agree = [r.label == vanilla_labels[r.rid] for r in ok]
         out["accuracy"] = float(np.mean(agree))
     return out
+
+
+def summarize_cluster(
+    responses: List[Response],
+    *,
+    vanilla_labels: Optional[np.ndarray] = None,
+    horizon_ms: Optional[float] = None,
+    n_workers: Optional[int] = None,
+) -> Dict[str, object]:
+    """Aggregate + per-worker summaries over one cluster run.
+
+    Per-worker throughput/goodput use the *shared* horizon (the cluster
+    run's span), so worker rates sum to the aggregate rate instead of
+    each worker normalizing by its own last release. Pass ``n_workers``
+    (the cluster size) explicitly — under light load an idle replica
+    answers nothing and would be invisible in the responses.
+    """
+    ok = [r for r in responses if not r.dropped]
+    span = (
+        horizon_ms
+        if horizon_ms is not None
+        else (max(r.release_ms for r in ok) - min(0.0, min(r.release_ms for r in ok)) if ok else None)
+    )
+    agg = summarize(responses, vanilla_labels=vanilla_labels, horizon_ms=span)
+    by_worker: Dict[int, List[Response]] = {}
+    for r in responses:
+        by_worker.setdefault(r.worker, []).append(r)
+    agg["n_workers"] = float(n_workers if n_workers is not None else len(by_worker))
+    return {
+        "aggregate": agg,
+        "workers": {
+            w: summarize(rs, vanilla_labels=vanilla_labels, horizon_ms=span)
+            for w, rs in sorted(by_worker.items())
+        },
+    }
 
 
 def savings_vs(base: Dict[str, float], ours: Dict[str, float]) -> Dict[str, float]:

@@ -1,4 +1,4 @@
-"""Discrete-event serving simulator.
+"""Discrete-event serving simulator (single-worker facade).
 
 Reproduces the serving-platform behaviors the paper runs atop:
 
@@ -12,24 +12,21 @@ Apparate runs ON TOP: batch execution calls the model runner once
 controller, and per-request *results* are released at their exit ramp's
 time offset (§3). Batch execution time = vanilla + active ramp overheads
 (the ramp-budget guarantee is directly visible in the tail latency).
+
+Batch formation lives in `repro.serving.policies`; the event loop lives
+in `repro.serving.cluster`. ``ServingSimulator`` is the 1-worker special
+case of ``ClusterSimulator`` (the paper's single-GPU setup) and keeps
+the original call signature.
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
-from typing import Callable, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.serving.cluster import ClusterConfig, ClusterSimulator, release_offset
+from repro.serving.policies import PlatformConfig  # noqa: F401  (re-export)
 from repro.serving.request import Request, Response
-
-
-@dataclasses.dataclass
-class PlatformConfig:
-    policy: str = "clockwork"  # 'clockwork' | 'tfserve'
-    max_batch_size: int = 16
-    batch_timeout_ms: float = 5.0
-    drop_on_slo_miss: bool = False  # clockwork drops hopeless requests
 
 
 class ServingSimulator:
@@ -56,95 +53,16 @@ class ServingSimulator:
     def _release_offset(self, site: int, bs: int, active: Sequence[int]) -> float:
         """Time into batch execution at which a result exiting at `site`
         leaves the platform."""
-        act = sorted(active)
-        ovh = 0.0
-        for s in act:
-            if s <= site:
-                ovh += self.profile.ramp_overhead(s, bs)
-        return self.profile.time_to_layer(self.profile.sites[site], bs) + ovh
+        return release_offset(self.profile, site, bs, active)
 
     def run(self, requests: List[Request]) -> List[Response]:
-        pf = self.pf
-        queue: List[Request] = []
-        responses: List[Response] = []
-        i = 0
-        n = len(requests)
-        now = 0.0
-        free_at = 0.0
-        while i < n or queue:
-            # admit arrivals up to `now`
-            while i < n and requests[i].arrival_ms <= now + 1e-9:
-                queue.append(requests[i])
-                i += 1
-            if not queue:
-                now = max(requests[i].arrival_ms, free_at) if i < n else now
-                continue
-            if now < free_at:
-                now = free_at
-                continue
-            batch = self._form_batch(queue, now, requests, i)
-            if batch is None:
-                # wait for more arrivals or timeout expiry
-                t_next = requests[i].arrival_ms if i < n else np.inf
-                t_tmo = queue[0].arrival_ms + pf.batch_timeout_ms
-                now = min(t_next, t_tmo)
-                continue
-            if not batch:  # dropped hopeless head-of-line request
-                r = queue.pop(0)
-                responses.append(Response(r.rid, now, -1, -1, now - r.arrival_ms, 0, True))
-                continue
-            bs = len(batch)
-            del queue[:bs]
-            t_exec = self.exec_time(bs)
-            free_at = now + t_exec
-            responses.extend(self._execute(batch, now, bs, t_exec))
-        return responses
-
-    def _form_batch(self, queue, now, requests, i) -> Optional[List[Request]]:
-        pf = self.pf
-        if pf.policy == "tfserve":
-            if len(queue) >= pf.max_batch_size:
-                return queue[: pf.max_batch_size]
-            oldest_wait = now - queue[0].arrival_ms
-            if oldest_wait + 1e-9 >= pf.batch_timeout_ms:
-                return queue[: pf.max_batch_size]
-            if i >= len(requests):  # no more arrivals: flush
-                return queue[: pf.max_batch_size]
-            return None
-        # clockwork: largest batch whose completion meets the earliest deadline
-        cap = min(len(queue), pf.max_batch_size)
-        for b in range(cap, 0, -1):
-            dl = min(q.arrival_ms + q.slo_ms for q in queue[:b])
-            if now + self.exec_time(b) <= dl + 1e-9:
-                return queue[:b]
-        if pf.drop_on_slo_miss:
-            return []  # sentinel: drop head-of-line
-        return queue[:1]  # serve anyway (degraded)
-
-    def _execute(self, batch: List[Request], start: float, bs: int, t_exec: float):
-        ctl = self.controller
-        out = []
-        if self.runner is None or ctl is None:
-            for r in batch:
-                out.append(
-                    Response(r.rid, start + t_exec, 0, -1, start + t_exec - r.arrival_ms, bs)
-                )
-            return out
-        items = np.asarray([r.item for r in batch])
-        active = sorted(ctl.active)
-        ramp_labels, ramp_unc, final_labels = self.runner.infer(items, active)
-        dec = ctl.observe(ramp_labels, ramp_unc, final_labels)
-        for j, r in enumerate(batch):
-            site = int(dec.exit_sites[j])
-            if site >= 0:
-                off = self._release_offset(site, bs, active)
-            else:
-                off = t_exec
-            rel = start + off
-            out.append(
-                Response(r.rid, rel, int(dec.released_labels[j]), site, rel - r.arrival_ms, bs)
-            )
-        return out
+        sim = ClusterSimulator(
+            self.profile,
+            ClusterConfig(n_workers=1, platform=self.pf),
+            runner=self.runner,
+            controllers=[self.controller] if self.controller is not None else None,
+        )
+        return sim.run(requests)
 
 
 def make_requests(arrivals: np.ndarray, slo_ms: float, items=None) -> List[Request]:

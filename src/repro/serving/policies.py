@@ -1,0 +1,111 @@
+"""Batching-policy strategy layer.
+
+The serving platforms the paper runs atop differ only in *batch
+formation*; everything else (queueing, execution, release) is shared.
+Each policy answers two questions for one worker:
+
+  * ``form_batch`` — given the worker's queue at time ``now``, either
+    return the batch to launch (a request list), the ``DROP`` sentinel
+    (clockwork sheds a hopeless head-of-line request), or ``None``
+    (keep waiting);
+  * ``next_wake`` — when waiting, the next instant at which the
+    decision could change (arrival or timeout expiry).
+
+Policies are pure and per-worker, so the N-worker cluster engine
+(`repro.serving.cluster`) instantiates one per worker and the 1-worker
+``ServingSimulator`` stays a special case of the same code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass
+class PlatformConfig:
+    policy: str = "clockwork"  # 'clockwork' | 'tfserve'
+    max_batch_size: int = 16
+    batch_timeout_ms: float = 5.0
+    drop_on_slo_miss: bool = False  # clockwork drops hopeless requests
+
+
+#: sentinel returned by ``form_batch``: drop the head-of-line request.
+DROP: List[Request] = []
+
+
+class BatchPolicy:
+    """One worker's batch-formation strategy."""
+
+    name = "base"
+
+    def __init__(self, cfg: PlatformConfig):
+        self.cfg = cfg
+
+    def form_batch(
+        self,
+        queue: List[Request],
+        now: float,
+        next_arrival_ms: float,
+        exec_time: Callable[[int], float],
+    ) -> Optional[List[Request]]:
+        raise NotImplementedError
+
+    def next_wake(self, queue: List[Request], now: float, next_arrival_ms: float) -> float:
+        """Earliest future time a waiting decision could change."""
+        return next_arrival_ms
+
+
+class TFServePolicy(BatchPolicy):
+    """Tunable ``max_batch_size`` / ``batch_timeout_ms`` knobs (paper Fig 3)."""
+
+    name = "tfserve"
+
+    def form_batch(self, queue, now, next_arrival_ms, exec_time):
+        cfg = self.cfg
+        if len(queue) >= cfg.max_batch_size:
+            return queue[: cfg.max_batch_size]
+        oldest_wait = now - queue[0].arrival_ms
+        if oldest_wait + 1e-9 >= cfg.batch_timeout_ms:
+            return queue[: cfg.max_batch_size]
+        if not np.isfinite(next_arrival_ms):  # no more arrivals: flush
+            return queue[: cfg.max_batch_size]
+        return None
+
+    def next_wake(self, queue, now, next_arrival_ms):
+        return min(next_arrival_ms, queue[0].arrival_ms + self.cfg.batch_timeout_ms)
+
+
+class ClockworkPolicy(BatchPolicy):
+    """Work-conserving, SLO-aware max-batch selection with drop-on-miss
+    (paper §2.1): the largest batch whose completion meets the earliest
+    deadline among its members."""
+
+    name = "clockwork"
+
+    def form_batch(self, queue, now, next_arrival_ms, exec_time):
+        cfg = self.cfg
+        cap = min(len(queue), cfg.max_batch_size)
+        for b in range(cap, 0, -1):
+            dl = min(q.arrival_ms + q.slo_ms for q in queue[:b])
+            if now + exec_time(b) <= dl + 1e-9:
+                return queue[:b]
+        if cfg.drop_on_slo_miss:
+            return DROP  # shed hopeless head-of-line request
+        return queue[:1]  # serve anyway (degraded)
+
+
+POLICIES = {
+    TFServePolicy.name: TFServePolicy,
+    ClockworkPolicy.name: ClockworkPolicy,
+}
+
+
+def get_policy(cfg: PlatformConfig) -> BatchPolicy:
+    try:
+        return POLICIES[cfg.policy](cfg)
+    except KeyError:
+        raise ValueError(f"unknown platform policy {cfg.policy!r}; have {sorted(POLICIES)}")

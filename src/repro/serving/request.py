@@ -22,3 +22,5 @@ class Response:
     latency_ms: float
     batch_size: int
     dropped: bool = False
+    worker: int = 0  # serving replica that handled the request
+    slo_ms: float = float("nan")  # copied from the request (goodput accounting)

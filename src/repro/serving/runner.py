@@ -23,6 +23,42 @@ def _bucket(n: int) -> int:
     return b
 
 
+class SyntheticRunner:
+    """Profile-only serving: deterministic ramp records without a model.
+
+    A fixed fraction of items is "easy" — confidently predictable from
+    ``exit_site`` onward — so controllers activate ramps and exit traffic
+    exactly as with a trained model, at zero model cost. Used by the
+    scale-out demos/benchmarks where training one model per replica-count
+    sweep would dominate runtime.
+    """
+
+    def __init__(self, n_sites: int, exit_site: int, easy_frac: float = 0.7,
+                 n_classes: int = 17):
+        self.n_sites = n_sites
+        self.exit_site = exit_site
+        self.easy_frac = easy_frac
+        self.n_classes = n_classes
+
+    def infer(self, items: np.ndarray, active: Sequence[int]):
+        items = np.asarray(items)
+        k = len(active)
+        B = len(items)
+        final = (items % self.n_classes).astype(np.int64)
+        easy = (items % 100) < self.easy_frac * 100
+        labels = np.tile(final, (max(k, 1), 1))
+        unc = np.full((max(k, 1), B), 0.9, np.float32)
+        for j, s in enumerate(sorted(active)):
+            if s >= self.exit_site:
+                unc[j] = np.where(easy, 0.02, 0.9)
+        if k == 0:
+            return labels[:0], unc[:0], final
+        return labels[:k], unc[:k], final
+
+    def vanilla_labels(self, n: int) -> np.ndarray:
+        return np.arange(n, dtype=np.int64) % self.n_classes
+
+
 class ClassifierRunner:
     """ResNet / BERT-style classifier serving (the paper's workloads)."""
 

@@ -1,8 +1,12 @@
 """Apparate core: exit evaluation, Algorithm-1 tuner, ramp adjustment,
-controller — including hypothesis property tests on EE invariants."""
+controller — including seeded-numpy property tests on EE invariants.
+
+The property tests draw their cases from a module-level seeded generator
+(stdlib + numpy + pytest only — no `hypothesis`): every run sees the same
+case set, and each case shows up as its own parametrized test id.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.core import (
@@ -21,6 +25,21 @@ from repro.core.ramp_adjust import adjust_ramps
 
 PROF = build_profile(get_config("gpt2-medium"), mode="decode", chips=1)
 NS = len(PROF.sites)
+
+_case_rng = np.random.default_rng(20240731)
+
+# 30 random draws + deterministic edge cases (threshold bounds, first/last site)
+MONO_CASES = [
+    (int(_case_rng.integers(0, 101)), int(_case_rng.integers(0, NS)),
+     float(_case_rng.random()), float(_case_rng.random()))
+    for _ in range(30)
+] + [(0, 0, 0.0, 1.0), (0, NS - 1, 0.0, 1.0), (7, NS // 2, 0.5, 0.5)]
+
+ACC_MONO_CASES = [
+    (int(_case_rng.integers(0, 51)), int(_case_rng.integers(0, NS)),
+     float(0.1 + 0.9 * _case_rng.random()))
+    for _ in range(20)
+] + [(0, 0, 1.0), (0, NS - 1, 0.1)]
 
 
 def synth_window(n=256, n_sites=NS, seed=0, difficulty=0.5, active=None):
@@ -59,13 +78,7 @@ def test_zero_thresholds_no_exits():
     assert ev.accuracy >= 0.99
 
 
-@settings(max_examples=30, deadline=None)
-@given(
-    seed=st.integers(0, 100),
-    site=st.integers(0, NS - 1),
-    t1=st.floats(0, 1),
-    t2=st.floats(0, 1),
-)
+@pytest.mark.parametrize("seed,site,t1,t2", MONO_CASES)
 def test_monotonicity_property(seed, site, t1, t2):
     """Paper §3.2: raising any single threshold monotonically increases exit
     rate & latency savings. (Accuracy monotonicity is statistical — paper
@@ -83,8 +96,7 @@ def test_monotonicity_property(seed, site, t1, t2):
     assert eb.mean_saved_ms >= ea.mean_saved_ms - 1e-9
 
 
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 50), site=st.integers(0, NS - 1), hi=st.floats(0.1, 1))
+@pytest.mark.parametrize("seed,site,hi", ACC_MONO_CASES)
 def test_accuracy_monotone_on_monotone_windows(seed, site, hi):
     """When per-sample correctness is monotone in depth (later ramps at
     least as correct), raising thresholds never raises accuracy."""
@@ -110,12 +122,14 @@ def test_accuracy_monotone_on_monotone_windows(seed, site, hi):
 # -- threshold tuning ---------------------------------------------------------
 
 
-def test_tuner_meets_constraint():
-    for seed in range(4):
-        wd = synth_window(seed=seed, difficulty=0.6)
-        res = tune_thresholds(wd, list(range(NS)), PROF, n_sites=NS, acc_constraint=0.99)
-        assert res.accuracy >= 0.99 - 1e-9
-        assert res.savings_ms >= 0 or np.all(res.thresholds == 0)
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("difficulty", [0.3, 0.6])
+def test_tuner_meets_constraint(seed, difficulty):
+    """The tuner never violates `acc_constraint` on its tune window."""
+    wd = synth_window(seed=seed, difficulty=difficulty)
+    res = tune_thresholds(wd, list(range(NS)), PROF, n_sites=NS, acc_constraint=0.99)
+    assert res.accuracy >= 0.99 - 1e-9
+    assert res.savings_ms >= 0 or np.all(res.thresholds == 0)
 
 
 def test_tuner_vs_grid_quality_and_speed():
@@ -168,8 +182,9 @@ def test_adjust_deactivates_negative():
         assert 1 not in res.active or 9 not in res.active
 
 
-def test_adjust_budget_respected():
-    wd = synth_window(seed=0, difficulty=0.2)
+@pytest.mark.parametrize("seed", range(4))
+def test_adjust_budget_respected(seed):
+    wd = synth_window(seed=seed, difficulty=0.2)
     thr = np.full(NS, 0.6, np.float32)
     res = adjust_ramps(
         wd, list(range(NS)), thr, PROF, n_sites=NS, acc_constraint=0.9,
@@ -183,7 +198,7 @@ def test_adjust_budget_respected():
 # -- controller ---------------------------------------------------------------
 
 
-def _drive(ctl, n_steps, difficulty, seed=0, B=8):
+def _drive(ctl, n_steps, difficulty, seed=0, B=8, budget_probe=None):
     rng = np.random.default_rng(seed)
     accs = []
     for _ in range(n_steps):
@@ -199,6 +214,8 @@ def _drive(ctl, n_steps, difficulty, seed=0, B=8):
             unc[j] = np.clip(difficulty * (1 - frac) + rng.normal(0, 0.08, B), 0, 1)
         dec = ctl.observe(labels[:K] if K else labels[:0], unc[:K] if K else unc[:0], final)
         accs.append(np.mean(dec.released_labels == final))
+        if budget_probe is not None:
+            budget_probe(ctl)
     return np.asarray(accs)
 
 
@@ -210,6 +227,21 @@ def test_controller_maintains_accuracy_through_drift():
     assert a2[50:].mean() >= 0.96, a2[50:].mean()
     assert ctl.stats["tunes"] > 0
     assert ctl.stats["adjusts"] > 0
+
+
+@pytest.mark.parametrize("seed,difficulty", [(0, 0.2), (1, 0.5), (2, 0.8)])
+def test_controller_budget_invariant_under_drive(seed, difficulty):
+    """Ramp budget holds at every step of the adaptation loop, not just at
+    init: Σ ramp-overhead ≤ ramp_budget_frac · vanilla latency."""
+    cfg = ControllerConfig(max_slots=6, ramp_budget_frac=0.02)
+    ctl = ApparateController(NS, PROF, cfg)
+    lim = cfg.ramp_budget_frac * PROF.vanilla_time(1) + 1e-9
+
+    def probe(c):
+        assert c.total_ramp_overhead(1) <= lim
+
+    _drive(ctl, 120, difficulty, seed=seed, budget_probe=probe)
+    assert ctl.stats["samples"] == 120 * 8
 
 
 def test_controller_initial_state_no_exits():

@@ -42,7 +42,8 @@ def test_moe_ep_matches_dense_on_mesh():
         from repro.configs import get_tiny
         from repro.models import build_model
         from repro.models.layers import MeshAxes
-        mesh = jax.make_mesh((2, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 2), ("data", "model"))
         axes = MeshAxes(data=("data",), model="model", fsdp=True)
         cfg = get_tiny("qwen3-moe-30b-a3b").replace(capacity_factor=8.0)
         m = build_model(cfg)
@@ -63,7 +64,8 @@ def test_moe_ep_small_batch_decode():
         from repro.configs import get_tiny
         from repro.models import build_model
         from repro.models.layers import MeshAxes
-        mesh = jax.make_mesh((2, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 2), ("data", "model"))
         axes = MeshAxes(data=("data",), model="model", fsdp=False)
         cfg = get_tiny("qwen3-moe-30b-a3b").replace(capacity_factor=8.0)
         m = build_model(cfg)
@@ -82,7 +84,8 @@ def test_gradient_compression_and_pipeline():
     run_sub("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.distributed import make_compressed_grad_allreduce, pipeline_apply
-        mesh = jax.make_mesh((2, 2), ("pod", "data"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 2), ("pod", "data"))
         g = {"w": jax.random.normal(jax.random.PRNGKey(0), (33, 17)), "b": jnp.ones((5,))}
         r = jax.tree.map(jnp.zeros_like, g)
         out, res = make_compressed_grad_allreduce(mesh, "pod")(g, r)
@@ -90,7 +93,7 @@ def test_gradient_compression_and_pipeline():
             np.testing.assert_allclose(np.asarray(out[k]), np.asarray(g[k]*2), atol=0.06, rtol=0.02)
         # error feedback: residual holds the quantization error
         assert float(sum(jnp.sum(jnp.abs(x)) for x in jax.tree.leaves(res))) > 0
-        mesh2 = jax.make_mesh((4,), ("stage",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh2 = make_mesh((4,), ("stage",))
         W = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 16)) * 0.3
         x = jax.random.normal(jax.random.PRNGKey(2), (6, 3, 16))
         y = pipeline_apply(mesh2, "stage", lambda p, h: jnp.tanh(h @ p), W, x)
@@ -114,7 +117,8 @@ def test_mini_dryrun_multidev():
                            d_ff=128, vocab_size=2048, dtype="float32"))
         # shrink the batch via rebuilt abstracts is overkill; just compile
         compiled = jax.jit(fn, donate_argnums=donate).lower(*args).compile()
-        ca = compiled.cost_analysis()
+        from repro.compat import cost_analysis
+        ca = cost_analysis(compiled)
         assert ca.get("flops", 0) > 0
         cb = DR.collective_bytes(compiled.as_text())
         print("mini dryrun OK", sum(cb["bytes"].values()))
@@ -127,13 +131,14 @@ def test_elastic_restore_across_meshes():
         import jax, jax.numpy as jnp, numpy as np, tempfile
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.checkpoint import CheckpointManager
-        mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ("data",))
         x = jnp.arange(64.0).reshape(8, 8)
         xs = jax.device_put(x, NamedSharding(mesh, P("data", None)))
         d = tempfile.mkdtemp()
         mgr = CheckpointManager(d)
         mgr.save({"w": xs}, step=1)
-        mesh2 = jax.make_mesh((2, 2), ("a", "b"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh2 = make_mesh((2, 2), ("a", "b"))
         tree = mgr.restore(1, sharding_tree={"w": NamedSharding(mesh2, P("b", "a"))})
         np.testing.assert_array_equal(np.asarray(tree["w"]), np.asarray(x))
         print("elastic OK")

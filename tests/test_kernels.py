@@ -1,4 +1,9 @@
-"""Per-kernel shape/dtype sweeps vs pure-jnp oracles (interpret mode)."""
+"""Per-kernel shape/dtype sweeps vs pure-jnp oracles (interpret mode).
+
+The full sweeps are `slow` (interpret-mode Pallas is seconds per case on
+CPU; opt in with `-m slow`); tier-1 keeps one smallest-shape smoke per
+kernel so the Pallas path is always exercised.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,6 +19,42 @@ from repro.kernels.ramp_head import (
 from repro.kernels.ssd import ssd_chunked, ssd_chunked_ref
 
 
+def test_kernels_smoke_interpret():
+    """Tier-1 smoke: every Pallas kernel once, smallest shape, vs oracle."""
+    h = jax.random.normal(jax.random.PRNGKey(0), (4, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 512)) * 0.05
+    out_k = ramp_head_stats(h, w, interpret=True, block_v=256)
+    out_r = ramp_head_stats_ref(h, w)
+    assert (np.asarray(out_k[3]) == np.asarray(out_r[3])).all()
+    np.testing.assert_allclose(np.asarray(out_k[0]), np.asarray(out_r[0]), rtol=3e-3, atol=3e-3)
+
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 2, 32, 16))
+    k = jax.random.normal(ks[1], (1, 2, 32, 16))
+    v = jax.random.normal(ks[2], (1, 2, 32, 16))
+    o_k = flash_attention(q, k, v, causal=True, block_q=16, block_k=16, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(o_k), np.asarray(attention_ref(q, k, v, causal=True)), rtol=2e-5, atol=2e-5
+    )
+    o_k = decode_attention(q[:, :, 0], k, v, jnp.int32(10), block_s=16, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(o_k), np.asarray(decode_attention_ref(q[:, :, 0], k, v, jnp.int32(10))),
+        rtol=2e-5, atol=2e-5,
+    )
+
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (1, 1, 32, 8))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 1, 32)))
+    A = -jnp.exp(jax.random.normal(ks[2], (1,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (1, 32, 4)) * 0.5
+    Cm = jax.random.normal(ks[4], (1, 32, 4)) * 0.5
+    yk, sk = ssd_chunked(x, dt, A, Bm, Cm, chunk=8, interpret=True)
+    yr, sr = ssd_chunked_ref(x, dt, A, Bm, Cm, chunk=8)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize(
     "B,d,V,dt,bv",
     [
@@ -49,6 +90,7 @@ def test_ramp_head_confidence_semantics():
     np.testing.assert_allclose(np.asarray(entropy), np.asarray(href), rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize(
     "B,H,KH,Sq,Sk,hd,causal,window,dt",
     [
@@ -71,6 +113,7 @@ def test_flash_attention(B, H, KH, Sq, Sk, hd, causal, window, dt):
     )
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize(
     "B,H,S,hp,N,ck", [(2, 3, 64, 16, 8, 16), (1, 2, 128, 32, 16, 32), (1, 1, 32, 8, 4, 8)]
 )
@@ -112,6 +155,7 @@ def test_ssd_ref_matches_naive_recurrence():
     np.testing.assert_allclose(np.asarray(st), h, rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize(
     "B,H,KH,S,hd,pos",
     [(2, 4, 2, 128, 32, 63), (1, 8, 8, 256, 16, 255), (2, 4, 1, 64, 64, 10)],

@@ -7,6 +7,7 @@ from repro.core import ApparateController, ControllerConfig, build_profile
 from repro.serving import (
     PlatformConfig,
     ServingSimulator,
+    SyntheticRunner,
     make_requests,
     maf_trace,
     summarize,
@@ -61,25 +62,6 @@ def test_clockwork_slo_awareness():
     assert len(viol) / max(len(served), 1) < 0.02
 
 
-class FakeRunner:
-    """Deterministic ramp records: easy items exit at site `site`."""
-
-    def __init__(self, site, n_sites, easy_frac=0.7):
-        self.site, self.n_sites, self.easy = site, n_sites, easy_frac
-
-    def infer(self, items, active):
-        k = len(active)
-        B = len(items)
-        final = items % 17
-        easy = (items % 10) < self.easy * 10
-        labels = np.tile(final, (k, 1))
-        unc = np.ones((k, B), np.float32) * 0.9
-        for j, s in enumerate(sorted(active)):
-            if s >= self.site:
-                unc[j] = np.where(easy, 0.02, 0.9)
-        return labels.astype(np.int64), unc, final.astype(np.int64)
-
-
 def test_apparate_preserves_throughput_and_cuts_latency():
     """The paper's headline: same batches, lower response latency, tail
     within the ramp budget."""
@@ -90,7 +72,7 @@ def test_apparate_preserves_throughput_and_cuts_latency():
     base = summarize(ServingSimulator(PROF, pf).run(reqs))
     ns = len(PROF.sites)
     ctl = ApparateController(ns, PROF, ControllerConfig(max_slots=4, ramp_budget_frac=0.02))
-    sim = ServingSimulator(PROF, pf, FakeRunner(site=4, n_sites=ns), ctl)
+    sim = ServingSimulator(PROF, pf, SyntheticRunner(ns, exit_site=4), ctl)
     ours = summarize(sim.run(reqs))
     assert ours["exit_rate"] > 0.2
     assert ours["p50_ms"] < base["p50_ms"]  # latency wins
