@@ -318,6 +318,57 @@ def bench_scaleout_goodput():
              f"goodput_qps={m.get('goodput_qps', 0.0):.1f}")
 
 
+# ---------------------------------------------- generative decode (Table 4)
+
+
+def bench_generative_tpt():
+    """Generative decode: median time-per-token with per-token Apparate
+    exits vs the no-EE baseline at the same accuracy constraint (>=0.99
+    agreement), KV catch-up charged (paper §5 Table 4: 22.6–77.9% TPT
+    wins). Swept over easy-traffic fractions; the profile pays the
+    full-vocab token head (n_classes=0) with LM-head-tied ramps."""
+    from repro.configs import get_config
+    from repro.core import ApparateController, ControllerConfig, build_profile
+    from repro.serving import (
+        GenerativeConfig,
+        GenerativeEngine,
+        SyntheticDecodeRunner,
+        make_gen_requests,
+        maf_trace,
+        offered_decode_qps,
+        summarize_generative,
+    )
+
+    prof = build_profile(
+        get_config("gpt2-medium").replace(n_classes=0, ramp_style="tied"),
+        mode="decode", chips=1, charge_kv=True,
+    )
+    ns = len(prof.sites)
+    mbs, tokens = 8, 24
+    qps = offered_decode_qps(prof, max_batch_size=mbs, tokens_per_request=tokens, load=0.6)
+    arr = maf_trace(200, mean_qps=qps, seed=3)
+    reqs = make_gen_requests(arr, n_tokens=tokens, prompt_len=128,
+                             slo_ms=3 * prof.vanilla_time(1))
+    gcfg = GenerativeConfig(max_batch_size=mbs)
+    base_eng = GenerativeEngine(prof, gcfg)
+    mb = summarize_generative(base_eng.run(reqs), horizon_ms=base_eng.makespan_ms)
+    emit("gen_tpt_vanilla_p50", mb["tpt_p50_ms"] * 1e3,
+         f"tokens_per_sec={mb['tokens_per_sec']:.0f}")
+    for easy in (0.5, 0.7, 0.9):
+        ctl = ApparateController(ns, prof, ControllerConfig(max_slots=4, acc_constraint=0.99))
+        eng = GenerativeEngine(
+            prof, gcfg, SyntheticDecodeRunner(ns, exit_site=ns // 3, easy_frac=easy), ctl
+        )
+        mo = summarize_generative(eng.run(reqs), horizon_ms=eng.makespan_ms)
+        win = 100 * (mb["tpt_p50_ms"] - mo["tpt_p50_ms"]) / mb["tpt_p50_ms"]
+        emit(
+            f"gen_tpt_easy{int(easy * 100)}_p50",
+            mo["tpt_p50_ms"] * 1e3,
+            f"win_pct={win:.1f};agree={mo['agreement']:.3f};"
+            f"exit_rate={mo['exit_rate']:.2f};kv_ms={eng.kv_ms:.1f}",
+        )
+
+
 # ------------------------------------------------------------------ kernels
 
 
@@ -376,6 +427,7 @@ ALL = [
     bench_table4_platforms,
     bench_fig17_slo,
     bench_scaleout_goodput,
+    bench_generative_tpt,
     bench_kernels,
 ]
 

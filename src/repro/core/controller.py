@@ -80,10 +80,17 @@ class ApparateController:
 
     def uncertainty(self, stats: dict) -> np.ndarray:
         if self.cfg.metric == "entropy":
-            # normalized entropy in [0, 1]
-            return np.asarray(stats["entropy"]) / np.log(
-                max(float(stats.get("n_classes", np.e ** np.asarray(stats["entropy"]).max() + 1)), 2.0)
-            )
+            # normalized entropy in [0, 1]: H / log(n_classes). The class
+            # count must come from the caller — inferring it from the
+            # observed entropy can under-estimate the normalizer and yield
+            # uncertainties > 1 (thresholds in [0,1] then never preclude
+            # exiting on those records).
+            if "n_classes" not in stats:
+                raise KeyError(
+                    "entropy metric requires 'n_classes' in the stats dict "
+                    "(normalizer log(n_classes))"
+                )
+            return np.asarray(stats["entropy"]) / np.log(max(float(stats["n_classes"]), 2.0))
         return 1.0 - np.asarray(stats["maxprob"])
 
     def observe(

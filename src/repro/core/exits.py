@@ -35,9 +35,18 @@ class RecordWindow:
         self.count = 0  # total samples ever observed
 
     def append(self, sites: Sequence[int], unc: np.ndarray, correct: np.ndarray):
-        """sites: (K,) site indices; unc/correct: (K, B)."""
+        """sites: (K,) site indices; unc/correct: (K, B).
+
+        When ``B > capacity`` only the newest ``capacity`` samples can
+        survive; keep exactly those (``(ptr + arange(B)) % capacity``
+        would produce duplicate ring indices, corrupting row order while
+        ``count`` silently advanced past the write)."""
         B = unc.shape[1]
-        idx = (self.ptr + np.arange(B)) % self.capacity
+        keep = min(B, self.capacity)
+        if keep < B:
+            unc = unc[:, B - keep:]
+            correct = correct[:, B - keep:]
+        idx = (self.ptr + np.arange(keep)) % self.capacity
         self.unc[idx] = np.nan
         self.correct[idx] = False
         self.valid[idx] = False
@@ -45,7 +54,7 @@ class RecordWindow:
             self.unc[idx, s] = unc[j]
             self.correct[idx, s] = correct[j]
             self.valid[idx, s] = True
-        self.ptr = int((self.ptr + B) % self.capacity)
+        self.ptr = int((self.ptr + keep) % self.capacity)
         self.count += B
 
     def last(self, n: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:

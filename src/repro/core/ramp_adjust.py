@@ -130,6 +130,10 @@ def adjust_ramps(
     # low-risk earlier-ramp probing
     if not act:
         mid = n_sites // 2
+        if not _within_budget(profile, [mid], budget_frac, bs):
+            # even one mid ramp busts the budget (e.g. untied full-vocab
+            # heads): stay ramp-less rather than violate the guarantee
+            return AdjustResult([], thr, [], [], utils, "noop")
         thr[mid] = 0.0
         return AdjustResult([mid], thr, [], [mid], utils, "bootstrap")
     best_site = max(act, key=lambda s: utils[s])

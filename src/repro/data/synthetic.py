@@ -135,6 +135,41 @@ def make_token_stream(
     return Stream(data, labels, diff)
 
 
+def make_decode_stream(
+    n: int,
+    *,
+    seq_len: int = 24,
+    vocab: int = 512,
+    predict: float = 0.9,
+    shift: int = 17,
+    mode: str = "nlp",
+    seed: int = 0,
+) -> Stream:
+    """Prompts for generative decode serving: Markov chains where token
+    ``t+1 = t + shift (mod vocab)`` with per-position probability scaled by
+    the stream's difficulty process, else a uniform noise token.
+
+    The transition needs only the *current* token, so both the final head
+    and mid-depth ramps of a briefly-trained tiny LM learn it — easy
+    (predictable) decode steps become confidently exitable while noisy
+    steps stay uncertain: the generative analogue of the paper's easy/hard
+    traffic mix. ``difficulty`` follows the same drift process as the
+    classification streams, so controllers see regime shifts here too."""
+    rng = np.random.default_rng(seed)
+    diff = _difficulty_process(n, mode=mode, rng=rng)
+    p = np.clip(predict * (1.0 - 0.7 * diff), 0.05, 1.0)
+    data = np.empty((n, seq_len), np.int64)
+    for i in range(n):
+        x = int(rng.integers(1, vocab))
+        for t in range(seq_len):
+            data[i, t] = x
+            if rng.random() < p[i]:
+                x = 1 + (x - 1 + shift) % (vocab - 1)
+            else:
+                x = int(rng.integers(1, vocab))
+    return Stream(data, np.zeros(n, np.int64), diff)
+
+
 # ---------------------------------------------------------------------------
 # deterministic resumable LM token pipeline (training substrate)
 

@@ -2,15 +2,38 @@ from repro.serving.arrivals import maf_trace, video_trace
 from repro.serving.cluster import (
     ClusterConfig,
     ClusterSimulator,
+    MixedClusterSimulator,
     Worker,
     get_dispatcher,
     release_offset,
 )
-from repro.serving.metrics import savings_vs, summarize, summarize_cluster
+from repro.serving.generative import (
+    GenerativeConfig,
+    GenerativeEngine,
+    offered_decode_qps,
+)
+from repro.serving.metrics import (
+    savings_vs,
+    summarize,
+    summarize_cluster,
+    summarize_generative,
+)
 from repro.serving.platform import PlatformConfig, ServingSimulator, make_requests
 from repro.serving.policies import BatchPolicy, get_policy
-from repro.serving.request import Request, Response
-from repro.serving.runner import ClassifierRunner, LMTokenRunner, SyntheticRunner
+from repro.serving.request import (
+    GenRequest,
+    GenResponse,
+    Request,
+    Response,
+    make_gen_requests,
+)
+from repro.serving.runner import (
+    ClassifierRunner,
+    DecodeRunner,
+    LMTokenRunner,
+    SyntheticDecodeRunner,
+    SyntheticRunner,
+)
 
 __all__ = [
     "maf_trace",
@@ -18,19 +41,29 @@ __all__ = [
     "savings_vs",
     "summarize",
     "summarize_cluster",
+    "summarize_generative",
     "PlatformConfig",
     "ServingSimulator",
     "ClusterConfig",
     "ClusterSimulator",
+    "MixedClusterSimulator",
+    "GenerativeConfig",
+    "GenerativeEngine",
+    "offered_decode_qps",
     "Worker",
     "get_dispatcher",
     "release_offset",
     "BatchPolicy",
     "get_policy",
     "make_requests",
+    "make_gen_requests",
     "Request",
     "Response",
+    "GenRequest",
+    "GenResponse",
     "ClassifierRunner",
+    "DecodeRunner",
     "LMTokenRunner",
     "SyntheticRunner",
+    "SyntheticDecodeRunner",
 ]

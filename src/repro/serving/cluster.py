@@ -255,3 +255,57 @@ class ClusterSimulator:
 
     def worker_stats(self) -> Dict[int, Dict[str, float]]:
         return {w.wid: w.stats() for w in self.workers}
+
+
+class MixedClusterSimulator:
+    """Heterogeneous replica pools in one cluster: classification workers
+    (a ``ClusterSimulator``) + generative decode replicas
+    (``GenerativeEngine`` duck type from ``repro.serving.generative``)
+    behind one frontend — the ROADMAP's CV/NLP/generative mixture.
+
+    Replicas share nothing: a generative replica holds an LM plus its KV
+    slots, a classification replica its classifier, and the frontend
+    splits the mixed request stream by kind at arrival. Because no state
+    crosses the pools, simulating each pool independently is *exact* for
+    the mixture, not an approximation.
+
+    Generative dispatch is arrival-order greedy on outstanding token work
+    (the decode analogue of join-shortest-queue: queued tokens, not queued
+    requests, measure a generative replica's backlog).
+    """
+
+    def __init__(self, cls_sim: Optional[ClusterSimulator] = None,
+                 gen_engines: Sequence = ()):
+        if cls_sim is None and not gen_engines:
+            raise ValueError("need at least one pool (cls_sim or gen_engines)")
+        self.cls_sim = cls_sim
+        self.gen_engines = list(gen_engines)
+        self.makespan_ms = 0.0
+
+    def run(self, cls_requests: Sequence[Request] = (), gen_requests: Sequence = ()):
+        """Returns (classification Responses, GenResponses)."""
+        if cls_requests and self.cls_sim is None:
+            raise ValueError("classification requests but no classification pool")
+        if gen_requests and not self.gen_engines:
+            raise ValueError("generative requests but no generative pool")
+        cls_resp: List[Response] = (
+            self.cls_sim.run(list(cls_requests)) if cls_requests else []
+        )
+        buckets: List[list] = [[] for _ in self.gen_engines]
+        load = [0.0] * len(self.gen_engines)
+        for r in sorted(gen_requests, key=lambda q: (q.arrival_ms, q.rid)):
+            k = min(range(len(load)), key=lambda j: (load[j], j))
+            buckets[k].append(r)
+            load[k] += r.n_tokens
+        gen_resp: List = []
+        for k, eng in enumerate(self.gen_engines):
+            rs = eng.run(buckets[k])
+            for r in rs:
+                r.worker = k
+            gen_resp.extend(rs)
+        gen_resp.sort(key=lambda r: r.rid)
+        spans = [eng.makespan_ms for eng in self.gen_engines]
+        if self.cls_sim is not None and cls_requests:
+            spans.append(self.cls_sim.makespan_ms)
+        self.makespan_ms = max(spans) if spans else 0.0
+        return cls_resp, gen_resp

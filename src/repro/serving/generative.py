@@ -1,0 +1,208 @@
+"""Generative autoregressive decode serving (paper §5, Table 4).
+
+Discrete-event engine over decode *steps*: each request is a
+(prompt, n_tokens) pair that occupies one continuous-batching slot from
+admission until its last token; finished requests free their slot
+mid-run, and queued requests join at the next step boundary (slot-based
+continuous batching).
+
+Every step consults the replica's ``ApparateController`` with one ramp
+record per in-flight token. A token that exits at ramp ``s``:
+
+  * releases early within the step (the client sees it at its exit
+    offset, not at step end);
+  * lets the per-layer batch shrink — deeper layers run with fewer
+    tokens, and a layer with zero alive tokens is skipped entirely
+    (``LatencyProfile.decode_step_time``), which is where the paper's
+    22.6–77.9% median time-per-token wins come from;
+  * still owes the deeper layers its KV / recurrent state so FUTURE
+    tokens can attend to it — the paper's hidden-state catch-up. That
+    deferred ``kv_fill_cost`` is amortized into the NEXT decode step
+    (grouped by exit site so weight traffic amortizes across the step's
+    exits). Exits are never free; a request's LAST token owes nothing.
+
+TTFT = queue wait + prefill; per-token TPT = successive release deltas —
+the split `summarize_generative` reports.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.cluster import release_offset
+from repro.serving.request import GenRequest, GenResponse
+
+
+@dataclasses.dataclass
+class GenerativeConfig:
+    max_batch_size: int = 8  # continuous-batching decode slots
+    # prefill cost per prompt token relative to a bs=1 decode step: prefill
+    # is compute-dense (weights amortize over the whole prompt), so a prompt
+    # token costs a fraction of a memory-bound decode step. Overridable per
+    # engine via ``prefill_ms``.
+    prefill_frac: float = 0.3
+
+
+def offered_decode_qps(profile, *, max_batch_size: int, tokens_per_request: int,
+                       load: float) -> float:
+    """Request arrival rate (req/s) offering ``load`` of one generative
+    replica's decode capacity: a fully-batched replica retires one request
+    per ``tokens_per_request`` steps at the batched step time (batching
+    amortizes memory-bound decode — sizing from ``vanilla_time(1)`` would
+    look ~max_batch_size times lighter than intended)."""
+    step = profile.vanilla_time(max_batch_size)
+    return load * max_batch_size * 1000.0 / (tokens_per_request * step)
+
+
+class GenerativeEngine:
+    """One generative serving replica (the decode analogue of ``Worker``).
+
+    ``runner``/``controller`` may both be None for the vanilla (no-EE)
+    baseline: identical admission and batching, every token runs to
+    completion, no ramp overhead, no KV catch-up.
+    """
+
+    def __init__(
+        self,
+        profile,
+        cfg: Optional[GenerativeConfig] = None,
+        runner=None,
+        controller=None,
+        *,
+        wid: int = 0,
+        prefill_ms: Optional[Callable[[int], float]] = None,
+    ):
+        self.profile = profile
+        self.cfg = cfg or GenerativeConfig()
+        if self.cfg.max_batch_size < 1:
+            raise ValueError(f"max_batch_size must be >= 1, got {self.cfg.max_batch_size}")
+        if (runner is None) != (controller is None):
+            raise ValueError("runner and controller must be supplied together (or neither)")
+        self.runner = runner
+        self.controller = controller
+        self.wid = wid
+        self.prefill_ms = prefill_ms or (
+            lambda plen: plen * self.cfg.prefill_frac * profile.vanilla_time(1)
+        )
+        # run stats
+        self.makespan_ms = 0.0
+        self.busy_ms = 0.0
+        self.kv_ms = 0.0  # total deferred KV catch-up paid
+        self.n_steps = 0
+        self.n_tokens = 0
+        self.peak_slots = 0
+        self.slot_history: List[int] = []  # per-step batch sizes
+
+    # -- event loop ----------------------------------------------------------
+
+    def run(self, requests: Sequence[GenRequest]) -> List[GenResponse]:
+        reqs = sorted(requests, key=lambda r: (r.arrival_ms, r.rid))
+        queue: deque = deque()
+        slots: Dict[int, dict] = {}  # slot id -> {req, resp}
+        free = list(range(self.cfg.max_batch_size))
+        responses: List[GenResponse] = []
+        now, i, n = 0.0, 0, len(reqs)
+        pending_kv = 0.0
+
+        def finish(sid: int):
+            sl = slots.pop(sid)
+            free.append(sid)
+            free.sort()
+            if self.runner is not None:
+                self.runner.free(sid)
+            responses.append(sl["resp"])
+
+        while i < n or queue or slots:
+            while i < n and reqs[i].arrival_ms <= now + 1e-9:
+                queue.append(reqs[i])
+                i += 1
+            if not slots and not queue:
+                now = max(now, reqs[i].arrival_ms)  # idle: jump to next arrival
+                continue
+            # admit queued requests into free slots (FCFS, step boundary);
+            # their prefills run before this step's decode launch
+            while queue and free:
+                r = queue.popleft()
+                sid = free.pop(0)
+                now += self.prefill_ms(r.prompt_len)
+                tok = self.runner.start(sid, r.item) if self.runner is not None else 0
+                resp = GenResponse(
+                    rid=r.rid, arrival_ms=r.arrival_ms, release_ms=[now],
+                    exit_sites=[-1], tokens=[tok], final_tokens=[tok],
+                    worker=self.wid, slo_ms=r.slo_ms,
+                )
+                slots[sid] = {"req": r, "resp": resp}
+                self.n_tokens += 1
+                if r.n_tokens <= 1:
+                    finish(sid)
+            if not slots:
+                continue
+            # one decode step over the current slot set
+            sids = sorted(slots)
+            B = len(sids)
+            self.peak_slots = max(self.peak_slots, B)
+            self.slot_history.append(B)
+            ctl = self.controller
+            act = sorted(ctl.active) if ctl is not None else []
+            if self.runner is not None and ctl is not None:
+                labels, unc, finals = self.runner.step(sids, act)
+                dec = ctl.observe(labels, unc, finals)
+                ex = np.asarray(dec.exit_sites, np.int64)
+                released = np.asarray(dec.released_labels)
+            else:
+                finals = np.zeros(B, np.int64)
+                ex = np.full(B, -1, np.int64)
+                released = finals
+            kv_now = pending_kv
+            step_ms = self.profile.decode_step_time(ex, act)
+            start = now
+            end = start + kv_now + step_ms
+            pending_kv = 0.0
+            self.kv_ms += kv_now
+            # releases + next-step KV deferral, grouped by exit site so the
+            # catch-up's weight traffic amortizes across this step's exits
+            kv_by_site: Dict[int, int] = {}
+            for j, sid in enumerate(sids):
+                sl = slots[sid]
+                site = int(ex[j])
+                if site >= 0:
+                    off = release_offset(self.profile, site, B, act)
+                    rel = min(start + kv_now + off, end)
+                else:
+                    rel = end
+                resp = sl["resp"]
+                resp.release_ms.append(rel)
+                resp.exit_sites.append(site)
+                resp.tokens.append(int(released[j]))
+                resp.final_tokens.append(int(finals[j]))
+                self.n_tokens += 1
+                done = len(resp.tokens)
+                if done >= sl["req"].n_tokens:
+                    finish(sid)  # slot reusable at the next step boundary
+                elif site >= 0:
+                    kv_by_site[site] = kv_by_site.get(site, 0) + 1
+            for site, cnt in kv_by_site.items():
+                pending_kv += self.profile.kv_fill_cost(site, cnt)
+            self.busy_ms += kv_now + step_ms
+            self.n_steps += 1
+            now = end
+        self.makespan_ms = now
+        responses.sort(key=lambda r: r.rid)
+        return responses
+
+    def stats(self) -> Dict[str, float]:
+        out = {
+            "busy_ms": self.busy_ms,
+            "kv_catchup_ms": self.kv_ms,
+            "steps": float(self.n_steps),
+            "tokens": float(self.n_tokens),
+            "peak_slots": float(self.peak_slots),
+            "mean_step_batch": float(np.mean(self.slot_history)) if self.slot_history else 0.0,
+        }
+        if self.controller is not None:
+            out["ramp_overhead_ms"] = self.controller.total_ramp_overhead(1)
+            out["active_ramps"] = float(len(self.controller.active))
+        return out

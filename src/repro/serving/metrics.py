@@ -82,6 +82,66 @@ def summarize_cluster(
     }
 
 
+def summarize_generative(
+    responses: List,
+    *,
+    horizon_ms: Optional[float] = None,
+) -> Dict[str, float]:
+    """Generative serving metrics (paper §5): per-token TPT percentiles,
+    tokens/sec, TTFT vs TPT split, exit rate over decode tokens, and
+    agreement of released tokens with the original model's greedy stream.
+
+    TPT samples are successive release deltas within each request
+    (``diff(release_ms)``); the first token is TTFT's job, not TPT's.
+    """
+    if not responses:
+        return {"n": 0.0, "tokens": 0.0}
+    ttft = np.asarray([r.ttft_ms for r in responses])
+    tpt = np.concatenate([r.tpt_ms for r in responses if len(r.release_ms) > 1] or
+                         [np.zeros(0)])
+    decode_sites = np.concatenate(
+        [np.asarray(r.exit_sites[1:], np.int64) for r in responses if len(r.exit_sites) > 1]
+        or [np.zeros(0, np.int64)]
+    )
+    total_tokens = int(sum(len(r.tokens) for r in responses))
+    last = max(max(r.release_ms) for r in responses)
+    first = min(r.arrival_ms for r in responses)
+    span = horizon_ms if horizon_ms is not None else last - min(0.0, first)
+    # agreement over DECODE tokens only (same denominator as exit_rate):
+    # the prefill token is the final model's own output by construction
+    agree = np.concatenate(
+        [np.asarray(r.tokens[1:]) == np.asarray(r.final_tokens[1:]) for r in responses]
+        or [np.zeros(0, bool)]
+    )
+    out = {
+        "n": float(len(responses)),
+        "tokens": float(total_tokens),
+        "ttft_p50_ms": float(np.percentile(ttft, 50)),
+        "ttft_p95_ms": float(np.percentile(ttft, 95)),
+        "tpt_p50_ms": float(np.percentile(tpt, 50)) if len(tpt) else np.nan,
+        "tpt_p95_ms": float(np.percentile(tpt, 95)) if len(tpt) else np.nan,
+        "tpt_mean_ms": float(tpt.mean()) if len(tpt) else np.nan,
+        "tokens_per_sec": total_tokens / max(span / 1000.0, 1e-9),
+        "exit_rate": float((decode_sites >= 0).mean()) if len(decode_sites) else 0.0,
+        "agreement": float(agree.mean()) if len(agree) else 1.0,
+        # per-request latency split: how much of a request's life is TTFT
+        "ttft_frac": float(
+            np.mean([r.ttft_ms / max(max(r.release_ms) - r.arrival_ms, 1e-9)
+                     for r in responses])
+        ),
+    }
+    slo = np.asarray([r.slo_ms for r in responses])
+    if np.isfinite(slo).all() and len(tpt):
+        # per-token SLO: a request is on time if its median TPT meets it
+        per_req = [
+            float(np.median(r.tpt_ms)) <= r.slo_ms + 1e-9
+            for r in responses if len(r.release_ms) > 1
+        ]
+        if per_req:
+            out["tpt_slo_miss_rate"] = 1.0 - float(np.mean(per_req))
+    return out
+
+
 def savings_vs(base: Dict[str, float], ours: Dict[str, float]) -> Dict[str, float]:
     out = {}
     for k in ("p25_ms", "p50_ms", "p95_ms", "p99_ms"):

@@ -69,23 +69,36 @@ class ClassifierRunner:
         self.max_slots = max_slots
         self._fns = {}
         self.compiles = 0  # ramp-set changes recompile (paper: model re-upload)
+        self.noramp_compiles = 0  # no-ramp (vanilla) variant compiles
 
-    def _fn(self, bs: int, act: tuple):
+    def _fn(self, bs: int, act: Optional[tuple]):
+        """act=None compiles the no-ramp (vanilla) variant: with zero active
+        ramps the model must not execute-and-discard a ramp head — vanilla
+        serving would silently pay one ramp of compute per batch."""
         key = (bs, act)
         if key not in self._fns:
             m = self.model
             self.compiles += 1
+            if act is None:
+                self.noramp_compiles += 1
 
-            @jax.jit
-            def f(params, x):
-                outs = m.forward(params, x, active_sites=list(act))
-                return (
-                    outs["ramps"]["label"],
-                    1.0 - outs["ramps"]["maxprob"],
-                    outs["final"]["label"],
-                )
+                @jax.jit
+                def f0(params, x):
+                    return m.forward(params, x, active_sites=None)["final"]["label"]
 
-            self._fns[key] = f
+                self._fns[key] = f0
+            else:
+
+                @jax.jit
+                def f(params, x):
+                    outs = m.forward(params, x, active_sites=list(act))
+                    return (
+                        outs["ramps"]["label"],
+                        1.0 - outs["ramps"]["maxprob"],
+                        outs["final"]["label"],
+                    )
+
+                self._fns[key] = f
         return self._fns[key]
 
     def infer(self, items: np.ndarray, active: Sequence[int]):
@@ -94,12 +107,13 @@ class ClassifierRunner:
         x = jnp.asarray(self.data[idx])
         act = tuple(sorted(active))[: self.max_slots]
         k = len(act)
-        labels, unc, final = self._fn(bs, act if act else (0,))(self.params, x)
+        if k == 0:
+            final = np.asarray(self._fn(bs, None)(self.params, x))[: len(items)]
+            return np.zeros((0, len(items)), np.int64), np.zeros((0, len(items)), np.float32), final
+        labels, unc, final = self._fn(bs, act)(self.params, x)
         labels = np.asarray(labels)[:, : len(items)]
         unc = np.asarray(unc)[:, : len(items)]
         final = np.asarray(final)[: len(items)]
-        if k == 0:
-            return np.zeros((0, len(items)), np.int64), np.zeros((0, len(items)), np.float32), final
         return labels[:k], unc[:k].astype(np.float32), final
 
     def vanilla_labels(self, n: Optional[int] = None) -> np.ndarray:
@@ -109,7 +123,7 @@ class ClassifierRunner:
         for lo in range(0, n, 256):
             hi = min(lo + 256, n)
             idx = np.arange(lo, hi)
-            _, _, f = self.infer(idx, [0])
+            _, _, f = self.infer(idx, [])  # no-ramp variant: zero ramp compute
             out.append(f)
         return np.concatenate(out)
 
@@ -124,6 +138,22 @@ class LMTokenRunner:
         self.data = data  # (N, S) int32 contexts
         self.max_slots = max_slots
         self._fns = {}
+        self._fns0 = {}  # no-ramp (vanilla) variants
+
+    def _fn_noramp(self, bs: int):
+        if bs not in self._fns0:
+            m = self.model
+
+            @jax.jit
+            def f0(params, toks):
+                _, outs = m.prefill(
+                    params, toks, active_sites=None, with_cache=False, moe_impl="dense"
+                )
+                lab = outs["final"]["label"]
+                return lab[:, 0] if lab.ndim == 2 else lab
+
+            self._fns0[bs] = f0
+        return self._fns0[bs]
 
     def _fn(self, bs: int):
         if bs not in self._fns:
@@ -147,17 +177,19 @@ class LMTokenRunner:
         bs = _bucket(len(items))
         idx = np.pad(items, (0, bs - len(items)), mode="edge")
         toks = jnp.asarray(self.data[idx])
-        act = list(active)[: self.max_slots]
-        if not act:
-            act = [0]
+        # sort (like ClassifierRunner): the controller consumes record rows
+        # in ascending-site order, so an unsorted caller set must not leak
+        # row misalignment into the window
+        act = sorted(active)[: self.max_slots]
+        k = len(act)
+        if k == 0:
+            final = np.asarray(self._fn_noramp(bs)(self.params, toks))[: len(items)]
+            return np.zeros((0, len(items)), np.int64), np.zeros((0, len(items)), np.float32), final
         pad_act = act + [act[-1]] * (self.max_slots - len(act))
         labels, unc, final = self._fn(bs)(
             self.params, toks, jnp.asarray(pad_act, jnp.int32)
         )
-        k = len(list(active)) if active else 0
         final = np.asarray(final)[: len(items)]
-        if k == 0:
-            return np.zeros((0, len(items)), np.int64), np.zeros((0, len(items)), np.float32), final
         return (
             np.asarray(labels)[:k, : len(items)],
             np.asarray(unc)[:k, : len(items)].astype(np.float32),
@@ -169,6 +201,193 @@ class LMTokenRunner:
         out = []
         for lo in range(0, n, 128):
             idx = np.arange(lo, min(lo + 128, n))
-            _, _, f = self.infer(idx, [0])
+            _, _, f = self.infer(idx, [])  # no-ramp variant: zero ramp compute
             out.append(f)
         return np.concatenate(out)
+
+
+class DecodeRunner:
+    """Real-model generative runner: drives ``model.decode`` step by step
+    with a live per-slot KV cache, streaming one ramp record per in-flight
+    token to the controller (the paper's generative per-token exits).
+
+    Records are replay-complete — the full model and the gathered ramp
+    heads run for every token, because the controller needs agreement
+    labels to adapt — while serving *time* is simulated by the engine from
+    the latency profile (truncated compute + deferred KV catch-up). The
+    decoded trajectory follows the original model's greedy tokens so
+    per-token agreement against the vanilla stream stays measurable even
+    when a ramp disagrees.
+
+    Slots are independent B=1 caches: continuous batching admits/retires
+    requests at step boundaries, so slot positions diverge and a shared
+    batched cache would need per-slot write indices the model API does not
+    (yet) expose. Batch-level timing comes from the profile, not from here.
+    """
+
+    def __init__(self, model, params, prompts: np.ndarray, *, max_new_tokens: int = 64,
+                 max_slots: int = 8):
+        self.model = model
+        self.params = params
+        self.prompts = np.asarray(prompts, np.int32)  # (N, S)
+        self.max_new = max_new_tokens
+        self.max_slots = max_slots
+        self.n_sites = len(model.sites)
+        self._slots = {}
+        self._pf = None
+        self._dec = None
+        self._dec0 = None  # no-ramp (vanilla) decode variant
+
+    def _prefill_fn(self):
+        if self._pf is None:
+            m, S = self.model, self.prompts.shape[1]
+            cache_len = S + self.max_new
+
+            @jax.jit
+            def pf(params, toks):
+                cache, outs = m.prefill(
+                    params, toks, cache_len=cache_len, active_sites=None,
+                    with_cache=True, moe_impl="dense",
+                )
+                lab = outs["final"]["label"]
+                return cache, (lab[:, 0] if lab.ndim == 2 else lab)
+
+            self._pf = pf
+        return self._pf
+
+    def _decode_fn(self):
+        if self._dec is None:
+            m = self.model
+
+            @jax.jit
+            def dec(params, cache, tok, pos, active):
+                new_cache, outs = m.decode(
+                    params, cache, tok, pos, active_sites=active, moe_impl="dense"
+                )
+                return new_cache, (
+                    outs["ramps"]["label"],
+                    1.0 - outs["ramps"]["maxprob"],
+                    outs["final"]["label"],
+                )
+
+            self._dec = dec
+        return self._dec
+
+    def _decode_fn_noramp(self):
+        """Ramp-free decode: with zero active ramps (controller bootstrap /
+        budget-busted states) the step must not execute-and-discard ramp
+        heads — same fix as the classifier/token runners' no-ramp variants."""
+        if self._dec0 is None:
+            m = self.model
+
+            @jax.jit
+            def dec0(params, cache, tok, pos):
+                new_cache, outs = m.decode(
+                    params, cache, tok, pos, active_sites=None, moe_impl="dense"
+                )
+                return new_cache, outs["final"]["label"]
+
+            self._dec0 = dec0
+        return self._dec0
+
+    def start(self, slot: int, item: int) -> int:
+        """Prefill ``item``'s prompt into ``slot``; returns the first
+        generated (greedy) token."""
+        toks = jnp.asarray(self.prompts[item][None, :])
+        cache, lab = self._prefill_fn()(self.params, toks)
+        tok = int(np.asarray(lab).reshape(-1)[0])
+        self._slots[slot] = {"cache": cache, "pos": self.prompts.shape[1], "tok": tok}
+        return tok
+
+    def step(self, slots: Sequence[int], active: Sequence[int]):
+        """One decode step for every slot in ``slots``. Returns
+        (ramp_labels (K,B), ramp_unc (K,B), final (B,)) with rows in
+        sorted(active) order and columns in ``slots`` order."""
+        act = sorted(active)[: self.max_slots]
+        k = len(act)
+        labels = np.zeros((max(k, 1), len(slots)), np.int64)
+        unc = np.full((max(k, 1), len(slots)), 1.0, np.float32)
+        final = np.zeros(len(slots), np.int64)
+        if k:
+            pad_act = jnp.asarray(act + [act[-1]] * (self.max_slots - k), jnp.int32)
+            dec = self._decode_fn()
+        else:
+            dec0 = self._decode_fn_noramp()
+        for b, s in enumerate(slots):
+            st = self._slots[s]
+            tok = jnp.asarray([[st["tok"]]], jnp.int32)
+            if k:
+                st["cache"], (rl, ru, fl) = dec(
+                    self.params, st["cache"], tok, jnp.int32(st["pos"]), pad_act
+                )
+                labels[:, b] = np.asarray(rl).reshape(self.max_slots, -1)[:k, 0]
+                unc[:, b] = np.asarray(ru).reshape(self.max_slots, -1)[:k, 0]
+            else:
+                st["cache"], fl = dec0(self.params, st["cache"], tok, jnp.int32(st["pos"]))
+            fl = int(np.asarray(fl).reshape(-1)[0])
+            final[b] = fl
+            st["pos"] += 1
+            st["tok"] = fl  # vanilla greedy trajectory (agreement baseline)
+        if k == 0:
+            return labels[:0], unc[:0], final
+        return labels[:k], unc[:k], final
+
+    def free(self, slot: int) -> None:
+        self._slots.pop(slot, None)
+
+
+class SyntheticDecodeRunner:
+    """Profile-only generative runner — the decode analogue of
+    ``SyntheticRunner``: deterministic per-token ramp records without a
+    model. A fixed fraction of tokens is "easy" (confidently predictable
+    from ``exit_site`` onward, ramp label agreeing with the final token);
+    the rest stay uncertain and disagreeing at every ramp, so an
+    over-opened threshold costs accuracy exactly as with a trained LM.
+    Used by the generative benchmarks/sweeps where training an LM per
+    configuration would dominate runtime."""
+
+    def __init__(self, n_sites: int, exit_site: int, easy_frac: float = 0.7,
+                 vocab: int = 101):
+        self.n_sites = n_sites
+        self.exit_site = exit_site
+        self.easy_frac = easy_frac
+        self.vocab = vocab
+        self._slots = {}
+
+    def _token(self, item: int, t: int) -> int:
+        return (item * 31 + t * 7 + 3) % self.vocab
+
+    def _easy(self, item: int, t: int) -> bool:
+        return ((item * 131 + t * 17) % 100) < self.easy_frac * 100
+
+    def start(self, slot: int, item: int) -> int:
+        self._slots[slot] = {"item": item, "t": 0}
+        return self._token(item, 0)
+
+    def step(self, slots: Sequence[int], active: Sequence[int]):
+        act = sorted(active)
+        k = len(act)
+        B = len(slots)
+        labels = np.zeros((max(k, 1), B), np.int64)
+        unc = np.full((max(k, 1), B), 0.9, np.float32)
+        final = np.zeros(B, np.int64)
+        for b, s in enumerate(slots):
+            st = self._slots[s]
+            st["t"] += 1
+            item, t = st["item"], st["t"]
+            fin = self._token(item, t)
+            final[b] = fin
+            easy = self._easy(item, t)
+            for j, site in enumerate(act):
+                if easy and site >= self.exit_site:
+                    labels[j, b] = fin
+                    unc[j, b] = 0.02
+                else:
+                    labels[j, b] = (fin + 1) % self.vocab
+                    unc[j, b] = 0.9
+        if k == 0:
+            return labels[:0], unc[:0], final
+        return labels[:k], unc[:k], final
+
+    def free(self, slot: int) -> None:
+        self._slots.pop(slot, None)

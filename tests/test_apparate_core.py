@@ -261,3 +261,47 @@ def test_record_window_ring():
     assert val[:, 0].all() and val[:, 2].all()
     assert not val[:, 1].any()
     assert w.count == 15
+
+
+def test_record_window_overflow_batch_keeps_newest():
+    """Regression: a batch larger than capacity used to produce duplicate
+    ring indices — later rows overwrote earlier ones in arbitrary order
+    while ``count`` advanced by B. Only the newest ``capacity`` samples can
+    survive, in arrival order."""
+    cap = 8
+    w = RecordWindow(2, capacity=cap)
+    B = 20
+    unc = np.tile(np.arange(B, dtype=np.float32) / 100.0, (2, 1))
+    w.append([0, 1], unc, np.ones((2, B), bool))
+    assert w.count == B  # total ever observed
+    u, c, v = w.last(cap)
+    assert u.shape == (cap, 2)
+    # the ring holds exactly the LAST `cap` samples, oldest-to-newest
+    np.testing.assert_allclose(u[:, 0], np.arange(B - cap, B) / 100.0)
+    assert v.all()
+    # subsequent normal-size appends continue in order from the right ptr
+    w.append([0, 1], np.full((2, 3), 0.77, np.float32), np.ones((2, 3), bool))
+    u2, _, _ = w.last(5)
+    np.testing.assert_allclose(u2[:, 0], [0.18, 0.19, 0.77, 0.77, 0.77])
+    assert w.count == B + 3
+
+
+def test_uncertainty_entropy_requires_n_classes_and_is_normalized():
+    """Regression: the old ``n_classes`` fallback was an operator-precedence
+    accident (``np.e ** H.max() + 1``) that could yield normalized
+    uncertainty > 1. The entropy metric now requires ``n_classes`` and
+    normalizes by log(n_classes) so uncertainty lands in [0, 1]."""
+    ctl = ApparateController(NS, PROF, ControllerConfig(metric="entropy"))
+    n_classes = 10
+    # worst case: uniform distribution -> H = log(C) -> uncertainty 1.0
+    ent = np.asarray([0.0, np.log(n_classes) / 2, np.log(n_classes)], np.float32)
+    unc = ctl.uncertainty({"entropy": ent, "n_classes": n_classes})
+    np.testing.assert_allclose(unc, [0.0, 0.5, 1.0], atol=1e-6)
+    assert (unc <= 1.0 + 1e-6).all() and (unc >= 0).all()
+    with pytest.raises(KeyError):
+        ctl.uncertainty({"entropy": ent})  # n_classes is mandatory now
+    # maxprob metric unchanged
+    ctl2 = ApparateController(NS, PROF, ControllerConfig(metric="maxprob"))
+    np.testing.assert_allclose(
+        ctl2.uncertainty({"maxprob": np.asarray([0.25, 1.0])}), [0.75, 0.0]
+    )

@@ -44,6 +44,38 @@ def test_lm_token_runner_records(lm_setup):
     np.testing.assert_array_equal(v1, v2)
 
 
+def test_lm_runner_sorts_unsorted_active(lm_setup):
+    """Regression: ``LMTokenRunner.infer`` used to slice/pad the caller's
+    active set verbatim, so an unsorted set mis-ordered record rows against
+    the controller's sorted-site convention. Both orders must now produce
+    identical, sorted-site-ordered records."""
+    cfg, model, runner = lm_setup
+    idx = np.arange(12)
+    l_a, u_a, f_a = runner.infer(idx, [2, 0])
+    l_b, u_b, f_b = runner.infer(idx, [0, 2])
+    np.testing.assert_array_equal(l_a, l_b)
+    np.testing.assert_allclose(u_a, u_b)
+    np.testing.assert_array_equal(f_a, f_b)
+    # row 0 corresponds to site 0 (ascending), matching a single-site call
+    l0, _, _ = runner.infer(idx, [0])
+    np.testing.assert_array_equal(l_a[0], l0[0])
+    l2, _, _ = runner.infer(idx, [2])
+    np.testing.assert_array_equal(l_a[1], l2[0])
+
+
+def test_lm_runner_no_ramp_variant(lm_setup):
+    """With zero active ramps the runner must use the ramp-free compiled
+    variant (vanilla serving pays no ramp compute) and still return the
+    same final labels."""
+    cfg, model, runner = lm_setup
+    idx = np.arange(10)
+    labels, unc, f0 = runner.infer(idx, [])
+    assert labels.shape == (0, 10) and unc.shape == (0, 10)
+    assert 16 in runner._fns0  # dedicated no-ramp compile for this bucket
+    _, _, f1 = runner.infer(idx, [0])
+    np.testing.assert_array_equal(f0, f1)
+
+
 def test_lm_token_controller_loop(lm_setup):
     cfg, model, runner = lm_setup
     prof = build_profile(get_tiny("qwen2-1.5b").replace(n_layers=4), mode="decode")

@@ -81,6 +81,34 @@ def test_apparate_preserves_throughput_and_cuts_latency():
     assert ours["p99_ms"] <= base["p99_ms"] * (1 + 0.02) + 1e-6
 
 
+def test_classifier_runner_no_ramp_compiled_variant():
+    """Regression: with zero active ramps `ClassifierRunner.infer` used to
+    execute a ramp at site 0 and discard it — vanilla serving silently paid
+    one ramp head of compute per batch. The no-ramp path must compile its
+    own ramp-free variant, counted separately from ramped compiles."""
+    import jax
+
+    from repro.configs import get_tiny
+    from repro.models import build_model
+    from repro.serving import ClassifierRunner
+
+    cfg = get_tiny("resnet18")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    data = rng.normal(0, 1, (32, cfg.img_size, cfg.img_size, 3)).astype(np.float32)
+    runner = ClassifierRunner(model, params, data, max_slots=2)
+    idx = np.arange(8)
+    labels, unc, f0 = runner.infer(idx, [])
+    assert labels.shape == (0, 8) and unc.shape == (0, 8)
+    assert runner.compiles == 1 and runner.noramp_compiles == 1
+    _, _, f1 = runner.infer(idx, [0])
+    assert runner.compiles == 2 and runner.noramp_compiles == 1  # counted apart
+    np.testing.assert_array_equal(f0, f1)  # same final labels either way
+    runner.infer(idx, [])  # cached: no recompile
+    assert runner.compiles == 2
+
+
 def test_video_trace_shape():
     t = video_trace(100, fps=30)
     d = np.diff(t)
