@@ -9,6 +9,8 @@ metric, e.g. win% or accuracy).
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
@@ -16,11 +18,30 @@ import numpy as np
 
 ROWS = []
 
+_SNAPSHOT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_decode.json")
+
 
 def emit(name: str, us_per_call: float, derived):
     row = f"{name},{us_per_call:.3f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def snapshot(section: str, data: dict) -> None:
+    """Persist a decode-perf section into BENCH_decode.json (repo root) so
+    the perf trajectory of the decode/controller hot paths is recorded
+    across PRs, not just printed."""
+    existing = {}
+    if os.path.exists(_SNAPSHOT_PATH):
+        try:
+            with open(_SNAPSHOT_PATH) as f:
+                existing = json.load(f)
+        except (OSError, ValueError):
+            existing = {}
+    existing[section] = data
+    with open(_SNAPSHOT_PATH, "w") as f:
+        json.dump(existing, f, indent=1, sort_keys=True)
+        f.write("\n")
 
 
 def _dom(domain, **kw):
@@ -369,6 +390,90 @@ def bench_generative_tpt():
         )
 
 
+# ---------------------------------------- batched single-dispatch decode
+
+
+def bench_decode_dispatch():
+    """Batched slot-cache decode vs the per-slot B=1 loop on a real tiny
+    LM: jitted dispatches issued per decode step (the tentpole claim:
+    B -> 1) and step wall-clock at B in {1, 4, 8}, flash-decode wrapper
+    ('ref' oracle on CPU; 'kernel' is the same call on TPU)."""
+    import jax
+
+    from repro.configs import get_tiny
+    from repro.models import build_model
+    from repro.serving import DecodeRunner, LoopDecodeRunner
+
+    cfg = get_tiny("qwen2-1.5b").replace(n_layers=4, vocab_size=128, decode_attn="ref")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, 128, (8, 12)).astype(np.int32)
+    act = [0, len(model.sites) - 1]
+    iters = 8
+    snap = {}
+    for B in (1, 4, 8):
+        wall = {}
+        for name, cls in (("loop", LoopDecodeRunner), ("batched", DecodeRunner)):
+            r = cls(model, params, prompts, max_new_tokens=iters + 4, max_slots=3)
+            for s in range(B):
+                r.start(s, s)
+            r.step(list(range(B)), act)  # warmup: compile the step shape
+            r.dispatches = 0
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                r.step(list(range(B)), act)
+            us = (time.perf_counter() - t0) / iters * 1e6
+            d = r.dispatches / iters
+            emit(f"decode_dispatch_{name}_B{B}", us, f"dispatches_per_step={d:.1f}")
+            snap[f"{name}_B{B}"] = {"us_per_step": us, "dispatches_per_step": d}
+            wall[name] = us
+        emit(f"decode_dispatch_win_B{B}", wall["loop"] / wall["batched"],
+             f"batched_speedup_x={wall['loop'] / wall['batched']:.2f}")
+        snap[f"speedup_B{B}"] = wall["loop"] / wall["batched"]
+    snapshot("decode_dispatch", snap)
+
+
+def bench_tune_wall():
+    """Controller adaptation hot loop: threshold-tuning wall time,
+    vectorized (one batched simulate_exits pass per round) vs the
+    sequential reference — results asserted bit-identical."""
+    from repro.configs import get_config
+    from repro.core import build_profile, tune_thresholds, tune_thresholds_reference
+
+    prof = build_profile(get_config("gpt2-medium"), mode="decode", chips=1)
+    ns = len(prof.sites)
+    rng = np.random.default_rng(0)
+    N = 2048
+    unc = rng.random((N, ns)).astype(np.float32)
+    valid = np.ones((N, ns), bool)
+    correct = rng.random((N, ns)) < (1 - 0.3 * unc)
+    wd = (unc, correct, valid)
+    act = list(range(6))
+    reps = 5
+    t0 = time.perf_counter()
+    vec = [tune_thresholds(wd, act, prof, n_sites=ns) for _ in range(reps)][-1]
+    t_vec = (time.perf_counter() - t0) / reps
+    t0 = time.perf_counter()
+    ref = [tune_thresholds_reference(wd, act, prof, n_sites=ns) for _ in range(reps)][-1]
+    t_ref = (time.perf_counter() - t0) / reps
+    identical = bool(
+        np.array_equal(vec.thresholds, ref.thresholds)
+        and vec.savings_ms == ref.savings_ms
+        and vec.rounds == ref.rounds
+    )
+    emit("tune_wall_vectorized", t_vec * 1e6, f"rounds={vec.rounds}")
+    emit("tune_wall_reference", t_ref * 1e6, f"identical={identical}")
+    emit("tune_wall_speedup", t_ref / t_vec, f"speedup_x={t_ref / t_vec:.2f}")
+    snapshot("tune_wall", {
+        "us_vectorized": t_vec * 1e6,
+        "us_reference": t_ref * 1e6,
+        "speedup_x": t_ref / t_vec,
+        "identical": identical,
+        "rounds": int(vec.rounds),
+    })
+
+
 # ------------------------------------------------------------------ kernels
 
 
@@ -428,6 +533,8 @@ ALL = [
     bench_fig17_slo,
     bench_scaleout_goodput,
     bench_generative_tpt,
+    bench_decode_dispatch,
+    bench_tune_wall,
     bench_kernels,
 ]
 

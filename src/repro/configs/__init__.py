@@ -84,6 +84,10 @@ class ArchConfig:
     # 'off' | 'interpret' (CPU validation) | 'tpu' — streaming exit-record
     # kernel for serving head stats (kernels/ramp_head)
     pallas_head: str = "off"
+    # single-token decode attention against the KV cache: 'dense' (masked
+    # sdpa) | 'ref' (kernels/decode_attention jnp oracle) | 'kernel'
+    # (flash-decode Pallas) | 'interpret' (Pallas interpret mode, CPU)
+    decode_attn: str = "dense"
     train_remat: bool = True  # activation checkpointing in train_step
     remat_policy: str = "full"  # 'full' (save nothing) | 'dots' (save matmul outputs)
 

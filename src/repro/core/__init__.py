@@ -3,25 +3,36 @@ from repro.core.controller import ApparateController, ControllerConfig
 from repro.core.exits import (
     RecordWindow,
     evaluate_config,
+    evaluate_configs,
     exit_rates,
     ramp_utilities,
     simulate_exits,
+    simulate_exits_many,
+    site_cost_vectors,
 )
 from repro.core.profiles import LatencyProfile, build_profile
 from repro.core.ramp_adjust import adjust_ramps
-from repro.core.threshold_tuning import grid_search_thresholds, tune_thresholds
+from repro.core.threshold_tuning import (
+    grid_search_thresholds,
+    tune_thresholds,
+    tune_thresholds_reference,
+)
 
 __all__ = [
     "ApparateController",
     "ControllerConfig",
     "RecordWindow",
     "evaluate_config",
+    "evaluate_configs",
     "exit_rates",
     "ramp_utilities",
     "simulate_exits",
+    "simulate_exits_many",
+    "site_cost_vectors",
     "LatencyProfile",
     "build_profile",
     "adjust_ramps",
     "tune_thresholds",
+    "tune_thresholds_reference",
     "grid_search_thresholds",
 ]

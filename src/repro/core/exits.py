@@ -82,12 +82,83 @@ def simulate_exits(
     return np.where(anyx, act[first], -1)
 
 
+def simulate_exits_many(
+    unc: np.ndarray,
+    valid: np.ndarray,
+    thr_batch: np.ndarray,
+    active: Sequence[int],
+) -> np.ndarray:
+    """Vectorized `simulate_exits` over C candidate threshold vectors in
+    one pass. thr_batch: (C, S); returns (C, N) exit sites (-1 = none).
+    Row c is bit-identical to `simulate_exits(unc, valid, thr_batch[c],
+    active)` — the adaptation hot loop depends on that."""
+    C, N = thr_batch.shape[0], unc.shape[0]
+    if len(active) == 0 or N == 0:
+        return np.full((C, N), -1, np.int64)
+    act = np.asarray(sorted(active))
+    sub = valid[None, :, act] & (unc[None, :, act] < thr_batch[:, None, act])
+    anyx = sub.any(axis=2)
+    first = sub.argmax(axis=2)
+    return np.where(anyx, act[first], -1)
+
+
 @dataclasses.dataclass
 class EvalResult:
     accuracy: float  # agreement w/ original model (non-exits count correct)
     mean_saved_ms: float  # mean latency delta vs vanilla (can be < 0)
     exit_rate: float
     exit_sites: np.ndarray  # per-sample site (-1 = none)
+
+
+def site_cost_vectors(profile, active: Sequence[int], bs: int = 1):
+    """Per-active-site (overhead, savings) vectors, in sorted-site order.
+    Hoisted out of the evaluation loop so a tuning round prices its K
+    candidates without re-walking the latency profile K times."""
+    act = sorted(active)
+    ovh = np.asarray([profile.ramp_overhead(s, bs) for s in act]) if act else np.zeros(0)
+    sav = np.asarray([profile.savings_at_site(s, bs) for s in act]) if act else np.zeros(0)
+    return ovh, sav
+
+
+def evaluate_configs(
+    window_data,
+    thr_batch: np.ndarray,
+    active: Sequence[int],
+    profile,
+    bs: int = 1,
+    *,
+    ovh: Optional[np.ndarray] = None,
+    sav: Optional[np.ndarray] = None,
+):
+    """Vectorized `evaluate_config` over C candidate threshold vectors:
+    one `simulate_exits_many` pass instead of C sequential evaluations
+    (the threshold-tuning hot loop). thr_batch: (C, S). Returns
+    (accuracy (C,), mean_saved_ms (C,), exit_rate (C,), exit_sites (C, N));
+    row c is bit-identical to `evaluate_config(..., thr_batch[c], ...)`.
+    ``ovh``/``sav`` accept the precomputed `site_cost_vectors` output."""
+    unc, correct, valid = window_data
+    thr_batch = np.asarray(thr_batch)
+    C, N = thr_batch.shape[0], unc.shape[0]
+    if N == 0:
+        return (np.ones(C), np.zeros(C), np.zeros(C), np.full((C, 0), -1, np.int64))
+    ex = simulate_exits_many(unc, valid, thr_batch, active)
+    acc = np.where(
+        ex >= 0, correct[np.arange(N)[None, :], np.clip(ex, 0, None)], True
+    ).mean(axis=1)
+    act = np.asarray(sorted(active))
+    if ovh is None or sav is None:
+        ovh, sav = site_cost_vectors(profile, active, bs)
+    total_ovh = ovh.sum()
+    if len(act):
+        # released after ramp s: save downstream layers; pay ramps <= s.
+        # Python-loop prefix sums match evaluate_config's sequential
+        # `ovh[:i+1].sum()` accumulation exactly (np.cumsum may not).
+        val = np.asarray([sav[i] - ovh[: i + 1].sum() for i in range(len(act))])
+        pos = np.searchsorted(act, np.clip(ex, 0, None))
+        saved = np.where(ex >= 0, val[pos], -total_ovh)
+    else:
+        saved = np.full((C, N), -total_ovh)
+    return acc, saved.mean(axis=1), (ex >= 0).mean(axis=1), ex
 
 
 def evaluate_config(
@@ -103,18 +174,10 @@ def evaluate_config(
     N = unc.shape[0]
     if N == 0:
         return EvalResult(1.0, 0.0, 0.0, np.full(0, -1, np.int64))
-    ex = simulate_exits(unc, valid, thresholds, active)
-    acc = np.where(ex >= 0, correct[np.arange(N), np.clip(ex, 0, None)], True).mean()
-    act = np.asarray(sorted(active))
-    ovh = np.asarray([profile.ramp_overhead(s, bs) for s in act]) if len(act) else np.zeros(0)
-    total_ovh = ovh.sum()
-    saved = np.full(N, -total_ovh)
-    for i, s in enumerate(act):
-        m = ex == s
-        if m.any():
-            # released after ramp s: save downstream layers; pay ramps ≤ s
-            saved[m] = profile.savings_at_site(s, bs) - ovh[: i + 1].sum()
-    return EvalResult(float(acc), float(saved.mean()), float((ex >= 0).mean()), ex)
+    acc, saved, rate, ex = evaluate_configs(
+        window_data, np.asarray(thresholds)[None, :], active, profile, bs
+    )
+    return EvalResult(float(acc[0]), float(saved[0]), float(rate[0]), ex[0])
 
 
 def ramp_utilities(
@@ -123,12 +186,17 @@ def ramp_utilities(
     active: Sequence[int],
     profile,
     bs: int = 1,
+    *,
+    ex: Optional[np.ndarray] = None,
 ) -> dict:
     """Paper §3.3: utility(r) = Σ savings(exits at r) − Σ ovh(r)·(alive non-
-    exits at r). Returns {site: utility_ms_total} over the window."""
+    exits at r). Returns {site: utility_ms_total} over the window. ``ex``
+    accepts a precomputed `simulate_exits` result so callers evaluating the
+    same (window, thresholds, active) don't re-simulate."""
     unc, correct, valid = window_data
     N = unc.shape[0]
-    ex = simulate_exits(unc, valid, thresholds, active)
+    if ex is None:
+        ex = simulate_exits(unc, valid, thresholds, active)
     act = sorted(active)
     out = {}
     alive = np.ones(N, bool)
@@ -142,8 +210,9 @@ def ramp_utilities(
     return out
 
 
-def exit_rates(window_data, thresholds, active) -> dict:
+def exit_rates(window_data, thresholds, active, *, ex: Optional[np.ndarray] = None) -> dict:
     unc, correct, valid = window_data
-    ex = simulate_exits(unc, valid, thresholds, active)
+    if ex is None:
+        ex = simulate_exits(unc, valid, thresholds, active)
     N = max(len(ex), 1)
     return {s: float((ex == s).sum() / N) for s in sorted(active)}

@@ -16,7 +16,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.exits import evaluate_config, exit_rates, ramp_utilities
+from repro.core.exits import evaluate_config, exit_rates, ramp_utilities, simulate_exits
 from repro.core.threshold_tuning import tune_thresholds
 
 
@@ -56,8 +56,11 @@ def adjust_ramps(
 ) -> AdjustResult:
     act = sorted(active)
     thr = thresholds.copy()
-    utils = ramp_utilities(window_data, thr, act, profile, bs)
-    rates = exit_rates(window_data, thr, act)
+    # one exit simulation of the current (window, thr, act) shared by both
+    # scorers — they used to each re-simulate the identical pattern
+    ex0 = simulate_exits(window_data[0], window_data[2], thr, act)
+    utils = ramp_utilities(window_data, thr, act, profile, bs, ex=ex0)
+    rates = exit_rates(window_data, thr, act, ex=ex0)
     negatives = [s for s in act if utils[s] < 0]
 
     if negatives:

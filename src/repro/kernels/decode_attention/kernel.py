@@ -2,8 +2,11 @@
 
 The dominant cost of decode attention is streaming the KV cache HBM→VMEM;
 this kernel does one pass with online-softmax accumulation (grid:
-(B·H, S/bs), key tiles innermost sequential). A scalar `pos` masks cache
-slots beyond the current length. GQA handled by index-map head folding.
+(B·H, S/bs), key tiles innermost sequential). `pos` masks cache slots
+beyond the current length — a scalar (shared cache length) or an int32[B]
+array of per-row lengths (batched slot caches, where continuous batching
+leaves every row at a different decode position). GQA handled by
+index-map head folding.
 """
 from __future__ import annotations
 
@@ -17,7 +20,7 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, bs, scale, n_s):
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, bs, scale, n_s, S):
     js = pl.program_id(1)
     q = q_ref[0].astype(jnp.float32)  # (1, hd)
     k = k_ref[0].astype(jnp.float32)  # (bs, hd)
@@ -25,8 +28,13 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, bs, scale, n_s
     pos = pos_ref[0, 0]
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (1, bs)
     kpos = js * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
-    mask = kpos <= pos
+    # (kpos < S) masks the padded tail tile when bs does not divide S —
+    # those lanes hold unspecified pad values (NaN in interpret mode).
+    # k is laundered through the `s` mask; v must be zeroed explicitly or
+    # the masked 0-weight lanes still poison the p@v dot (0 * NaN).
+    mask = (kpos <= pos) & (kpos < S)
     s = jnp.where(mask, s, NEG_INF)
+    v = jnp.where(mask[0][:, None], v, 0.0)
     tile_m = jnp.max(s, axis=-1)
 
     @pl.when(js == 0)
@@ -55,7 +63,7 @@ def decode_attention(
     q: jax.Array,  # (B, H, hd) single query token
     k: jax.Array,  # (B, KH, S, hd) cache
     v: jax.Array,
-    pos,  # int32 scalar: current cache length - 1 (attend to <= pos)
+    pos,  # int32 scalar or (B,): cache length - 1 per row (attend to <= pos)
     *,
     block_s: int = 512,
     interpret: bool = False,
@@ -63,24 +71,27 @@ def decode_attention(
     B, H, hd = q.shape
     KH, S = k.shape[1], k.shape[2]
     G = H // KH
+    # cache lengths are arbitrary prompt_len + max_new sums: a non-dividing
+    # bs just pads the final key tile (masked off in-kernel) instead of
+    # degrading the tile size
     bs = min(block_s, S)
-    assert S % bs == 0
-    n_s = S // bs
+    n_s = (S + bs - 1) // bs
     scale = 1.0 / math.sqrt(hd)
     qf = q.reshape(B * H, 1, hd)
     kf = k.reshape(B * KH, S, hd)
     vf = v.reshape(B * KH, S, hd)
-    pos_arr = jnp.full((1, 1), 0, jnp.int32) + pos
+    # (B, 1) per-row position; a scalar broadcasts to every row
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1, 1), (B, 1))
 
     def kv_map(bh, js):
         return ((bh // H) * KH + (bh % H) // G, js, 0)
 
-    kernel = functools.partial(_kernel, bs=bs, scale=scale, n_s=n_s)
+    kernel = functools.partial(_kernel, bs=bs, scale=scale, n_s=n_s, S=S)
     o, m, l = pl.pallas_call(
         kernel,
         grid=(B * H, n_s),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda bh, js: (0, 0)),
+            pl.BlockSpec((1, 1), lambda bh, js: (bh // H, 0)),
             pl.BlockSpec((1, 1, hd), lambda bh, js: (bh, 0, 0)),
             pl.BlockSpec((1, bs, hd), kv_map),
             pl.BlockSpec((1, bs, hd), kv_map),

@@ -8,7 +8,9 @@ import jax.numpy as jnp
 
 
 def decode_attention_ref(q, k, v, pos):
-    """q: (B,H,hd); k,v: (B,KH,S,hd); attend to cache slots <= pos."""
+    """q: (B,H,hd); k,v: (B,KH,S,hd); attend to cache slots <= pos.
+    `pos` is an int32 scalar or a (B,) array of per-row cache lengths - 1
+    (batched slot caches at staggered decode positions)."""
     B, H, hd = q.shape
     KH, S = k.shape[1], k.shape[2]
     G = H // KH
@@ -16,7 +18,7 @@ def decode_attention_ref(q, k, v, pos):
     vv = jnp.repeat(v, G, axis=1)
     s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kk.astype(jnp.float32))
     s = s / math.sqrt(hd)
-    mask = jnp.arange(S)[None, None] <= pos
+    mask = jnp.arange(S)[None, None] <= jnp.asarray(pos).reshape(-1, 1, 1)
     s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhk,bhkd->bhd", p, vv.astype(jnp.float32)).astype(q.dtype)

@@ -119,7 +119,11 @@ def serve_generative(n=48, *, decode_tokens=16, budget=0.02, acc=0.99, load=0.5,
     accuracy constraint. The latency profile uses the full qwen2-1.5b
     shape truncated to the tiny model's layer count, so sites align with
     the served model while step times reflect production scale."""
-    tiny = get_tiny("qwen2-1.5b").replace(n_layers=layers, vocab_size=128)
+    # decode_attn='ref' routes single-token attention through the
+    # flash-decode wrapper (kernels/decode_attention) — the jnp oracle on
+    # CPU; 'kernel' is the Pallas path on real hardware
+    tiny = get_tiny("qwen2-1.5b").replace(n_layers=layers, vocab_size=128,
+                                          decode_attn="ref")
     model = build_model(tiny)
     seq_len = 24
     stream = make_decode_stream(max(2 * n, 256), seq_len=seq_len + 1,
@@ -154,7 +158,8 @@ def serve_generative(n=48, *, decode_tokens=16, budget=0.02, acc=0.99, load=0.5,
     ctl = ApparateController(ns, prof, ControllerConfig(
         max_slots=slots, ramp_budget_frac=budget, acc_constraint=acc))
     runner = DecodeRunner(model, state["params"], stream.data[:, :seq_len],
-                          max_new_tokens=decode_tokens + 2, max_slots=slots)
+                          max_new_tokens=decode_tokens + 2, max_slots=slots,
+                          n_slots=mbs)
     eng = GenerativeEngine(prof, gcfg, runner, ctl)
     mo = summarize_generative(eng.run(reqs), horizon_ms=eng.makespan_ms)
     out = {

@@ -235,6 +235,22 @@ def window_mask(Sq: int, Sk: int, q_offset, window: int) -> jnp.ndarray:
     return ((kpos <= qpos) & (kpos > qpos - window))[None, None]
 
 
+def _update_cache_rows(cache_leaf, new, idx):
+    """Write `new` (B, S_new, ...) into `cache_leaf` (B, S, ...) at
+    sequence offset `idx` — a shared scalar (all rows at the same decode
+    position) or an int32[B] of per-row positions (batched slot caches:
+    continuous batching leaves every slot at its own position, so each row
+    scatters independently)."""
+    new = new.astype(cache_leaf.dtype)
+    if jnp.ndim(idx) == 0:
+        return jax.lax.dynamic_update_slice_in_dim(cache_leaf, new, idx, axis=1)
+
+    def _row(c, x, i):
+        return jax.lax.dynamic_update_slice(c, x, (i,) + (0,) * (c.ndim - 1))
+
+    return jax.vmap(_row)(cache_leaf, new, jnp.asarray(idx, jnp.int32))
+
+
 def attn_apply(
     cfg,
     p,
@@ -248,13 +264,18 @@ def attn_apply(
     cache_index=None,
     rope_theta=None,
     ring_window=None,
+    decode_impl: str = "dense",
 ):
     """GQA attention. If `cache` (dict k,v: (B, S, K, hd)) is given, new k/v
-    are written at `cache_index` and attention runs against the cache.
-    `ring_window=W` stores only the last W tokens (slot = pos % W): the
-    windowed-cache optimization for local-attention layers — the caller
-    passes `cache_index = pos % W` at decode and a ring mask.
-    Returns (out, new_cache)."""
+    are written at `cache_index` (scalar or per-row int32[B]) and attention
+    runs against the cache. `ring_window=W` stores only the last W tokens
+    (slot = pos % W): the windowed-cache optimization for local-attention
+    layers — the caller passes `cache_index = pos % W` at decode and a ring
+    mask. `decode_impl` selects the single-token cache-attention path:
+    'dense' (masked sdpa) or the flash-decode wrapper
+    (`kernels/decode_attention.attend_decode`) as 'ref' | 'kernel' |
+    'interpret' — only meaningful for non-ring decode steps where the write
+    index equals the token position. Returns (out, new_cache)."""
     B, S, d = x.shape
     H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     q = x @ p["wq"]
@@ -285,12 +306,33 @@ def attn_apply(
             new_cache = {"k": rk, "v": rv}
             # attention runs against the full in-flight k/v (window-masked)
         else:
-            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
-            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
+            ck = _update_cache_rows(cache["k"], k, cache_index)
+            cv = _update_cache_rows(cache["v"], v, cache_index)
             new_cache = {"k": ck, "v": cv}
             k, v = ck, cv
     q = constrain(q, axes.aspec("data", None, "model", None), mesh)
-    out = sdpa(q, k, v, mask)
+    if (
+        decode_impl != "dense"
+        and cache is not None
+        and ring_window is None
+        and S == 1
+    ):
+        # flash-decode fast path: one single-token query against the full
+        # cache, masked by position (== the write index for non-ring
+        # caches; scalar or per-row). Avoids materializing the dense
+        # (B, H, 1, S) mask/score tensors of the sdpa path.
+        from repro.kernels.decode_attention import attend_decode
+
+        out = attend_decode(
+            q[:, 0],
+            k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3),
+            jnp.asarray(cache_index, jnp.int32),
+            use_kernel=decode_impl in ("kernel", "interpret"),
+            interpret=decode_impl == "interpret",
+        )[:, None]
+    else:
+        out = sdpa(q, k, v, mask)
     out = out.reshape(B, S, H * hd)
     return out @ p["wo"], new_cache
 
@@ -345,8 +387,8 @@ def mla_apply(
     k_pe = apply_rope(k_pe[:, :, None, :], sin, cos)[:, :, 0]  # single shared head
     new_cache = None
     if cache is not None:
-        cc = jax.lax.dynamic_update_slice_in_dim(cache["c"], c.astype(cache["c"].dtype), cache_index, axis=1)
-        cp = jax.lax.dynamic_update_slice_in_dim(cache["k_pe"], k_pe.astype(cache["k_pe"].dtype), cache_index, axis=1)
+        cc = _update_cache_rows(cache["c"], c, cache_index)
+        cp = _update_cache_rows(cache["k_pe"], k_pe, cache_index)
         new_cache = {"c": cc, "k_pe": cp}
         c, k_pe = cc, cp
     Sk = c.shape[1]

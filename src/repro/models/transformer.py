@@ -289,10 +289,14 @@ class LM:
             ci = cache_index
             if ring is not None and ci is not None:
                 ci = cache_index % ring  # ring slot at decode
+            # local windowed layers keep the dense masked path (the flash
+            # wrapper only knows "attend to <= pos"); everything else routes
+            # single-token decode through kernels/decode_attention
+            impl = "dense" if (slot.is_local and cfg.window) else cfg.decode_attn
             out, nc = LY.attn_apply(
                 cfg, p["mixer"], x, positions=positions, mask=mask, axes=axes,
                 mesh=mesh, cache=sub, cache_index=ci, rope_theta=theta,
-                ring_window=ring,
+                ring_window=ring, decode_impl=impl,
             )
             if nc is not None:
                 new_cache.update(nc)
@@ -537,24 +541,29 @@ class LM:
 
     def decode(self, params, cache, tokens, pos, *, active_sites=None,
                axes=LY.TEST_AXES, mesh=None, moe_impl="ep"):
-        """One decode step. tokens: (B,1); pos: int32 scalar (write index).
-        Returns (new_cache, outs)."""
+        """One decode step. tokens: (B,1); pos: int32 scalar (shared write
+        index) or int32[B] per-row write indices — batched slot caches where
+        continuous batching leaves every row at its own position (each row
+        scatters its token and masks its own history). Returns
+        (new_cache, outs)."""
         cfg = self.cfg
         B, S = tokens.shape
         assert S == 1
-        positions = jnp.full((1, 1), 0, jnp.int32) + pos
+        pos = jnp.asarray(pos, jnp.int32)
+        per_row = pos.ndim >= 1
+        positions = pc = pos.reshape(-1, 1)  # (B, 1) per-row | (1, 1) shared
         h = LY.embed_apply(cfg, params["tok"], tokens, positions)
         # cache length from any attn cache leaf (mamba-only models have none)
         try:
             Sc = _cache_len(cache)
             kpos = jnp.arange(Sc)[None, :]
-            mask_full = (kpos <= pos)[None, None]
+            mask_full = (kpos <= pc)[:, None, None, :]
             if cfg.windowed_cache and cfg.window:
                 # ring semantics: slot j holds token pos − ((pos − j) mod W)
-                j = jnp.arange(cfg.window)
-                mask_local = (((pos - j) % cfg.window) <= pos)[None, None, None, :]
+                j = jnp.arange(cfg.window)[None, :]
+                mask_local = (((pc - j) % cfg.window) <= pc)[:, None, None, :]
             elif cfg.window:
-                mask_local = ((kpos <= pos) & (kpos > pos - cfg.window))[None, None]
+                mask_local = ((kpos <= pc) & (kpos > pc - cfg.window))[:, None, None, :]
             else:
                 mask_local = mask_full
         except ValueError:
@@ -563,7 +572,8 @@ class LM:
         h, pooled, new_cache, _ = self._stack(
             params, h, positions=positions, mask_full=mask_full,
             mask_local=mask_local, axes=axes, mesh=mesh, caches=cache,
-            cache_index=pos, memory=None, moe_impl=moe_impl, pool_idx=pool_idx,
+            cache_index=(pos.reshape(-1) if per_row else pos), memory=None,
+            moe_impl=moe_impl, pool_idx=pool_idx,
         )
         outs = self._head_stats(params, h, pooled, active_sites,
                                 axes=axes, mesh=mesh)

@@ -31,6 +31,7 @@ from repro.serving.runner import (
     ClassifierRunner,
     DecodeRunner,
     LMTokenRunner,
+    LoopDecodeRunner,
     SyntheticDecodeRunner,
     SyntheticRunner,
 )
@@ -64,6 +65,7 @@ __all__ = [
     "ClassifierRunner",
     "DecodeRunner",
     "LMTokenRunner",
+    "LoopDecodeRunner",
     "SyntheticRunner",
     "SyntheticDecodeRunner",
 ]

@@ -205,4 +205,9 @@ class GenerativeEngine:
         if self.controller is not None:
             out["ramp_overhead_ms"] = self.controller.total_ramp_overhead(1)
             out["active_ramps"] = float(len(self.controller.active))
+        if self.runner is not None and hasattr(self.runner, "dispatches"):
+            # accelerator dispatches issued by the runner across the run:
+            # 1/step for the batched DecodeRunner, B/step for the per-slot
+            # loop — the tension bench_decode_dispatch measures
+            out["decode_dispatches"] = float(self.runner.dispatches)
         return out

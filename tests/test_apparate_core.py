@@ -14,11 +14,14 @@ from repro.core import (
     ControllerConfig,
     build_profile,
     evaluate_config,
+    evaluate_configs,
     exit_rates,
     grid_search_thresholds,
     ramp_utilities,
     simulate_exits,
+    simulate_exits_many,
     tune_thresholds,
+    tune_thresholds_reference,
 )
 from repro.core.exits import RecordWindow
 from repro.core.ramp_adjust import adjust_ramps
@@ -149,6 +152,44 @@ def test_tuner_zero_start():
     wd = synth_window(seed=0)
     res = tune_thresholds(wd, [0], PROF, n_sites=NS, acc_constraint=1.1)  # impossible
     assert np.all(res.thresholds == 0)
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("difficulty", [0.3, 0.6])
+def test_vectorized_tuner_bit_identical_to_reference(seed, difficulty):
+    """The vectorized hot loop (all K per-round candidates in one batched
+    `simulate_exits` pass, per-site cost vectors hoisted) must reproduce
+    the sequential Algorithm-1 implementation EXACTLY — thresholds,
+    savings, accuracy, and round count, bit for bit."""
+    rng = np.random.default_rng(seed)
+    wd = synth_window(n=int(rng.integers(64, 512)), seed=seed, difficulty=difficulty)
+    act = sorted(rng.choice(NS, size=int(rng.integers(1, 7)), replace=False).tolist())
+    acc_c = float(rng.choice([0.95, 0.99, 0.995]))
+    a = tune_thresholds(wd, act, PROF, n_sites=NS, acc_constraint=acc_c)
+    b = tune_thresholds_reference(wd, act, PROF, n_sites=NS, acc_constraint=acc_c)
+    np.testing.assert_array_equal(a.thresholds, b.thresholds)
+    assert a.savings_ms == b.savings_ms
+    assert a.accuracy == b.accuracy
+    assert a.rounds == b.rounds
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_evaluate_configs_rows_match_evaluate_config(seed):
+    """Each row of the batched evaluator == the sequential evaluator."""
+    rng = np.random.default_rng(seed)
+    wd = synth_window(seed=seed, difficulty=0.5)
+    act = sorted(rng.choice(NS, size=4, replace=False).tolist())
+    thr_batch = rng.random((7, NS)).astype(np.float32)
+    accs, savs, rates, exs = evaluate_configs(wd, thr_batch, act, PROF)
+    ex_many = simulate_exits_many(wd[0], wd[2], thr_batch, act)
+    for c in range(thr_batch.shape[0]):
+        ev = evaluate_config(wd, thr_batch[c], act, PROF)
+        assert ev.accuracy == accs[c] and ev.mean_saved_ms == savs[c]
+        assert ev.exit_rate == rates[c]
+        np.testing.assert_array_equal(ev.exit_sites, exs[c])
+        np.testing.assert_array_equal(
+            simulate_exits(wd[0], wd[2], thr_batch[c], act), ex_many[c]
+        )
 
 
 # -- ramp utilities / adjustment ----------------------------------------------

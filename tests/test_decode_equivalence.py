@@ -1,0 +1,160 @@
+"""Batched single-dispatch decode must be EXACTLY the per-slot loop.
+
+`DecodeRunner` (one batched slot cache, one jitted `model.decode` per
+engine step with per-row positions) and `LoopDecodeRunner` (independent
+B=1 caches, one dispatch per slot) must produce bit-identical
+(ramp_labels, ramp_unc, final) records and identical greedy trajectories
+across staggered admits/retires — slots at different decode positions,
+freed slots reused mid-run — including the k=0 no-ramp variant. The
+batched runner's only legitimate difference is its dispatch count.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_tiny
+from repro.models import build_model
+from repro.serving import DecodeRunner, LoopDecodeRunner
+
+
+@pytest.fixture(scope="module", params=["ref", "dense"])
+def runner_pair(request):
+    """Untrained tiny LM (records are arbitrary but deterministic — ideal
+    for equivalence). 'ref' routes decode attention through the
+    flash-decode wrapper (`kernels/decode_attention.attend_decode` with a
+    per-row pos array); 'dense' keeps the masked-sdpa path."""
+    cfg = get_tiny("qwen2-1.5b").replace(
+        n_layers=4, vocab_size=128, decode_attn=request.param
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.random.default_rng(1).integers(0, 128, (10, 12)).astype(np.int32)
+
+    def mk(cls, **kw):
+        return cls(model, params, prompts, max_new_tokens=14, max_slots=3, **kw)
+
+    return mk(DecodeRunner), mk(LoopDecodeRunner)
+
+
+def _check_step(batched, loop, slots, active, tag):
+    lb, ub, fb = batched.step(slots, active)
+    ll, ul, fl = loop.step(slots, active)
+    np.testing.assert_array_equal(lb, ll, err_msg=f"{tag}: ramp_labels")
+    np.testing.assert_array_equal(ub, ul, err_msg=f"{tag}: ramp_unc")
+    np.testing.assert_array_equal(fb, fl, err_msg=f"{tag}: final")
+    assert lb.dtype == ll.dtype and ub.dtype == ul.dtype and fb.dtype == fl.dtype
+    return fb
+
+
+def test_staggered_admits_and_retires_bit_identical(runner_pair):
+    """The PR's acceptance scenario: slots admitted at different times (so
+    their cache positions diverge), freed mid-run, and reused — every step
+    record bit-identical between one batched dispatch and the B-dispatch
+    loop."""
+    batched, loop = runner_pair
+    traj = {"batched": [], "loop": []}
+
+    t0b = batched.start(0, 0)
+    t0l = loop.start(0, 0)
+    assert t0b == t0l
+    _check_step(batched, loop, [0], [1], "lone slot")
+    assert batched.start(2, 3) == loop.start(2, 3)  # staggered admit
+    _check_step(batched, loop, [0, 2], [0, 2], "two staggered slots")
+    assert batched.start(1, 5) == loop.start(1, 5)
+    # caller passes slots in engine (sorted-sid) and arbitrary orders
+    _check_step(batched, loop, [0, 1, 2], [2, 0], "three slots")
+    _check_step(batched, loop, [2, 0, 1], [0, 1, 2], "permuted slot order")
+    batched.free(2)
+    loop.free(2)
+    _check_step(batched, loop, [0, 1], [1], "after retire")
+    # stepping a SUBSET while another slot stays live must not perturb the
+    # idle slot (bucket padding never touches live-but-unstepped rows)
+    _check_step(batched, loop, [1], [1], "subset step")
+    _check_step(batched, loop, [0, 1], [1], "idle slot unperturbed")
+    assert batched.start(2, 7) == loop.start(2, 7)  # slot reuse, fresh prompt
+    for i in range(3):
+        f = _check_step(batched, loop, [0, 1, 2], [0, 2], f"reused round {i}")
+        traj["batched"].append(f)
+    # all 4 rows live, 3 stepped: the bucket pad has no free row left and
+    # must duplicate a stepped slot rather than touch live slot 2
+    assert batched.start(3, 6) == loop.start(3, 6)
+    _check_step(batched, loop, [0, 1, 3], [0, 2], "dup-padded subset")
+    _check_step(batched, loop, [0, 1, 2, 3], [0, 2], "all four after dup pad")
+    # one batched dispatch per step vs one per slot per step
+    assert batched.dispatches == 12
+    assert loop.dispatches == 1 + 2 + 3 + 3 + 2 + 1 + 2 + 3 * 3 + 3 + 4
+
+
+def test_noramp_variant_bit_identical(runner_pair):
+    """k=0 (controller bootstrap / budget-busted): the ramp-free compiled
+    variant must also match exactly, with empty (0, B) record arrays."""
+    batched, loop = runner_pair
+    for s, item in ((0, 2), (1, 4)):
+        assert batched.start(s, item) == loop.start(s, item)
+    for i in range(3):
+        lb, ub, fb = batched.step([0, 1], [])
+        ll, ul, fl = loop.step([0, 1], [])
+        assert lb.shape == ll.shape == (0, 2)
+        assert ub.shape == ul.shape == (0, 2)
+        np.testing.assert_array_equal(fb, fl, err_msg=f"noramp round {i}")
+    batched.free(0)
+    loop.free(0)
+    with pytest.raises(KeyError):
+        batched.step([0], [])
+    with pytest.raises(KeyError):
+        loop.step([0], [])
+
+
+def test_greedy_trajectories_identical(runner_pair):
+    """Whole-request greedy token streams (the agreement baseline the
+    engine serves) must be identical token for token."""
+    batched, loop = runner_pair
+    n_tokens = 6
+    seqs = {"batched": {0: [], 1: []}, "loop": {0: [], 1: []}}
+    for name, r in (("batched", batched), ("loop", loop)):
+        for s, item in ((0, 8), (1, 9)):
+            seqs[name][s].append(r.start(s, item))
+        for _ in range(n_tokens):
+            _, _, fin = r.step([0, 1], [1, 2])
+            for b, s in enumerate([0, 1]):
+                seqs[name][s].append(int(fin[b]))
+        for s in (0, 1):
+            r.free(s)
+    assert seqs["batched"] == seqs["loop"]
+
+
+def test_engine_end_to_end_identical_records(runner_pair):
+    """Through `GenerativeEngine` + a real `ApparateController` pair with
+    identical configs: responses (tokens, exit sites, release times) must
+    be identical — the engine semantics are unchanged by batching."""
+    from repro.configs import get_config
+    from repro.core import ApparateController, ControllerConfig, build_profile
+    from repro.serving import (
+        GenerativeConfig,
+        GenerativeEngine,
+        make_gen_requests,
+        maf_trace,
+        offered_decode_qps,
+    )
+
+    batched, loop = runner_pair
+    ns = batched.n_sites
+    prof_cfg = get_config("gpt2-medium").replace(n_classes=0, ramp_style="tied")
+    sites = [round((i + 1) * prof_cfg.n_layers / (ns + 1)) - 1 for i in range(ns)]
+    prof = build_profile(prof_cfg, mode="decode", chips=1, sites=sites, charge_kv=True)
+    qps = offered_decode_qps(prof, max_batch_size=3, tokens_per_request=5, load=0.8)
+    reqs = make_gen_requests(
+        maf_trace(6, mean_qps=qps, seed=2), n_tokens=5, prompt_len=12,
+        slo_ms=3 * prof.vanilla_time(1),
+    )
+    resp = {}
+    for name, r in (("batched", batched), ("loop", loop)):
+        ctl = ApparateController(ns, prof, ControllerConfig(max_slots=3))
+        eng = GenerativeEngine(prof, GenerativeConfig(max_batch_size=3), r, ctl)
+        resp[name] = eng.run(reqs)
+    for rb, rl in zip(resp["batched"], resp["loop"]):
+        assert rb.rid == rl.rid
+        assert rb.tokens == rl.tokens
+        assert rb.final_tokens == rl.final_tokens
+        assert rb.exit_sites == rl.exit_sites
+        np.testing.assert_allclose(rb.release_ms, rl.release_ms, rtol=0, atol=0)

@@ -168,3 +168,26 @@ def test_decode_attention(B, H, KH, S, hd, pos):
     o_k = decode_attention(q, k, v, jnp.int32(pos), block_s=32, interpret=True)
     o_r = decode_attention_ref(q, k, v, jnp.int32(pos))
     np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("S", [48, 47])  # non-multiple and PRIME cache lengths
+def test_decode_attention_per_row_pos(S):
+    """Per-row cache positions (batched slot caches at staggered decode
+    offsets): the kernel masks each row at its own pos, matching the ref
+    and per-row scalar-pos calls. Cache lengths that block_s does not
+    divide (incl. primes) keep the full tile size — the padded tail tile
+    is masked in-kernel, never shrunk."""
+    B, H, KH, hd = 3, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, KH, S, hd))
+    v = jax.random.normal(ks[2], (B, KH, S, hd))
+    pos = jnp.asarray([5, 31, S - 1], jnp.int32)
+    o_k = decode_attention(q, k, v, pos, block_s=32, interpret=True)
+    o_r = decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), rtol=2e-5, atol=2e-5)
+    # each row == the same row computed alone with its scalar pos
+    for b in range(B):
+        o_b = decode_attention_ref(q[b : b + 1], k[b : b + 1], v[b : b + 1],
+                                   jnp.int32(int(pos[b])))
+        np.testing.assert_array_equal(np.asarray(o_r[b]), np.asarray(o_b[0]))

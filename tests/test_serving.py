@@ -64,15 +64,19 @@ def test_clockwork_slo_awareness():
 
 def test_apparate_preserves_throughput_and_cuts_latency():
     """The paper's headline: same batches, lower response latency, tail
-    within the ramp budget."""
-    n = 600
+    within the ramp budget. Since `SyntheticRunner` makes hard items
+    DISAGREE at every ramp (over-opened thresholds cost accuracy, as with
+    a trained model), the median win needs a predominantly-easy stream and
+    enough samples for the controller to adapt — the old 0.7/600 setting
+    only won because tiled-agree hard rows made every exit free."""
+    n = 900
     reqs = _reqs(n=n, qps_scale=0.6, seed=5)
     pf = PlatformConfig(policy="tfserve", max_batch_size=8,
                         batch_timeout_ms=PROF.vanilla_time(1))
     base = summarize(ServingSimulator(PROF, pf).run(reqs))
     ns = len(PROF.sites)
     ctl = ApparateController(ns, PROF, ControllerConfig(max_slots=4, ramp_budget_frac=0.02))
-    sim = ServingSimulator(PROF, pf, SyntheticRunner(ns, exit_site=4), ctl)
+    sim = ServingSimulator(PROF, pf, SyntheticRunner(ns, exit_site=4, easy_frac=0.9), ctl)
     ours = summarize(sim.run(reqs))
     assert ours["exit_rate"] > 0.2
     assert ours["p50_ms"] < base["p50_ms"]  # latency wins
@@ -101,12 +105,44 @@ def test_classifier_runner_no_ramp_compiled_variant():
     idx = np.arange(8)
     labels, unc, f0 = runner.infer(idx, [])
     assert labels.shape == (0, 8) and unc.shape == (0, 8)
-    assert runner.compiles == 1 and runner.noramp_compiles == 1
+    # a no-ramp compile is NOT a ramp-set change: it must land only in
+    # noramp_compiles (it used to be double-counted into `compiles`,
+    # inflating the paper's recompile-overhead stat)
+    assert runner.compiles == 0 and runner.noramp_compiles == 1
     _, _, f1 = runner.infer(idx, [0])
-    assert runner.compiles == 2 and runner.noramp_compiles == 1  # counted apart
+    assert runner.compiles == 1 and runner.noramp_compiles == 1  # counted apart
     np.testing.assert_array_equal(f0, f1)  # same final labels either way
     runner.infer(idx, [])  # cached: no recompile
-    assert runner.compiles == 2
+    assert runner.compiles == 1 and runner.noramp_compiles == 1
+
+
+def test_synthetic_runner_hard_items_cost_accuracy_when_forced_open():
+    """Regression: `SyntheticRunner.infer` used to tile the original
+    model's label into every ramp row, so "hard" items still AGREED and
+    an over-opened threshold never cost accuracy (unlike
+    `SyntheticDecodeRunner`, whose hard tokens disagree). Hard rows must
+    disagree, so forcing thresholds open degrades released accuracy."""
+    ns = len(PROF.sites)
+    runner = SyntheticRunner(ns, exit_site=2, easy_frac=0.6)
+    items = np.arange(500)
+    labels, unc, final = runner.infer(items, [3])
+    hard = unc[0] > 0.5
+    assert hard.any() and (~hard).any()
+    assert (labels[0][~hard] == final[~hard]).all()  # easy rows agree
+    assert (labels[0][hard] != final[hard]).all()  # hard rows DISAGREE
+    # below exit_site even easy items are undecided -> all rows disagree
+    lab_lo, unc_lo, _ = runner.infer(items, [1])
+    assert (lab_lo[0] != final).all() and (unc_lo[0] > 0.5).all()
+    # forced-open thresholds exit every item at site 3: released labels are
+    # wrong for exactly the hard fraction
+    ctl = ApparateController(ns, PROF, ControllerConfig(max_slots=4))
+    ctl.active = [3]
+    ctl.thresholds = np.ones(ns, np.float32)
+    dec = ctl.observe(labels, unc, final)
+    assert dec.exited_early.all()
+    wrong = (dec.released_labels != final).mean()
+    np.testing.assert_allclose(wrong, hard.mean())
+    assert wrong > 0.2  # accuracy genuinely degrades
 
 
 def test_video_trace_shape():
