@@ -61,7 +61,11 @@ def synthetic_generative(n=150, tokens=24, mbs=8, load=0.6, easy_frac=0.7, seed=
     return {
         "vanilla": mb,
         "apparate": mo,
-        "tpt_p50_win_pct": 100.0 * (mb["tpt_p50_ms"] - mo["tpt_p50_ms"]) / mb["tpt_p50_ms"],
+        # 0-TPT-sample streams (single-token requests) report 0.0, not NaN
+        "tpt_p50_win_pct": (
+            100.0 * (mb["tpt_p50_ms"] - mo["tpt_p50_ms"]) / mb["tpt_p50_ms"]
+            if mb["tpt_p50_ms"] > 0 else 0.0
+        ),
         "engine": eng.stats(),
         "active_ramps": list(map(int, ctl.active)),
     }

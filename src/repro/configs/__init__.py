@@ -86,7 +86,12 @@ class ArchConfig:
     pallas_head: str = "off"
     # single-token decode attention against the KV cache: 'dense' (masked
     # sdpa) | 'ref' (kernels/decode_attention jnp oracle) | 'kernel'
-    # (flash-decode Pallas) | 'interpret' (Pallas interpret mode, CPU)
+    # (flash-decode Pallas) | 'interpret' (Pallas interpret mode, CPU).
+    # 'paged' | 'paged-kernel' | 'paged-interpret' select the PAGED block
+    # pool layout (jnp oracle / Pallas / Pallas-interpret): the decode
+    # cache becomes a global pool of fixed-size blocks addressed through a
+    # per-slot block table (see models.transformer.LM.paged_cache_schema
+    # and serving.runner.BlockAllocator)
     decode_attn: str = "dense"
     train_remat: bool = True  # activation checkpointing in train_step
     remat_policy: str = "full"  # 'full' (save nothing) | 'dots' (save matmul outputs)

@@ -1,3 +1,7 @@
 from repro.kernels.decode_attention.kernel import decode_attention
-from repro.kernels.decode_attention.ops import attend_decode
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.ops import attend_decode, attend_decode_paged
+from repro.kernels.decode_attention.paged import paged_decode_attention
+from repro.kernels.decode_attention.ref import (
+    decode_attention_ref,
+    paged_decode_attention_ref,
+)

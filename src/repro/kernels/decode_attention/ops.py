@@ -1,4 +1,4 @@
-"""Jitted wrapper for flash-decode."""
+"""Jitted wrappers for flash-decode (contiguous and paged layouts)."""
 from __future__ import annotations
 
 from functools import partial
@@ -6,7 +6,11 @@ from functools import partial
 import jax
 
 from repro.kernels.decode_attention.kernel import decode_attention
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.paged import paged_decode_attention
+from repro.kernels.decode_attention.ref import (
+    decode_attention_ref,
+    paged_decode_attention_ref,
+)
 
 
 @partial(jax.jit, static_argnames=("use_kernel", "interpret"))
@@ -14,3 +18,12 @@ def attend_decode(q, k, v, pos, *, use_kernel=True, interpret=False):
     if use_kernel:
         return decode_attention(q, k, v, pos, interpret=interpret)
     return decode_attention_ref(q, k, v, pos)
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def attend_decode_paged(q, k_pool, v_pool, block_table, pos, *,
+                        use_kernel=True, interpret=False):
+    if use_kernel:
+        return paged_decode_attention(q, k_pool, v_pool, block_table, pos,
+                                      interpret=interpret)
+    return paged_decode_attention_ref(q, k_pool, v_pool, block_table, pos)

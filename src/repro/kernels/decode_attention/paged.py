@@ -1,0 +1,117 @@
+"""Paged flash-decode Pallas kernel: single-token query against a block
+KV pool.
+
+The cache is a global pool of fixed-size blocks ``(P, bs, KH, hd)`` plus a
+per-row block table ``int32[B, nb]`` mapping virtual token position
+``t`` to pool slot ``(table[b, t // bs], t % bs)``. The kernel walks the
+block table per row — the table and per-row positions ride in as
+scalar-prefetch operands so the KV BlockSpec index map can resolve
+``table[b, j]`` before the tile DMA issues (the vLLM paged-attention
+pattern). The partially-filled last block is masked the same way the
+contiguous kernel masks its padded tail tile: ``kpos <= pos`` kills the
+scores and ``v`` is zeroed under the mask so stale pool lanes cannot
+poison the p@v dot.
+
+Table entries past a row's allocated blocks must still be VALID pool
+indices (the allocator keeps them at 0, the reserved trash block): they
+are fully masked, but the index map dereferences them.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tab_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            *, bs, scale, nb, H):
+    js = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)  # (1, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)  # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    pos = pos_ref[pl.program_id(0) // H]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (1, bs)
+    kpos = js * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    # kpos <= pos masks both unwritten offsets of the partial last block
+    # and whole unallocated blocks (their table entries point at the trash
+    # block); v is zeroed so stale pool values can't poison the p@v dot
+    mask = kpos <= pos
+    s = jnp.where(mask, s, NEG_INF)
+    v = jnp.where(mask[0][:, None], v, 0.0)
+    tile_m = jnp.max(s, axis=-1)
+
+    @pl.when(js == 0)
+    def _init():
+        m_ref[0] = tile_m
+        p = jnp.where(mask, jnp.exp(s - tile_m[:, None]), 0.0)
+        l_ref[0] = jnp.sum(p, -1)
+        o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(js > 0)
+    def _step():
+        m_old = m_ref[0]
+        m_new = jnp.maximum(m_old, tile_m)
+        alpha = jnp.exp(m_old - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        l_ref[0] = l_ref[0] * alpha + jnp.sum(p, -1)
+        o_ref[0] = o_ref[0] * alpha[:, None] + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        m_ref[0] = m_new
+
+    @pl.when(js == nb - 1)
+    def _final():
+        o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-30)[:, None]
+
+
+def paged_decode_attention(
+    q: jax.Array,  # (B, H, hd) single query token per row
+    k_pool: jax.Array,  # (P, bs, KH, hd) global block pool
+    v_pool: jax.Array,
+    block_table: jax.Array,  # int32 (B, nb): pool block id per virtual block
+    pos,  # int32 (B,): cache length - 1 per row (attend to <= pos)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, hd = q.shape
+    P, bs, KH, _ = k_pool.shape
+    nb = block_table.shape[1]
+    G = H // KH
+    scale = 1.0 / math.sqrt(hd)
+    qf = q.reshape(B * H, 1, hd)
+    table = jnp.asarray(block_table, jnp.int32)
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+
+    def kv_map(bh, js, tab_ref, pos_ref):
+        return (tab_ref[bh // H, js], 0, ((bh % H) // G), 0)
+
+    kernel = functools.partial(_kernel, bs=bs, scale=scale, nb=nb, H=H)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block table + per-row positions
+        grid=(B * H, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda bh, js, tab_ref, pos_ref: (bh, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), kv_map),
+            pl.BlockSpec((1, bs, 1, hd), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, hd), lambda bh, js, tab_ref, pos_ref: (bh, 0, 0)),
+            pl.BlockSpec((1, 1), lambda bh, js, tab_ref, pos_ref: (bh, 0)),
+            pl.BlockSpec((1, 1), lambda bh, js, tab_ref, pos_ref: (bh, 0)),
+        ],
+    )
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, 1, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(table, pos_arr, qf, k_pool, v_pool)
+    return o.reshape(B, H, hd).astype(q.dtype)

@@ -7,6 +7,22 @@ import jax
 import jax.numpy as jnp
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, block_table, pos):
+    """Paged oracle. q: (B,H,hd); k_pool/v_pool: (P, bs, KH, hd) block
+    pools; block_table: int32 (B, nb) mapping virtual block j of row b to
+    a pool slot. Gathers each row's blocks back into the contiguous
+    (B, KH, nb*bs, hd) layout and defers to ``decode_attention_ref`` — so
+    when ``nb*bs`` equals the contiguous cache length the result is
+    bit-identical to the unpaged path, which is exactly what the
+    paged-vs-contiguous equivalence harness asserts."""
+    B = q.shape[0]
+    P, bs, KH, hd = k_pool.shape
+    nb = block_table.shape[1]
+    k = k_pool[block_table].reshape(B, nb * bs, KH, hd).transpose(0, 2, 1, 3)
+    v = v_pool[block_table].reshape(B, nb * bs, KH, hd).transpose(0, 2, 1, 3)
+    return decode_attention_ref(q, k, v, pos)
+
+
 def decode_attention_ref(q, k, v, pos):
     """q: (B,H,hd); k,v: (B,KH,S,hd); attend to cache slots <= pos.
     `pos` is an int32 scalar or a (B,) array of per-row cache lengths - 1

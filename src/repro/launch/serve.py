@@ -113,17 +113,26 @@ def serve(domain: str, n: int, *, policy="tfserve", budget=0.02, acc=0.99,
 
 
 def serve_generative(n=48, *, decode_tokens=16, budget=0.02, acc=0.99, load=0.5,
-                     seed=2, slots=4, layers=6, verbose=True):
+                     seed=2, slots=4, layers=6, kv_block_size=0, kv_blocks=None,
+                     verbose=True):
     """End-to-end generative decode serving on a trained tiny LM: vanilla
     (no-EE) vs Apparate per-token exits, KV catch-up charged, at the same
     accuracy constraint. The latency profile uses the full qwen2-1.5b
     shape truncated to the tiny model's layer count, so sites align with
-    the served model while step times reflect production scale."""
+    the served model while step times reflect production scale.
+
+    ``kv_block_size > 0`` switches the decode cache to the PAGED block
+    pool (``decode_attn='paged'``): KV memory scales with live tokens
+    instead of ``n_slots * max_len``; ``kv_blocks`` caps the pool (default
+    auto-sizes to full slot capacity)."""
     # decode_attn='ref' routes single-token attention through the
     # flash-decode wrapper (kernels/decode_attention) — the jnp oracle on
-    # CPU; 'kernel' is the Pallas path on real hardware
-    tiny = get_tiny("qwen2-1.5b").replace(n_layers=layers, vocab_size=128,
-                                          decode_attn="ref")
+    # CPU; 'kernel' is the Pallas path on real hardware. 'paged' is the
+    # block-pool analogue ('paged-kernel' on real hardware).
+    tiny = get_tiny("qwen2-1.5b").replace(
+        n_layers=layers, vocab_size=128,
+        decode_attn="paged" if kv_block_size else "ref",
+    )
     model = build_model(tiny)
     seq_len = 24
     stream = make_decode_stream(max(2 * n, 256), seq_len=seq_len + 1,
@@ -157,17 +166,26 @@ def serve_generative(n=48, *, decode_tokens=16, budget=0.02, acc=0.99, load=0.5,
     mb = summarize_generative(base_eng.run(reqs), horizon_ms=base_eng.makespan_ms)
     ctl = ApparateController(ns, prof, ControllerConfig(
         max_slots=slots, ramp_budget_frac=budget, acc_constraint=acc))
+    rkw = {}
+    if kv_block_size:
+        rkw = dict(kv_block_size=kv_block_size, kv_blocks=kv_blocks)
     runner = DecodeRunner(model, state["params"], stream.data[:, :seq_len],
                           max_new_tokens=decode_tokens + 2, max_slots=slots,
-                          n_slots=mbs)
+                          n_slots=mbs, **rkw)
     eng = GenerativeEngine(prof, gcfg, runner, ctl)
     mo = summarize_generative(eng.run(reqs), horizon_ms=eng.makespan_ms)
     out = {
         "mode": "generative", "n": n, "decode_tokens": decode_tokens,
         "vanilla": mb, "apparate": mo,
-        "tpt_p50_win_pct": 100.0 * (mb["tpt_p50_ms"] - mo["tpt_p50_ms"]) / mb["tpt_p50_ms"],
+        # single-token streams have no TPT samples (percentiles are 0.0):
+        # there is no per-token win to report, not a NaN/crash
+        "tpt_p50_win_pct": (
+            100.0 * (mb["tpt_p50_ms"] - mo["tpt_p50_ms"]) / mb["tpt_p50_ms"]
+            if mb["tpt_p50_ms"] > 0 else 0.0
+        ),
         "engine": eng.stats(), "controller": dict(ctl.stats),
         "active_ramps": list(map(int, ctl.active)),
+        "kv_cache": runner.kv_stats(),
     }
     if verbose:
         print(json.dumps(out, indent=1, default=float))
@@ -180,6 +198,12 @@ def main(argv=None):
     ap.add_argument("--domain", default="cv", choices=["cv", "nlp"])
     ap.add_argument("--n", type=int, default=None)
     ap.add_argument("--decode-tokens", type=int, default=16)
+    ap.add_argument("--kv-block-size", type=int, default=0,
+                    help="generative: >0 pages the decode KV cache into "
+                         "blocks of this many tokens (0 = contiguous rows)")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="generative: total paged KV pool blocks "
+                         "(default: auto-size to full slot capacity)")
     ap.add_argument("--policy", default="tfserve", choices=["tfserve", "clockwork"])
     ap.add_argument("--budget", type=float, default=0.02)
     ap.add_argument("--acc", type=float, default=0.99)
@@ -191,7 +215,8 @@ def main(argv=None):
     if args.mode == "generative":
         serve_generative(args.n if args.n is not None else 48,
                          decode_tokens=args.decode_tokens,
-                         budget=args.budget, acc=args.acc, load=args.load)
+                         budget=args.budget, acc=args.acc, load=args.load,
+                         kv_block_size=args.kv_block_size, kv_blocks=args.kv_blocks)
     else:
         serve(args.domain, args.n if args.n is not None else 3000,
               policy=args.policy, budget=args.budget,

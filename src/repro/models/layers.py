@@ -265,6 +265,7 @@ def attn_apply(
     rope_theta=None,
     ring_window=None,
     decode_impl: str = "dense",
+    block_table=None,
 ):
     """GQA attention. If `cache` (dict k,v: (B, S, K, hd)) is given, new k/v
     are written at `cache_index` (scalar or per-row int32[B]) and attention
@@ -275,7 +276,14 @@ def attn_apply(
     'dense' (masked sdpa) or the flash-decode wrapper
     (`kernels/decode_attention.attend_decode`) as 'ref' | 'kernel' |
     'interpret' — only meaningful for non-ring decode steps where the write
-    index equals the token position. Returns (out, new_cache)."""
+    index equals the token position.
+
+    With `block_table` (int32[B, nb]), `cache` is a PAGED block pool
+    (k/v: (P, bs, K, hd)): the single decode token scatters to pool slot
+    ``(block_table[b, pos // bs], pos % bs)`` and attention walks the
+    block table (`kernels/decode_attention.attend_decode_paged`;
+    `decode_impl` must be 'paged' | 'paged-kernel' | 'paged-interpret').
+    Returns (out, new_cache)."""
     B, S, d = x.shape
     H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     q = x @ p["wq"]
@@ -295,6 +303,33 @@ def attn_apply(
         q = apply_rope(q, sin, cos)
         k = apply_rope(k, sin, cos)
     new_cache = None
+    if block_table is not None:
+        if cache is None or ring_window is not None or S != 1:
+            raise ValueError("paged attention is a single-token decode path "
+                             "over a non-ring block pool")
+        if not decode_impl.startswith("paged"):
+            raise ValueError(f"block_table given but decode_impl={decode_impl!r}")
+        from repro.kernels.decode_attention import attend_decode_paged
+
+        bsz = cache["k"].shape[1]
+        idx = jnp.asarray(cache_index, jnp.int32).reshape(-1)
+        blk = jnp.take_along_axis(
+            jnp.asarray(block_table, jnp.int32), (idx // bsz)[:, None], axis=1
+        )[:, 0]
+        # per-row scatter by (block id, in-block offset) instead of flat pos;
+        # duplicate rows (bucket padding) write identical values, so the
+        # scatter stays deterministic without unique_indices
+        ck = cache["k"].at[blk, idx % bsz].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[blk, idx % bsz].set(v[:, 0].astype(cache["v"].dtype))
+        new_cache = {"k": ck, "v": cv}
+        q = constrain(q, axes.aspec("data", None, "model", None), mesh)
+        out = attend_decode_paged(
+            q[:, 0], ck, cv, jnp.asarray(block_table, jnp.int32), idx,
+            use_kernel=decode_impl in ("paged-kernel", "paged-interpret"),
+            interpret=decode_impl == "paged-interpret",
+        )[:, None]
+        out = out.reshape(B, S, H * hd)
+        return out @ p["wo"], new_cache
     if cache is not None:
         if ring_window is not None and S > 1:
             # prefill into a ring: slot j holds the newest token t ≡ j (mod W)

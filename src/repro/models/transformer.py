@@ -231,6 +231,60 @@ class LM:
             }
         return c
 
+    def _slot_paged_cache_schema(self, cfg, slot: SlotSpec, n_blocks, bs, L=None):
+        """Paged (block-pool) analogue of ``_slot_cache_schema``: attention
+        k/v leaves become global pools ``(P, bs, K, hd)`` indexed through a
+        per-row block table instead of per-slot ``(B, S, K, hd)`` rows.
+        Only full-attention layers page; recurrent (mamba) state is O(1)
+        per slot and ring (windowed) caches are already W-bounded, so
+        paging them buys nothing — models using them keep the contiguous
+        slot cache."""
+        dt = jnp.dtype(cfg.dtype)
+        pre = () if L is None else (L,)
+        pfx = (None,) * len(pre)
+        if slot.mixer != "attn" or slot.cross or (slot.is_local and cfg.window):
+            raise NotImplementedError(
+                f"paged KV cache supports full-attention layers only "
+                f"(mixer={slot.mixer!r}, cross={slot.cross}, local={slot.is_local})"
+            )
+        K, hd = cfg.n_kv_heads, cfg.hd
+        hspec = "model" if hd % 16 == 0 else None
+        shp = pre + (n_blocks, bs, K, hd)
+        return {
+            "k": ParamInfo(shp, dt, P(*pfx, None, None, None, hspec), "zeros"),
+            "v": ParamInfo(shp, dt, P(*pfx, None, None, None, hspec), "zeros"),
+        }
+
+    def paged_cache_schema(self, n_blocks: int, block_size: int) -> dict:
+        """Cache schema for the paged decode layout: same tree structure as
+        ``cache_schema`` but every attention leaf is a block pool shared by
+        all slots — total KV memory is ``n_blocks * block_size`` tokens,
+        independent of slot count."""
+        cfg, plan = self.cfg, self.plan
+        sch: Dict[str, Any] = {}
+        if plan.prefix:
+            sch["prefix"] = [
+                self._slot_paged_cache_schema(cfg, s, n_blocks, block_size)
+                for s in plan.prefix
+            ]
+        sch["blocks"] = [
+            self._slot_paged_cache_schema(cfg, s, n_blocks, block_size, L=plan.n_periods)
+            for s in plan.period
+        ]
+        if plan.suffix:
+            sch["suffix"] = [
+                self._slot_paged_cache_schema(cfg, s, n_blocks, block_size)
+                for s in plan.suffix
+            ]
+        return sch
+
+    def init_paged_cache(self, n_blocks: int, block_size: int) -> dict:
+        return jax.tree.map(
+            lambda i: jnp.zeros(i.shape, i.dtype),
+            self.paged_cache_schema(n_blocks, block_size),
+            is_leaf=is_info,
+        )
+
     def cache_schema(self, B: int, S: int, shard_batch: bool = True) -> dict:
         cfg, plan = self.cfg, self.plan
         sch: Dict[str, Any] = {}
@@ -275,6 +329,7 @@ class LM:
         cache_index,
         memory,
         moe_impl,
+        block_tables=None,
         rope_theta_local=10_000.0,
     ):
         cfg = self.cfg
@@ -296,11 +351,13 @@ class LM:
             out, nc = LY.attn_apply(
                 cfg, p["mixer"], x, positions=positions, mask=mask, axes=axes,
                 mesh=mesh, cache=sub, cache_index=ci, rope_theta=theta,
-                ring_window=ring, decode_impl=impl,
+                ring_window=ring, decode_impl=impl, block_table=block_tables,
             )
             if nc is not None:
                 new_cache.update(nc)
         elif slot.mixer == "mla":
+            if block_tables is not None:
+                raise NotImplementedError("paged KV cache: MLA layers not supported")
             sub = {k: cache[k] for k in ("c", "k_pe")} if cache is not None else None
             out, nc = LY.mla_apply(
                 cfg, p["mixer"], x, positions=positions, mask=mask_full, axes=axes,
@@ -310,6 +367,8 @@ class LM:
             if nc is not None:
                 new_cache.update(nc)
         elif slot.mixer == "mamba":
+            if block_tables is not None:
+                raise NotImplementedError("paged KV cache: mamba layers not supported")
             sub = (
                 {k: cache[k] for k in ("conv", "ssm")} if cache is not None else None
             )
@@ -351,6 +410,7 @@ class LM:
         memory,
         moe_impl,
         pool_idx,
+        block_tables=None,
         remat=False,
     ):
         """Run prefix + scanned periods + suffix. Returns
@@ -365,7 +425,7 @@ class LM:
         kw = dict(
             positions=positions, mask_full=mask_full, mask_local=mask_local,
             axes=axes, mesh=mesh, cache_index=cache_index, memory=memory,
-            moe_impl=moe_impl,
+            moe_impl=moe_impl, block_tables=block_tables,
         )
         new_caches: Dict[str, Any] = {}
         if plan.prefix:
@@ -540,11 +600,17 @@ class LM:
         return caches, outs
 
     def decode(self, params, cache, tokens, pos, *, active_sites=None,
-               axes=LY.TEST_AXES, mesh=None, moe_impl="ep"):
+               axes=LY.TEST_AXES, mesh=None, moe_impl="ep", block_tables=None):
         """One decode step. tokens: (B,1); pos: int32 scalar (shared write
         index) or int32[B] per-row write indices — batched slot caches where
         continuous batching leaves every row at its own position (each row
-        scatters its token and masks its own history). Returns
+        scatters its token and masks its own history).
+
+        With ``block_tables`` (int32[B, max_blocks]) the cache is the PAGED
+        block pool from ``init_paged_cache``: each row's token scatters to
+        ``(block_tables[b, pos[b] // bs], pos[b] % bs)`` and attention walks
+        the table (``cfg.decode_attn`` must be a 'paged*' variant); masks
+        are internal to the paged kernel, so none are built here. Returns
         (new_cache, outs)."""
         cfg = self.cfg
         B, S = tokens.shape
@@ -553,6 +619,20 @@ class LM:
         per_row = pos.ndim >= 1
         positions = pc = pos.reshape(-1, 1)  # (B, 1) per-row | (1, 1) shared
         h = LY.embed_apply(cfg, params["tok"], tokens, positions)
+        if block_tables is not None:
+            if not per_row:
+                raise ValueError("paged decode requires per-row pos: int32[B]")
+            mask_full = mask_local = None
+            pool_idx = jnp.asarray([0], jnp.int32)
+            h, pooled, new_cache, _ = self._stack(
+                params, h, positions=positions, mask_full=None, mask_local=None,
+                axes=axes, mesh=mesh, caches=cache, cache_index=pos.reshape(-1),
+                memory=None, moe_impl=moe_impl, pool_idx=pool_idx,
+                block_tables=jnp.asarray(block_tables, jnp.int32),
+            )
+            outs = self._head_stats(params, h, pooled, active_sites,
+                                    axes=axes, mesh=mesh)
+            return new_cache, outs
         # cache length from any attn cache leaf (mamba-only models have none)
         try:
             Sc = _cache_len(cache)

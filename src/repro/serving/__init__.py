@@ -28,10 +28,12 @@ from repro.serving.request import (
     make_gen_requests,
 )
 from repro.serving.runner import (
+    BlockAllocator,
     ClassifierRunner,
     DecodeRunner,
     LMTokenRunner,
     LoopDecodeRunner,
+    PoolExhausted,
     SyntheticDecodeRunner,
     SyntheticRunner,
 )
@@ -62,6 +64,8 @@ __all__ = [
     "Response",
     "GenRequest",
     "GenResponse",
+    "BlockAllocator",
+    "PoolExhausted",
     "ClassifierRunner",
     "DecodeRunner",
     "LMTokenRunner",

@@ -93,9 +93,19 @@ def summarize_generative(
 
     TPT samples are successive release deltas within each request
     (``diff(release_ms)``); the first token is TTFT's job, not TPT's.
+
+    Degenerate streams stay NaN-free: an empty stream returns the full
+    key set zeroed, and a stream of single-token requests (no TPT samples
+    at all) reports 0.0 TPT percentiles rather than NaN — downstream
+    win%/JSON consumers choke on NaN.
     """
     if not responses:
-        return {"n": 0.0, "tokens": 0.0}
+        return {
+            "n": 0.0, "tokens": 0.0, "ttft_p50_ms": 0.0, "ttft_p95_ms": 0.0,
+            "tpt_p50_ms": 0.0, "tpt_p95_ms": 0.0, "tpt_mean_ms": 0.0,
+            "tokens_per_sec": 0.0, "exit_rate": 0.0, "agreement": 1.0,
+            "ttft_frac": 0.0,
+        }
     ttft = np.asarray([r.ttft_ms for r in responses])
     tpt = np.concatenate([r.tpt_ms for r in responses if len(r.release_ms) > 1] or
                          [np.zeros(0)])
@@ -118,9 +128,9 @@ def summarize_generative(
         "tokens": float(total_tokens),
         "ttft_p50_ms": float(np.percentile(ttft, 50)),
         "ttft_p95_ms": float(np.percentile(ttft, 95)),
-        "tpt_p50_ms": float(np.percentile(tpt, 50)) if len(tpt) else np.nan,
-        "tpt_p95_ms": float(np.percentile(tpt, 95)) if len(tpt) else np.nan,
-        "tpt_mean_ms": float(tpt.mean()) if len(tpt) else np.nan,
+        "tpt_p50_ms": float(np.percentile(tpt, 50)) if len(tpt) else 0.0,
+        "tpt_p95_ms": float(np.percentile(tpt, 95)) if len(tpt) else 0.0,
+        "tpt_mean_ms": float(tpt.mean()) if len(tpt) else 0.0,
         "tokens_per_sec": total_tokens / max(span / 1000.0, 1e-9),
         "exit_rate": float((decode_sites >= 0).mean()) if len(decode_sites) else 0.0,
         "agreement": float(agree.mean()) if len(agree) else 1.0,

@@ -8,8 +8,9 @@ padded to power-of-two buckets to bound compilation count.
 """
 from __future__ import annotations
 
+import heapq
 from functools import partial
-from typing import Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +22,92 @@ def _bucket(n: int) -> int:
     while b < n:
         b *= 2
     return b
+
+
+class PoolExhausted(RuntimeError):
+    """Raised when the paged KV pool has no free block for an allocation.
+    The allocator checks capacity BEFORE mutating any state, so a failed
+    allocation never corrupts the block table."""
+
+
+class BlockAllocator:
+    """Host-side allocator for the paged KV-cache pool.
+
+    The device pool holds ``n_blocks + 1`` physical blocks: block 0 is
+    RESERVED as the trash block — bucket-padding rows point their zeroed
+    table rows at it, so their (discarded) scatters land in memory no live
+    slot ever reads. Allocatable ids are ``1..n_blocks``; the free heap
+    always hands out the lowest id, so identical schedules produce
+    identical tables (determinism the equivalence harness relies on).
+
+    Invariants (asserted by the property tests):
+      * a block is owned by at most one slot at a time;
+      * ``n_free + sum(owned) == n_blocks`` across any schedule;
+      * allocation at exhaustion raises ``PoolExhausted`` atomically —
+        no table/free-list mutation happens on the failing call.
+    """
+
+    def __init__(self, n_blocks: int, max_blocks_per_slot: int, n_slots: int = 0):
+        if n_blocks < 1:
+            raise ValueError(f"n_blocks must be >= 1, got {n_blocks}")
+        self.n_blocks = n_blocks
+        self.max_blocks = max_blocks_per_slot
+        self._free = list(range(1, n_blocks + 1))  # min-heap of free ids
+        heapq.heapify(self._free)
+        self.table = np.zeros((n_slots, max_blocks_per_slot), np.int32)
+        self.owned = np.zeros(n_slots, np.int32)
+        self.peak_blocks = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_blocks(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def grow_slots(self, n_slots: int) -> None:
+        add = n_slots - self.table.shape[0]
+        if add > 0:
+            self.table = np.concatenate(
+                [self.table, np.zeros((add, self.max_blocks), np.int32)]
+            )
+            self.owned = np.concatenate([self.owned, np.zeros(add, np.int32)])
+
+    def grow_pool(self, n_blocks: int) -> None:
+        """Extend the pool with fresh block ids (existing ownership kept)."""
+        for b in range(self.n_blocks + 1, n_blocks + 1):
+            heapq.heappush(self._free, b)
+        self.n_blocks = max(self.n_blocks, n_blocks)
+
+    def alloc(self, slot: int, n: int = 1) -> List[int]:
+        """Claim ``n`` blocks for ``slot`` (atomic: all or nothing)."""
+        if self.owned[slot] + n > self.max_blocks:
+            raise ValueError(
+                f"slot {slot} would exceed max_blocks={self.max_blocks}"
+            )
+        if len(self._free) < n:
+            raise PoolExhausted(
+                f"paged KV pool exhausted: need {n} block(s), "
+                f"{len(self._free)}/{self.n_blocks} free"
+            )
+        ids = [heapq.heappop(self._free) for _ in range(n)]
+        k = int(self.owned[slot])
+        self.table[slot, k : k + n] = ids
+        self.owned[slot] += n
+        self.peak_blocks = max(self.peak_blocks, self.live_blocks)
+        return ids
+
+    def free_slot(self, slot: int) -> None:
+        """Return every block owned by ``slot`` to the pool."""
+        k = int(self.owned[slot])
+        for b in self.table[slot, :k]:
+            heapq.heappush(self._free, int(b))
+        self.table[slot, :] = 0  # stale entries must stay valid pool ids
+        self.owned[slot] = 0
+
+    def owned_ids(self, slot: int) -> List[int]:
+        return [int(b) for b in self.table[slot, : int(self.owned[slot])]]
 
 
 class SyntheticRunner:
@@ -240,10 +327,24 @@ class DecodeRunner:
     padded rows hold garbage no one reads), bounding compile count at
     log2(n_slots) shapes. Batch-level timing comes from the profile, not
     from here.
+
+    With a ``decode_attn='paged*'`` model config the slot cache is PAGED:
+    one global pool of ``kv_blocks`` fixed-size blocks (``kv_block_size``
+    key/value tokens each) plus a per-slot block table, managed by a
+    host-side ``BlockAllocator``. ``start`` claims ``ceil(prompt_len /
+    block_size)`` blocks and scatters the prefill KV into them, ``step``
+    appends a block only when a slot's current block fills, and ``free``
+    returns the slot's blocks to the pool — KV memory scales with LIVE
+    TOKENS instead of ``n_slots * max_len``, at the same one dispatch per
+    engine step. ``kv_blocks=None`` auto-sizes the pool to full slot
+    capacity (the contiguous equivalent); a smaller explicit pool admits
+    more slots than contiguous memory would allow, and exhausting it
+    raises ``PoolExhausted`` cleanly.
     """
 
     def __init__(self, model, params, prompts: np.ndarray, *, max_new_tokens: int = 64,
-                 max_slots: int = 8, n_slots: Optional[int] = None):
+                 max_slots: int = 8, n_slots: Optional[int] = None,
+                 kv_block_size: int = 16, kv_blocks: Optional[int] = None):
         self.model = model
         self.params = params
         self.prompts = np.asarray(prompts, np.int32)  # (N, S)
@@ -261,24 +362,48 @@ class DecodeRunner:
         self._pf = None
         self._dec = None
         self._dec0 = None  # no-ramp (vanilla) decode variant
+        # -- paged-KV state (decode_attn='paged'|'paged-kernel'|'paged-interpret')
+        self.paged = str(getattr(model.cfg, "decode_attn", "")).startswith("paged")
+        self._bs_blk = int(kv_block_size)
+        self._kv_blocks = kv_blocks
+        if self.paged and self._bs_blk < 1:
+            raise ValueError(f"paged decode needs kv_block_size >= 1, got {kv_block_size}")
+        # kv_block_size is meaningless for contiguous runners (0 documents
+        # "contiguous" at the CLI) — don't let it poison the ceil below
+        self._max_blocks = -(-self._cache_len // self._bs_blk) if self.paged else 0
+        self._alloc: Optional[BlockAllocator] = None
+        self._pool_axes: Optional[Tuple[int, ...]] = None  # per-leaf pool axis
 
     # -- batched-cache plumbing ---------------------------------------------
+
+    @staticmethod
+    def _diff_axes(a, b) -> Tuple[int, ...]:
+        """Per-leaf axis where two schema variants disagree — the batch
+        (contiguous) or pool (paged) dim: scanned blocks carry a leading
+        period dim, prefix/suffix leaves don't."""
+        return tuple(
+            next(i for i, (x, y) in enumerate(zip(la.shape, lb.shape)) if x != y)
+            for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+        )
+
+    def _grow_rows(self, rows: int) -> None:
+        self._rows = rows
+        self._pos = np.concatenate([self._pos, np.zeros(rows - len(self._pos), np.int64)])
+        self._tok = np.concatenate([self._tok, np.zeros(rows - len(self._tok), np.int64)])
 
     def _ensure_rows(self, n: int) -> None:
         """Allocate (or grow) the batched cache to >= n power-of-two rows.
         Growth copies live rows once; steady state never reallocates."""
         if self._cache is not None and n <= self._rows:
             return
+        if self.paged:
+            self._ensure_rows_paged(n)
+            return
         rows = _bucket(max(n, self._rows, 1))
         new = self.model.init_cache(rows, self._cache_len)
         if self._axes is None:
-            # per-leaf batch axis: scanned blocks carry a leading period
-            # dim, prefix/suffix leaves don't — compare two row counts
-            a = jax.tree.leaves(self.model.cache_schema(1, 2))
-            b = jax.tree.leaves(self.model.cache_schema(2, 2))
-            self._axes = tuple(
-                next(i for i, (x, y) in enumerate(zip(la.shape, lb.shape)) if x != y)
-                for la, lb in zip(a, b)
+            self._axes = self._diff_axes(
+                self.model.cache_schema(1, 2), self.model.cache_schema(2, 2)
             )
         if self._cache is not None:
             old, td = jax.tree.flatten(self._cache)
@@ -288,9 +413,7 @@ class DecodeRunner:
                 for nl, ol, ax in zip(new_l, old, self._axes)
             ])
         self._cache = new
-        self._rows = rows
-        self._pos = np.concatenate([self._pos, np.zeros(rows - len(self._pos), np.int64)])
-        self._tok = np.concatenate([self._tok, np.zeros(rows - len(self._tok), np.int64)])
+        self._grow_rows(rows)
 
     def _tree_take(self, cache, rows):
         leaves, td = jax.tree.flatten(cache)
@@ -306,6 +429,56 @@ class DecodeRunner:
             upd = jnp.moveaxis(l, ax, 0).at[rows].set(jnp.moveaxis(s, ax, 0))
             out.append(jnp.moveaxis(upd, 0, ax))
         return jax.tree.unflatten(td, out)
+
+    # -- paged-pool plumbing -------------------------------------------------
+
+    def _ensure_rows_paged(self, n: int) -> None:
+        """Grow table rows (and, when ``kv_blocks`` is auto, the block pool)
+        to cover >= n power-of-two slots. The pool array holds
+        ``n_blocks + 1`` physical blocks — block 0 is the allocator's
+        reserved trash block."""
+        rows = _bucket(max(n, self._rows, 1))
+        nblk = self._kv_blocks if self._kv_blocks is not None else rows * self._max_blocks
+        if self._alloc is None:
+            if self._pool_axes is None:
+                self._pool_axes = self._diff_axes(
+                    self.model.paged_cache_schema(1, self._bs_blk),
+                    self.model.paged_cache_schema(2, self._bs_blk),
+                )
+            self._alloc = BlockAllocator(nblk, self._max_blocks, rows)
+            self._cache = self.model.init_paged_cache(nblk + 1, self._bs_blk)
+        else:
+            self._alloc.grow_slots(rows)
+            if nblk > self._alloc.n_blocks:
+                new = self.model.init_paged_cache(nblk + 1, self._bs_blk)
+                old, td = jax.tree.flatten(self._cache)
+                new_l = jax.tree.leaves(new)
+                self._cache = jax.tree.unflatten(td, [
+                    jax.lax.dynamic_update_slice_in_dim(nl, ol, 0, axis=ax)
+                    for nl, ol, ax in zip(new_l, old, self._pool_axes)
+                ])
+                self._alloc.grow_pool(nblk)
+        self._grow_rows(rows)
+
+    def cache_bytes(self) -> int:
+        """Device bytes held by the KV cache (pool or contiguous rows)."""
+        if self._cache is None:
+            return 0
+        return int(sum(
+            l.size * np.dtype(l.dtype).itemsize for l in jax.tree.leaves(self._cache)
+        ))
+
+    def kv_stats(self) -> dict:
+        out = {"paged": self.paged, "cache_bytes": float(self.cache_bytes())}
+        if self.paged and self._alloc is not None:
+            out.update(
+                block_size=self._bs_blk,
+                n_blocks=self._alloc.n_blocks,
+                live_blocks=self._alloc.live_blocks,
+                peak_blocks=self._alloc.peak_blocks,
+                peak_token_capacity=self._alloc.peak_blocks * self._bs_blk,
+            )
+        return out
 
     # -- jitted programs ----------------------------------------------------
 
@@ -368,16 +541,103 @@ class DecodeRunner:
             self._dec0 = dec0
         return self._dec0
 
+    def _prefill_fn_paged(self):
+        """Prefill one prompt contiguously AND scatter its KV into the
+        slot's claimed pool blocks — one dispatch per admit (``blk_ids``
+        is a traced array: no recompile per block assignment)."""
+        if self._pf is None:
+            m, cache_len = self.model, self._cache_len
+            bs = self._bs_blk
+            nb_pf = -(-self.prompts.shape[1] // bs)
+            axes = self._pool_axes
+
+            def scatter(pool, cont, ax, blk_ids):
+                # cont: contiguous leaf, batch dim (size 1) at ax, tokens at
+                # ax+1; pool: (..., P, bs, ...) with P at ax. Regroup the
+                # first nb_pf*bs prefill tokens into blocks and write them
+                # to the claimed pool slots.
+                x = jnp.moveaxis(cont, ax, 0)[0]
+                t = jnp.moveaxis(x, ax, 0)  # tokens first, rest order kept
+                need = nb_pf * bs
+                if t.shape[0] < need:
+                    t = jnp.pad(t, [(0, need - t.shape[0])] + [(0, 0)] * (t.ndim - 1))
+                t = t[:need].reshape((nb_pf, bs) + t.shape[1:])
+                p2 = jnp.moveaxis(pool, (ax, ax + 1), (0, 1))
+                p2 = p2.at[blk_ids].set(t.astype(p2.dtype))
+                return jnp.moveaxis(p2, (0, 1), (ax, ax + 1))
+
+            @jax.jit
+            def pf(params, pools, toks, blk_ids):
+                cache, outs = m.prefill(
+                    params, toks, cache_len=cache_len, active_sites=None,
+                    with_cache=True, moe_impl="dense",
+                )
+                leaves, td = jax.tree.flatten(pools)
+                cl = jax.tree.leaves(cache)
+                pools = jax.tree.unflatten(td, [
+                    scatter(p, c, ax, blk_ids)
+                    for p, c, ax in zip(leaves, cl, axes)
+                ])
+                lab = outs["final"]["label"]
+                return pools, (lab[:, 0] if lab.ndim == 2 else lab)
+
+            self._pf = pf
+        return self._pf
+
+    def _decode_fn_paged(self):
+        if self._dec is None:
+            m = self.model
+
+            @jax.jit
+            def dec(params, pools, toks, pos, tables, active):
+                pools, outs = m.decode(
+                    params, pools, toks, pos, active_sites=active,
+                    moe_impl="dense", block_tables=tables,
+                )
+                return pools, (
+                    outs["ramps"]["label"],
+                    1.0 - outs["ramps"]["maxprob"],
+                    outs["final"]["label"],
+                )
+
+            self._dec = dec
+        return self._dec
+
+    def _decode_fn_paged_noramp(self):
+        if self._dec0 is None:
+            m = self.model
+
+            @jax.jit
+            def dec0(params, pools, toks, pos, tables):
+                pools, outs = m.decode(
+                    params, pools, toks, pos, active_sites=None,
+                    moe_impl="dense", block_tables=tables,
+                )
+                return pools, outs["final"]["label"]
+
+            self._dec0 = dec0
+        return self._dec0
+
     # -- engine interface ----------------------------------------------------
 
     def start(self, slot: int, item: int) -> int:
-        """Prefill ``item``'s prompt into ``slot``'s cache row; returns the
-        first generated (greedy) token."""
+        """Prefill ``item``'s prompt into ``slot``'s cache row (contiguous)
+        or its freshly claimed pool blocks (paged); returns the first
+        generated (greedy) token."""
         self._ensure_rows(slot + 1)
         toks = jnp.asarray(self.prompts[item][None, :])
-        self._cache, lab = self._prefill_fn()(
-            self.params, self._cache, toks, jnp.int32(slot)
-        )
+        if self.paged:
+            if slot in self._live:  # engine frees before reuse; be defensive
+                self._alloc.free_slot(slot)
+            nb_pf = -(-self.prompts.shape[1] // self._bs_blk)
+            blks = self._alloc.alloc(slot, nb_pf)
+            self._cache, lab = self._prefill_fn_paged()(
+                self.params, self._cache, toks, jnp.asarray(blks, jnp.int32)
+            )
+        else:
+            self._cache, lab = self._prefill_fn()(
+                self.params, self._cache, toks, jnp.int32(slot)
+            )
         tok = int(np.asarray(lab).reshape(-1)[0])
         self._live.add(slot)
         self._pos[slot] = self.prompts.shape[1]
@@ -409,20 +669,46 @@ class DecodeRunner:
         rows = np.asarray(slots + free + dup, np.int64)
         toks = jnp.asarray(self._tok[rows].reshape(-1, 1), jnp.int32)
         pos = jnp.asarray(self._pos[rows], jnp.int32)
-        rows_j = jnp.asarray(rows, jnp.int32)
         act = sorted(active)[: self.max_slots]
         k = len(act)
+        if self.paged:
+            # append a block only when a stepped slot's current block is
+            # full; a pool with no free block raises PoolExhausted here,
+            # BEFORE any device state changes
+            for s in dict.fromkeys(slots):
+                while int(self._alloc.owned[s]) * self._bs_blk <= int(self._pos[s]):
+                    self._alloc.alloc(s, 1)
+            tables = self._alloc.table[rows].copy()
+            # FREE pad rows keep stale table rows that may now reference
+            # blocks owned by live slots — zero them so their (discarded)
+            # scatters land in the reserved trash block 0
+            if free:
+                tables[B : B + len(free)] = 0
+            tables_j = jnp.asarray(tables, jnp.int32)
+            if k:
+                pad_act = jnp.asarray(act + [act[-1]] * (self.max_slots - k), jnp.int32)
+                self._cache, (rl, ru, fl) = self._decode_fn_paged()(
+                    self.params, self._cache, toks, pos, tables_j, pad_act
+                )
+        else:
+            rows_j = jnp.asarray(rows, jnp.int32)
+            if k:
+                pad_act = jnp.asarray(act + [act[-1]] * (self.max_slots - k), jnp.int32)
+                self._cache, (rl, ru, fl) = self._decode_fn()(
+                    self.params, self._cache, toks, pos, rows_j, pad_act
+                )
         if k:
-            pad_act = jnp.asarray(act + [act[-1]] * (self.max_slots - k), jnp.int32)
-            self._cache, (rl, ru, fl) = self._decode_fn()(
-                self.params, self._cache, toks, pos, rows_j, pad_act
-            )
             labels = np.asarray(rl).reshape(self.max_slots, -1)[:k, :B].astype(np.int64)
             unc = np.asarray(ru).reshape(self.max_slots, -1)[:k, :B].astype(np.float32)
         else:
-            self._cache, fl = self._decode_fn_noramp()(
-                self.params, self._cache, toks, pos, rows_j
-            )
+            if self.paged:
+                self._cache, fl = self._decode_fn_paged_noramp()(
+                    self.params, self._cache, toks, pos, tables_j
+                )
+            else:
+                self._cache, fl = self._decode_fn_noramp()(
+                    self.params, self._cache, toks, pos, rows_j
+                )
             labels = np.zeros((0, B), np.int64)
             unc = np.zeros((0, B), np.float32)
         self.dispatches += 1
@@ -432,6 +718,8 @@ class DecodeRunner:
         return labels, unc, final
 
     def free(self, slot: int) -> None:
+        if self.paged and self._alloc is not None and slot in self._live:
+            self._alloc.free_slot(slot)
         self._live.discard(slot)
 
 

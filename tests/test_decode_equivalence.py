@@ -7,6 +7,20 @@ B=1 caches, one dispatch per slot) must produce bit-identical
 across staggered admits/retires — slots at different decode positions,
 freed slots reused mid-run — including the k=0 no-ramp variant. The
 batched runner's only legitimate difference is its dispatch count.
+
+The 'paged' variant swaps the batched runner's cache for the paged block
+pool (`decode_attn='paged'`, block allocator + per-slot block tables)
+while the loop oracle stays contiguous — paging is a pure layout change,
+so every record must STILL be bit-identical. Bit-identity needs the
+block size to divide the cache length (then the paged gather reproduces
+the contiguous softmax reduction exactly); non-dividing sizes are
+numerically equal but only to rounding, and are covered by the kernel
+tests in test_paged_kv.py.
+
+`test_randomized_schedules_fuzz` drives hundreds of seeded random
+admit/step/free/slot-reuse schedules through all three runners — the
+hand-written schedules above pin the known-tricky corners, the fuzz
+covers the schedule space.
 """
 import jax
 import numpy as np
@@ -17,23 +31,33 @@ from repro.models import build_model
 from repro.serving import DecodeRunner, LoopDecodeRunner
 
 
-@pytest.fixture(scope="module", params=["ref", "dense"])
+@pytest.fixture(scope="module", params=["ref", "dense", "paged"])
 def runner_pair(request):
     """Untrained tiny LM (records are arbitrary but deterministic — ideal
     for equivalence). 'ref' routes decode attention through the
     flash-decode wrapper (`kernels/decode_attention.attend_decode` with a
-    per-row pos array); 'dense' keeps the masked-sdpa path."""
+    per-row pos array); 'dense' keeps the masked-sdpa path; 'paged' runs
+    the batched runner on the paged block pool against the contiguous
+    'ref' loop oracle."""
     cfg = get_tiny("qwen2-1.5b").replace(
         n_layers=4, vocab_size=128, decode_attn=request.param
     )
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     prompts = np.random.default_rng(1).integers(0, 128, (10, 12)).astype(np.int32)
-
-    def mk(cls, **kw):
-        return cls(model, params, prompts, max_new_tokens=14, max_slots=3, **kw)
-
-    return mk(DecodeRunner), mk(LoopDecodeRunner)
+    kw = dict(max_new_tokens=14, max_slots=3)
+    if request.param == "paged":
+        # cache_len = 12 + 14 = 26 = 2 blocks of 13: bs | cache_len so the
+        # paged gather is bit-identical to the contiguous layout
+        batched = DecodeRunner(model, params, prompts, kv_block_size=13, **kw)
+        loop = LoopDecodeRunner(
+            build_model(cfg.replace(decode_attn="ref")), params, prompts, **kw
+        )
+        assert batched.paged
+    else:
+        batched = DecodeRunner(model, params, prompts, **kw)
+        loop = LoopDecodeRunner(model, params, prompts, **kw)
+    return batched, loop
 
 
 def _check_step(batched, loop, slots, active, tag):
@@ -158,3 +182,88 @@ def test_engine_end_to_end_identical_records(runner_pair):
         assert rb.final_tokens == rl.final_tokens
         assert rb.exit_sites == rl.exit_sites
         np.testing.assert_allclose(rb.release_ms, rl.release_ms, rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# randomized-schedule fuzz: batched, loop, and paged runners in lockstep
+
+
+N_SLOTS = 4
+MAX_NEW = 8  # cache_len = 8 + 8 = 16 = 4 blocks of 4 (bs | cache_len)
+N_SCHEDULES = 300
+
+
+@pytest.fixture(scope="module")
+def fuzz_trio():
+    """One runner of each kind, REUSED across every fuzz schedule (each
+    fresh runner would recompile its jitted programs; reuse keeps the
+    whole fuzz inside a handful of compiles). Slot reuse across schedules
+    is exactly the production pattern: start() reclaims the row/blocks
+    wholesale, so stale state from the previous schedule is dead."""
+    cfg = get_tiny("qwen2-1.5b").replace(n_layers=3, vocab_size=128, decode_attn="ref")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    prompts = np.random.default_rng(3).integers(0, 128, (16, 8)).astype(np.int32)
+    kw = dict(max_new_tokens=MAX_NEW, max_slots=3)
+    return {
+        "batched": DecodeRunner(model, params, prompts, **kw),
+        "loop": LoopDecodeRunner(model, params, prompts, **kw),
+        "paged": DecodeRunner(
+            build_model(cfg.replace(decode_attn="paged")), params, prompts,
+            kv_block_size=4, **kw
+        ),
+    }
+
+
+def _run_schedule(rng, runners, n_sites, sched_id):
+    """One random admit/step/free/slot-reuse schedule, every record
+    compared bit-for-bit across all runners (the loop is the oracle)."""
+    live = {}  # slot -> decode steps taken
+    for op_i in range(int(rng.integers(6, 16))):
+        free_slots = [s for s in range(N_SLOTS) if s not in live]
+        # a slot may take at most MAX_NEW - 1 decode steps after prefill
+        steppable = [s for s in sorted(live) if live[s] < MAX_NEW - 1]
+        ops = (["admit"] if free_slots else []) + (["step", "step"] if steppable else [])
+        ops += ["free"] if live else []
+        op = ops[int(rng.integers(len(ops)))]
+        tag = f"schedule {sched_id} op {op_i} ({op})"
+        if op == "admit":
+            slot = int(free_slots[int(rng.integers(len(free_slots)))])
+            item = int(rng.integers(16))
+            toks = {name: r.start(slot, item) for name, r in runners.items()}
+            assert len(set(toks.values())) == 1, f"{tag}: first tokens diverge"
+            live[slot] = 0
+        elif op == "step":
+            k = int(rng.integers(1, len(steppable) + 1))
+            subset = [int(s) for s in rng.permutation(steppable)[:k]]
+            act = [int(s) for s in np.flatnonzero(rng.random(n_sites) < 0.6)]
+            lo, uo, fo = runners["loop"].step(subset, act)
+            for name in ("batched", "paged"):
+                lb, ub, fb = runners[name].step(subset, act)
+                np.testing.assert_array_equal(lb, lo, err_msg=f"{tag}: {name} labels")
+                np.testing.assert_array_equal(ub, uo, err_msg=f"{tag}: {name} unc")
+                np.testing.assert_array_equal(fb, fo, err_msg=f"{tag}: {name} final")
+            for s in subset:
+                live[s] += 1
+        else:
+            slot = sorted(live)[int(rng.integers(len(live)))]
+            for r in runners.values():
+                r.free(slot)
+            del live[slot]
+    for s in list(live):
+        for r in runners.values():
+            r.free(s)
+
+
+def test_randomized_schedules_fuzz(fuzz_trio):
+    """Hundreds of seeded random schedules: admits into random free slots,
+    random step subsets (staggered positions), random active-ramp sets
+    (including k=0 no-ramp steps), random retires and slot reuse — every
+    record bit-identical across batched/loop/paged runners."""
+    rng = np.random.default_rng(0xA11CE)
+    n_sites = fuzz_trio["batched"].n_sites
+    for sched_id in range(N_SCHEDULES):
+        _run_schedule(rng, fuzz_trio, n_sites, sched_id)
+    # the paged pool must be fully drained after every slot was freed
+    alloc = fuzz_trio["paged"]._alloc
+    assert alloc.live_blocks == 0 and alloc.n_free == alloc.n_blocks

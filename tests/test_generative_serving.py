@@ -326,3 +326,69 @@ def test_full_tpt_sweep(load, easy):
     mo = summarize_generative(eng.run(reqs), horizon_ms=eng.makespan_ms)
     assert mo["agreement"] >= 0.99
     assert mo["tpt_p50_ms"] < mb["tpt_p50_ms"]
+
+
+# -- summarize_generative edge cases ------------------------------------------
+
+
+def _finite_summary(responses, **kw):
+    """Summarize under errstate(raise): any divide-by-zero/invalid inside
+    the metric computation becomes a test failure, and every returned
+    value must be finite (no NaN TPT percentiles)."""
+    with np.errstate(all="raise"):
+        out = summarize_generative(responses, **kw)
+    bad = {k: v for k, v in out.items() if not np.isfinite(v)}
+    assert not bad, f"non-finite metrics: {bad}"
+    return out
+
+
+def test_summarize_generative_empty_stream():
+    out = _finite_summary([])
+    assert out["n"] == 0.0 and out["tokens"] == 0.0
+    assert out["tpt_p50_ms"] == 0.0 and out["tokens_per_sec"] == 0.0
+
+
+def test_summarize_generative_single_token_requests():
+    """One-token requests have TTFT but zero TPT samples: percentiles must
+    come back 0.0, not NaN, and agreement defaults to 1.0 (the prefill
+    token is the final model's own output by construction)."""
+    from repro.serving import GenResponse
+
+    resp = [
+        GenResponse(rid=i, arrival_ms=i * 2.0, release_ms=[i * 2.0 + 1.5],
+                    exit_sites=[-1], tokens=[7], final_tokens=[7], slo_ms=10.0)
+        for i in range(5)
+    ]
+    out = _finite_summary(resp)
+    assert out["tpt_p50_ms"] == 0.0 and out["tpt_p95_ms"] == 0.0
+    assert out["tpt_mean_ms"] == 0.0
+    assert out["agreement"] == 1.0 and out["exit_rate"] == 0.0
+    assert out["ttft_p50_ms"] == pytest.approx(1.5)
+
+
+def test_summarize_generative_single_token_through_engine():
+    """End-to-end: an n_tokens=1 request stream finishes at admission
+    (prefill only) and must summarize NaN-free."""
+    reqs = make_gen_requests(
+        maf_trace(8, mean_qps=5.0, seed=0), n_tokens=1, prompt_len=16,
+        slo_ms=3 * PROF.vanilla_time(1),
+    )
+    eng = GenerativeEngine(PROF, GenerativeConfig(max_batch_size=4))
+    out = _finite_summary(eng.run(reqs), horizon_ms=eng.makespan_ms)
+    assert out["n"] == 8.0 and out["tokens"] == 8.0
+    assert out["tpt_p50_ms"] == 0.0
+
+
+def test_summarize_generative_all_exited_at_site_zero():
+    from repro.serving import GenResponse
+
+    resp = [
+        GenResponse(rid=i, arrival_ms=0.0, release_ms=[1.0, 2.0, 3.0],
+                    exit_sites=[-1, 0, 0], tokens=[1, 2, 3],
+                    final_tokens=[1, 2, 3], slo_ms=10.0)
+        for i in range(3)
+    ]
+    out = _finite_summary(resp)
+    assert out["exit_rate"] == 1.0 and out["agreement"] == 1.0
+    assert out["tpt_p50_ms"] == pytest.approx(1.0)
+    assert out["tpt_slo_miss_rate"] == 0.0

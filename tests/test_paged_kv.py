@@ -1,0 +1,296 @@
+"""Paged KV cache: block-allocator properties, paged-kernel correctness,
+pool exhaustion, and memory scaling.
+
+Allocator property tests draw hundreds of random alloc/free schedules
+from a module-seeded generator (suite policy: no hypothesis) and check
+the three invariants the paged runner's soundness rests on: disjoint
+ownership, pool conservation, and atomic failure at exhaustion. Kernel
+tests validate the Pallas block-table walk against the jnp gather oracle
+(interpret mode on CPU; the full shape sweep is ``-m slow``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import BlockAllocator, PoolExhausted
+
+RNG = np.random.default_rng(0xB10C)
+
+
+# ---------------------------------------------------------------------------
+# allocator properties
+
+
+def _check_invariants(al: BlockAllocator):
+    owned = []
+    for s in range(al.table.shape[0]):
+        ids = al.owned_ids(s)
+        assert all(1 <= b <= al.n_blocks for b in ids), "invalid block id"
+        owned.extend(ids)
+    assert len(owned) == len(set(owned)), "a block is owned by two slots"
+    assert al.n_free + len(owned) == al.n_blocks, "pool not conserved"
+
+
+@pytest.mark.parametrize("trial", range(8))
+def test_allocator_random_schedules(trial):
+    """Hundreds of random alloc/free ops (~40 schedules x 8 trials):
+    no double ownership, pool conserved, table mirrors a reference model."""
+    for _ in range(40):
+        n_slots = int(RNG.integers(2, 6))
+        max_blocks = int(RNG.integers(2, 6))
+        n_blocks = int(RNG.integers(1, n_slots * max_blocks + 2))
+        al = BlockAllocator(n_blocks, max_blocks, n_slots)
+        ref = {s: [] for s in range(n_slots)}  # reference ownership model
+        for _ in range(int(RNG.integers(5, 25))):
+            s = int(RNG.integers(n_slots))
+            if RNG.random() < 0.65:
+                n = int(RNG.integers(1, max_blocks + 1))
+                try:
+                    ids = al.alloc(s, n)
+                except PoolExhausted:
+                    assert al.n_free < n
+                except ValueError:
+                    assert len(ref[s]) + n > max_blocks
+                else:
+                    assert len(ids) == n
+                    ref[s].extend(ids)
+            else:
+                al.free_slot(s)
+                ref[s] = []
+            _check_invariants(al)
+            for t in range(n_slots):
+                assert al.owned_ids(t) == ref[t]
+        for s in range(n_slots):
+            al.free_slot(s)
+        assert al.n_free == al.n_blocks and al.live_blocks == 0
+
+
+def test_allocator_exhaustion_is_atomic():
+    """A failing multi-block alloc must not mutate the table or free list."""
+    al = BlockAllocator(4, max_blocks_per_slot=6, n_slots=2)
+    al.alloc(0, 3)
+    before = (al.table.copy(), al.owned.copy(), al.n_free)
+    with pytest.raises(PoolExhausted):
+        al.alloc(1, 2)  # only 1 free
+    np.testing.assert_array_equal(al.table, before[0])
+    np.testing.assert_array_equal(al.owned, before[1])
+    assert al.n_free == before[2]
+    # the survivor block is still allocatable after the failure
+    assert al.alloc(1, 1) == [4]
+
+
+def test_allocator_free_returns_every_block():
+    al = BlockAllocator(6, max_blocks_per_slot=3, n_slots=3)
+    for s in range(3):
+        al.alloc(s, 2)
+    assert al.n_free == 0 and al.peak_blocks == 6
+    for s in range(3):
+        al.free_slot(s)
+    assert al.n_free == 6
+    # freed ids recycle deterministically lowest-first
+    assert al.alloc(1, 2) == [1, 2]
+    # stale table entries of freed slots stay valid (trash) pool indices
+    assert (al.table[0] == 0).all() and (al.table[2] == 0).all()
+
+
+def test_allocator_grow():
+    al = BlockAllocator(2, max_blocks_per_slot=2, n_slots=1)
+    al.alloc(0, 2)
+    al.grow_slots(3)
+    al.grow_pool(5)
+    assert al.table.shape[0] == 3 and al.n_free == 3
+    assert al.alloc(1, 2) == [3, 4]
+    _check_invariants(al)
+
+
+# ---------------------------------------------------------------------------
+# paged kernel vs oracles
+
+
+def _rand_paged(rng, B, H, KH, hd, bs, nb, dtype=np.float32):
+    P = B * nb + 1
+    q = jnp.asarray(rng.standard_normal((B, H, hd)), dtype)
+    kp = jnp.asarray(rng.standard_normal((P, bs, KH, hd)), dtype)
+    vp = jnp.asarray(rng.standard_normal((P, bs, KH, hd)), dtype)
+    # rows own disjoint random blocks (ids >= 1; 0 is the trash block)
+    ids = rng.permutation(np.arange(1, P))[: B * nb].reshape(B, nb)
+    table = jnp.asarray(ids, jnp.int32)
+    pos = jnp.asarray(rng.integers(0, nb * bs, B), jnp.int32)
+    return q, kp, vp, table, pos
+
+
+def test_paged_ref_matches_contiguous_gather():
+    """The paged oracle IS the contiguous oracle on the gathered layout —
+    bit-identical, which is what the runner equivalence harness rests on."""
+    from repro.kernels.decode_attention import (
+        decode_attention_ref,
+        paged_decode_attention_ref,
+    )
+
+    rng = np.random.default_rng(0)
+    B, H, KH, hd, bs, nb = 3, 4, 2, 8, 4, 4
+    q, kp, vp, table, pos = _rand_paged(rng, B, H, KH, hd, bs, nb)
+    o = paged_decode_attention_ref(q, kp, vp, table, pos)
+    k = kp[table].reshape(B, nb * bs, KH, hd).transpose(0, 2, 1, 3)
+    v = vp[table].reshape(B, nb * bs, KH, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_array_equal(
+        np.asarray(o), np.asarray(decode_attention_ref(q, k, v, pos))
+    )
+
+
+def test_paged_kernel_matches_ref():
+    from repro.kernels.decode_attention import (
+        paged_decode_attention,
+        paged_decode_attention_ref,
+    )
+
+    rng = np.random.default_rng(1)
+    B, H, KH, hd, bs, nb = 2, 4, 2, 16, 8, 3
+    q, kp, vp, table, pos = _rand_paged(rng, B, H, KH, hd, bs, nb)
+    o_k = paged_decode_attention(q, kp, vp, table, pos, interpret=True)
+    o_r = paged_decode_attention_ref(q, kp, vp, table, pos)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=2e-6, rtol=2e-6)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "B,H,KH,hd,bs,nb",
+    [
+        (1, 2, 2, 8, 4, 1),  # single block: init tile is also the final tile
+        (2, 4, 2, 16, 8, 3),
+        (3, 8, 2, 32, 16, 2),  # GQA 4:1
+        (4, 4, 4, 16, 4, 5),  # MHA, many small blocks
+        (2, 6, 3, 16, 8, 4),  # 2:1 grouping
+    ],
+)
+def test_paged_kernel_sweep(B, H, KH, hd, bs, nb):
+    """Interpret-mode Pallas sweep over head groupings / block geometries,
+    including per-row positions at every in-block offset."""
+    from repro.kernels.decode_attention import (
+        paged_decode_attention,
+        paged_decode_attention_ref,
+    )
+
+    rng = np.random.default_rng(B * 1000 + nb)
+    q, kp, vp, table, pos = _rand_paged(rng, B, H, KH, hd, bs, nb)
+    # force the full offset range across rows: first/last token of a block
+    pos = jnp.asarray(
+        [(i * bs + [0, bs - 1, bs // 2][i % 3]) % (nb * bs) for i in range(B)],
+        jnp.int32,
+    )
+    o_k = paged_decode_attention(q, kp, vp, table, pos, interpret=True)
+    o_r = paged_decode_attention_ref(q, kp, vp, table, pos)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=2e-6, rtol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# paged runner: exhaustion + memory scaling
+
+
+@pytest.fixture(scope="module")
+def paged_setup():
+    from repro.configs import get_tiny
+    from repro.models import build_model
+
+    cfg = get_tiny("qwen2-1.5b").replace(n_layers=2, vocab_size=128, decode_attn="paged")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.random.default_rng(1).integers(0, 128, (8, 8)).astype(np.int32)
+    return cfg, model, params, prompts
+
+
+def test_runner_pool_exhaustion_raises_cleanly(paged_setup):
+    from repro.serving import DecodeRunner
+
+    _, model, params, prompts = paged_setup
+    # prompt takes 2 blocks of 4; pool of 5 blocks fits two prompts + one
+    # appended block, then runs dry
+    r = DecodeRunner(model, params, prompts, max_new_tokens=8, max_slots=2,
+                     n_slots=4, kv_block_size=4, kv_blocks=5)
+    r.start(0, 0)
+    r.start(1, 1)
+    assert r._alloc.live_blocks == 4
+    with pytest.raises(PoolExhausted):
+        r.start(2, 2)  # needs 2 blocks, 1 free
+    # the prompt exactly fills 2 blocks, so the first decode step must
+    # append one block per slot — only one is free; the step raises
+    # BEFORE any device update, leaving the allocator consistent
+    with pytest.raises(PoolExhausted):
+        r.step([0, 1], [0])
+    assert r._alloc.n_free + r._alloc.live_blocks == r._alloc.n_blocks
+    # freeing a slot returns its blocks; the survivor appends and proceeds
+    r.free(0)
+    assert r._alloc.n_free >= 2
+    r.step([1], [0])
+    assert r._pos[1] == 9
+
+
+def test_paged_memory_scales_with_live_tokens(paged_setup):
+    """The acceptance claim at unit scale: with few live tokens the paged
+    pool is far smaller than n_slots * max_len contiguous rows, while
+    records stay bit-identical to the contiguous runner."""
+    from repro.models import build_model
+    from repro.serving import DecodeRunner
+
+    cfg, model, params, prompts = paged_setup
+    n_slots = 8
+    kw = dict(max_new_tokens=8, max_slots=2, n_slots=n_slots)
+    cont = DecodeRunner(
+        build_model(cfg.replace(decode_attn="ref")), params, prompts, **kw
+    )
+    # 2 concurrent short requests -> 2 slots * 4 blocks; pool of 8 blocks
+    paged = DecodeRunner(model, params, prompts, kv_block_size=4, kv_blocks=8, **kw)
+    for r in (cont, paged):
+        r.start(0, 0)
+        r.start(5, 3)
+    for _ in range(4):
+        lc, uc, fc = cont.step([0, 5], [0])
+        lp, up, fp = paged.step([0, 5], [0])
+        np.testing.assert_array_equal(lp, lc)
+        np.testing.assert_array_equal(up, uc)
+        np.testing.assert_array_equal(fp, fc)
+    # contiguous holds n_slots(8) * cache_len(16) token rows; the paged
+    # pool holds (kv_blocks + trash)(9) * 4 = 36 token slots
+    assert cont.cache_bytes() == paged.cache_bytes() * (8 * 16) // 36
+    assert paged.cache_bytes() * 3 < cont.cache_bytes()
+    assert cont.dispatches == paged.dispatches
+    st = paged.kv_stats()
+    assert st["peak_blocks"] == 6 and st["live_blocks"] == 6
+
+
+def test_paged_cache_schema_rejects_unsupported_layers():
+    from repro.configs import get_tiny
+    from repro.models import build_model
+
+    mamba = build_model(get_tiny("mamba2-2.7b"))
+    with pytest.raises(NotImplementedError):
+        mamba.paged_cache_schema(4, 4)
+    mla = build_model(get_tiny("deepseek-v2-lite-16b"))
+    with pytest.raises(NotImplementedError):
+        mla.paged_cache_schema(4, 4)
+    # local sliding-window layers are unsupported regardless of
+    # windowed_cache: they keep the dense masked decode path, which a
+    # block pool cannot feed — must fail AT SCHEMA CREATION, not with a
+    # confusing decode_impl error on the first step
+    gemma = build_model(get_tiny("gemma3-4b").replace(decode_attn="paged"))
+    with pytest.raises(NotImplementedError):
+        gemma.paged_cache_schema(4, 4)
+
+
+def test_runner_kv_block_size_validation(paged_setup):
+    from repro.models import build_model
+    from repro.serving import DecodeRunner
+
+    cfg, model, params, prompts = paged_setup
+    with pytest.raises(ValueError):
+        DecodeRunner(model, params, prompts, kv_block_size=0)
+    # kv_block_size=0 documents "contiguous" at the CLI: harmless on a
+    # contiguous-cfg runner (must not divide by zero in __init__)
+    cont = DecodeRunner(
+        build_model(cfg.replace(decode_attn="ref")), params, prompts,
+        max_new_tokens=4, kv_block_size=0,
+    )
+    assert not cont.paged
+    cont.start(0, 0)
+    cont.step([0], [0])
