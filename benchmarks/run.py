@@ -545,6 +545,85 @@ def bench_paged_kv():
     })
 
 
+# ---------------------------------------------- chunked prefill interleaving
+
+
+def bench_chunked_prefill():
+    """Chunked prefill on the unified engine: TTFT/TPT p95 with and without
+    ``--prefill-chunk`` on a long-prompt + short-decode mix. Unchunked, a
+    512-token prefill stalls every in-flight decode slot (whole prefills
+    land in the TPT tail); chunked, prefill work co-schedules between
+    decode steps, so TPT p95 must come back DOWN to decode scale while
+    TTFT stays within the interleave bound (one co-scheduled decode step
+    per chunk). Gate rows: ``tpt_p95_le_unchunked`` and
+    ``ttft_within_bound`` must both be True. Also checks the engine-facade
+    equivalence smoke (facade == frozen pre-refactor loop on a seeded
+    schedule) so CI catches a drifting core without the full fuzz."""
+    from repro.configs import get_config
+    from repro.core import build_profile
+    from repro.serving import (
+        GenerativeConfig,
+        GenerativeEngine,
+        GenRequest,
+        ReferenceGenerativeEngine,
+        maf_trace,
+        offered_decode_qps,
+        summarize_generative,
+    )
+
+    prof = build_profile(
+        get_config("gpt2-medium").replace(n_classes=0, ramp_style="tied"),
+        mode="decode", chips=1, charge_kv=True,
+    )
+    mbs, chunk, long_prompt = 8, 64, 512
+    qps = offered_decode_qps(prof, max_batch_size=mbs, tokens_per_request=16, load=0.7)
+    arr = maf_trace(60, mean_qps=qps, seed=1)
+    reqs = [
+        GenRequest(rid=k, arrival_ms=float(t), slo_ms=3 * prof.vanilla_time(1),
+                   item=k, prompt_len=long_prompt if k % 5 == 4 else 32,
+                   n_tokens=4 if k % 5 == 4 else 16)
+        for k, t in enumerate(arr)
+    ]
+    runs = {}
+    for name, pc in (("unchunked", 0), ("chunked", chunk)):
+        eng = GenerativeEngine(prof, GenerativeConfig(max_batch_size=mbs,
+                                                      prefill_chunk=pc))
+        runs[name] = (summarize_generative(eng.run(reqs), horizon_ms=eng.makespan_ms), eng)
+    mu, mc = runs["unchunked"][0], runs["chunked"][0]
+    n_chunks_max = -(-long_prompt // chunk)
+    ttft_bound = mu["ttft_p95_ms"] + n_chunks_max * prof.vanilla_time(mbs)
+    tpt_ok = mc["tpt_p95_ms"] <= mu["tpt_p95_ms"] + 1e-9
+    ttft_ok = mc["ttft_p95_ms"] <= ttft_bound + 1e-9
+    emit("chunked_prefill_unchunked_tpt_p95", mu["tpt_p95_ms"] * 1e3,
+         f"ttft_p95_ms={mu['ttft_p95_ms']:.2f}")
+    emit("chunked_prefill_chunked_tpt_p95", mc["tpt_p95_ms"] * 1e3,
+         f"ttft_p95_ms={mc['ttft_p95_ms']:.2f};tpt_p95_le_unchunked={tpt_ok};"
+         f"ttft_within_bound={ttft_ok}")
+    win = (100 * (mu["tpt_p95_ms"] - mc["tpt_p95_ms"]) / mu["tpt_p95_ms"]
+           if mu["tpt_p95_ms"] > 0 else 0.0)
+    emit("chunked_prefill_tpt_p95_win", win, f"win_pct={win:.1f}")
+    # engine-facade equivalence smoke (full fuzz: tests/test_engine_equivalence.py)
+    facade = GenerativeEngine(prof, GenerativeConfig(max_batch_size=mbs))
+    ref = ReferenceGenerativeEngine(prof, GenerativeConfig(max_batch_size=mbs))
+    fa, fb = facade.run(reqs), ref.run(reqs)
+    identical = [(r.rid, r.release_ms, r.tokens) for r in fa] == [
+        (r.rid, r.release_ms, r.tokens) for r in fb]
+    emit("chunked_prefill_facade_smoke", facade.makespan_ms, f"identical={identical}")
+    snapshot("chunked_prefill", {
+        "chunk_tokens": chunk,
+        "unchunked_tpt_p95_ms": mu["tpt_p95_ms"],
+        "chunked_tpt_p95_ms": mc["tpt_p95_ms"],
+        "tpt_p95_win_pct": win,
+        "unchunked_ttft_p95_ms": mu["ttft_p95_ms"],
+        "chunked_ttft_p95_ms": mc["ttft_p95_ms"],
+        "ttft_bound_ms": ttft_bound,
+        "tpt_p95_le_unchunked": bool(tpt_ok),
+        "ttft_within_bound": bool(ttft_ok),
+        "facade_identical": bool(identical),
+        "prefill_chunks": int(runs["chunked"][1].n_chunks),
+    })
+
+
 # ------------------------------------------------------------------ kernels
 
 
@@ -607,6 +686,7 @@ ALL = [
     bench_decode_dispatch,
     bench_tune_wall,
     bench_paged_kv,
+    bench_chunked_prefill,
     bench_kernels,
 ]
 

@@ -279,6 +279,28 @@ class LatencyProfile:
             float(self.kv_pibytes[lo:].sum()),
         )
 
+    def prefill_chunk_time(self, n_tokens: int, bs: int = 1) -> float:
+        """Roofline time (ms) for one prefill chunk of ``n_tokens`` prompt
+        tokens per input: each layer's compute scales with the chunk while
+        its weight traffic is paid once per chunk — prefill is the
+        compute-dense regime chunked prefill co-schedules against
+        memory-bound decode steps. Sub-additive in the chunk size (weight
+        reads amortize: two merged chunks never cost more than the split),
+        which is exactly why a chunk must be priced as a unit instead of
+        ``n_tokens`` independent decode-step fractions. The serving
+        engine's default admission pricing stays the engine-level
+        ``prefill_frac`` model (linear, so chunked and unchunked totals
+        match exactly); this method is the physical reference — pass it as
+        ``GenerativeEngine(prefill_ms=profile.prefill_chunk_time)`` to
+        price prefill from the roofline instead."""
+        if n_tokens <= 0:
+            return 0.0
+        t = 0.0
+        for i in range(len(self.layer_flops)):
+            t += self._time(self.layer_flops[i] * n_tokens, self.layer_bytes[i],
+                            bs, self._layer_pi(i) * n_tokens)
+        return t
+
     def decode_step_time(self, exit_sites: Sequence[int], active: Sequence[int] = ()) -> float:
         """One continuous-batching decode step (ms) where slot ``b``'s token
         exits at site ``exit_sites[b]`` (-1 = runs to completion).

@@ -22,6 +22,8 @@ from repro.core import ApparateController, ControllerConfig, build_profile
 from repro.data import make_decode_stream, make_image_stream, make_token_stream
 from repro.models import build_model
 from repro.serving import (
+    AdmissionConfig,
+    AdmissionPolicy,
     ClassifierRunner,
     ClusterConfig,
     ClusterSimulator,
@@ -73,7 +75,8 @@ def build_domain(domain: str, n: int, seed: int = 2):
 
 
 def serve(domain: str, n: int, *, policy="tfserve", budget=0.02, acc=0.99,
-          load=0.5, seed=2, slots=6, workers=1, dispatch="jsq", verbose=True):
+          load=0.5, seed=2, slots=6, workers=1, dispatch="jsq", admission=False,
+          admission_slack=1.0, verbose=True):
     cfg, model, params, stream, prof, boot = build_domain(domain, n, seed)
     runner = ClassifierRunner(model, params, stream.data, max_slots=slots)
     ccfg = ControllerConfig(max_slots=slots, ramp_budget_frac=budget, acc_constraint=acc)
@@ -86,11 +89,20 @@ def serve(domain: str, n: int, *, policy="tfserve", budget=0.02, acc=0.99,
         arrivals = maf_trace(n_serve, mean_qps=workers * load * 1000.0 / exec1, seed=seed)
     reqs = make_requests(arrivals, slo_ms=2 * exec1, items=np.arange(boot, n))
     pf = PlatformConfig(policy=policy, max_batch_size=8, batch_timeout_ms=exec1)
-    ccl = ClusterConfig(n_workers=workers, dispatch=dispatch, platform=pf)
-    base_sim = ClusterSimulator(prof, ccl)
+
+    def adm():
+        return (AdmissionPolicy(AdmissionConfig(slack=admission_slack))
+                if admission else None)
+
+    base_sim = ClusterSimulator(
+        prof, ClusterConfig(n_workers=workers, dispatch=dispatch, platform=pf,
+                            admission=adm()))
     base = base_sim.run(reqs)
     ctls = [ApparateController(len(model.sites), prof, ccfg) for _ in range(workers)]
-    sim = ClusterSimulator(prof, ccl, runner=runner, controllers=ctls)
+    sim = ClusterSimulator(
+        prof, ClusterConfig(n_workers=workers, dispatch=dispatch, platform=pf,
+                            admission=adm()),
+        runner=runner, controllers=ctls)
     resp = sim.run(reqs)
     van = runner.vanilla_labels(n)
     agree = float(np.mean([r.label == van[boot + r.rid] for r in resp if not r.dropped]))
@@ -104,6 +116,9 @@ def serve(domain: str, n: int, *, policy="tfserve", budget=0.02, acc=0.99,
         "controllers": [dict(c.stats) for c in ctls],
         "active_ramps": [list(map(int, c.active)) for c in ctls],
     }
+    if admission:
+        out["admission"] = {"vanilla": base_sim.cfg.admission.stats(),
+                            "apparate": sim.cfg.admission.stats()}
     if workers > 1:
         out["per_worker"] = rep_o["workers"]
         out["worker_stats"] = sim.worker_stats()
@@ -114,6 +129,7 @@ def serve(domain: str, n: int, *, policy="tfserve", budget=0.02, acc=0.99,
 
 def serve_generative(n=48, *, decode_tokens=16, budget=0.02, acc=0.99, load=0.5,
                      seed=2, slots=4, layers=6, kv_block_size=0, kv_blocks=None,
+                     prefill_chunk=0, admission=False, admission_slack=1.0,
                      verbose=True):
     """End-to-end generative decode serving on a trained tiny LM: vanilla
     (no-EE) vs Apparate per-token exits, KV catch-up charged, at the same
@@ -124,7 +140,13 @@ def serve_generative(n=48, *, decode_tokens=16, budget=0.02, acc=0.99, load=0.5,
     ``kv_block_size > 0`` switches the decode cache to the PAGED block
     pool (``decode_attn='paged'``): KV memory scales with live tokens
     instead of ``n_slots * max_len``; ``kv_blocks`` caps the pool (default
-    auto-sizes to full slot capacity)."""
+    auto-sizes to full slot capacity).
+
+    ``prefill_chunk > 0`` splits each prompt's prefill into chunks
+    co-scheduled with in-flight decode steps (the unified engine's
+    chunked-prefill path; ``DecodeRunner`` prefills the slot cache
+    incrementally). ``admission`` enables the SLO-aware admission policy
+    (drop hopeless streams at admission, shed doomed slots mid-run)."""
     # decode_attn='ref' routes single-token attention through the
     # flash-decode wrapper (kernels/decode_attention) — the jnp oracle on
     # CPU; 'kernel' is the Pallas path on real hardware. 'paged' is the
@@ -161,8 +183,13 @@ def serve_generative(n=48, *, decode_tokens=16, budget=0.02, acc=0.99, load=0.5,
     arr = maf_trace(n, mean_qps=qps, seed=seed)
     reqs = make_gen_requests(arr, n_tokens=decode_tokens, prompt_len=seq_len,
                              slo_ms=3 * prof.vanilla_time(1))
-    gcfg = GenerativeConfig(max_batch_size=mbs)
-    base_eng = GenerativeEngine(prof, gcfg)
+    gcfg = GenerativeConfig(max_batch_size=mbs, prefill_chunk=prefill_chunk)
+
+    def adm():
+        return (AdmissionPolicy(AdmissionConfig(slack=admission_slack))
+                if admission else None)
+
+    base_eng = GenerativeEngine(prof, gcfg, admission=adm())
     mb = summarize_generative(base_eng.run(reqs), horizon_ms=base_eng.makespan_ms)
     ctl = ApparateController(ns, prof, ControllerConfig(
         max_slots=slots, ramp_budget_frac=budget, acc_constraint=acc))
@@ -172,7 +199,7 @@ def serve_generative(n=48, *, decode_tokens=16, budget=0.02, acc=0.99, load=0.5,
     runner = DecodeRunner(model, state["params"], stream.data[:, :seq_len],
                           max_new_tokens=decode_tokens + 2, max_slots=slots,
                           n_slots=mbs, **rkw)
-    eng = GenerativeEngine(prof, gcfg, runner, ctl)
+    eng = GenerativeEngine(prof, gcfg, runner, ctl, admission=adm())
     mo = summarize_generative(eng.run(reqs), horizon_ms=eng.makespan_ms)
     out = {
         "mode": "generative", "n": n, "decode_tokens": decode_tokens,
@@ -187,6 +214,11 @@ def serve_generative(n=48, *, decode_tokens=16, budget=0.02, acc=0.99, load=0.5,
         "active_ramps": list(map(int, ctl.active)),
         "kv_cache": runner.kv_stats(),
     }
+    if prefill_chunk:
+        out["prefill_chunk"] = prefill_chunk
+    if admission:
+        out["admission"] = {"vanilla": base_eng.admission.stats(),
+                            "apparate": eng.admission.stats()}
     if verbose:
         print(json.dumps(out, indent=1, default=float))
     return out
@@ -204,6 +236,16 @@ def main(argv=None):
     ap.add_argument("--kv-blocks", type=int, default=None,
                     help="generative: total paged KV pool blocks "
                          "(default: auto-size to full slot capacity)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="generative: >0 splits each prompt's prefill into "
+                         "chunks of this many tokens, co-scheduled with "
+                         "in-flight decode steps (0 = serial prefill)")
+    ap.add_argument("--admission", action="store_true",
+                    help="enable the SLO-aware admission policy: drop "
+                         "hopeless requests at admission; generative mode "
+                         "also sheds doomed slots mid-stream")
+    ap.add_argument("--admission-slack", type=float, default=1.0,
+                    help="deadline slack multiplier for --admission")
     ap.add_argument("--policy", default="tfserve", choices=["tfserve", "clockwork"])
     ap.add_argument("--budget", type=float, default=0.02)
     ap.add_argument("--acc", type=float, default=0.99)
@@ -216,11 +258,16 @@ def main(argv=None):
         serve_generative(args.n if args.n is not None else 48,
                          decode_tokens=args.decode_tokens,
                          budget=args.budget, acc=args.acc, load=args.load,
-                         kv_block_size=args.kv_block_size, kv_blocks=args.kv_blocks)
+                         kv_block_size=args.kv_block_size, kv_blocks=args.kv_blocks,
+                         prefill_chunk=args.prefill_chunk,
+                         admission=args.admission,
+                         admission_slack=args.admission_slack)
     else:
         serve(args.domain, args.n if args.n is not None else 3000,
               policy=args.policy, budget=args.budget,
-              acc=args.acc, load=args.load, workers=args.workers, dispatch=args.dispatch)
+              acc=args.acc, load=args.load, workers=args.workers,
+              dispatch=args.dispatch, admission=args.admission,
+              admission_slack=args.admission_slack)
 
 
 if __name__ == "__main__":

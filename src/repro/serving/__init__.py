@@ -7,6 +7,11 @@ from repro.serving.cluster import (
     get_dispatcher,
     release_offset,
 )
+from repro.serving.engine import (
+    ClassificationAdapter,
+    EngineCore,
+    GenerativeAdapter,
+)
 from repro.serving.generative import (
     GenerativeConfig,
     GenerativeEngine,
@@ -19,7 +24,17 @@ from repro.serving.metrics import (
     summarize_generative,
 )
 from repro.serving.platform import PlatformConfig, ServingSimulator, make_requests
-from repro.serving.policies import BatchPolicy, get_policy
+from repro.serving.policies import (
+    AdmissionConfig,
+    AdmissionPolicy,
+    BatchPolicy,
+    get_policy,
+)
+from repro.serving.reference import (
+    ReferenceClusterSimulator,
+    ReferenceGenerativeEngine,
+    ReferenceMixedClusterSimulator,
+)
 from repro.serving.request import (
     GenRequest,
     GenResponse,
@@ -56,8 +71,16 @@ __all__ = [
     "Worker",
     "get_dispatcher",
     "release_offset",
+    "EngineCore",
+    "ClassificationAdapter",
+    "GenerativeAdapter",
+    "AdmissionConfig",
+    "AdmissionPolicy",
     "BatchPolicy",
     "get_policy",
+    "ReferenceClusterSimulator",
+    "ReferenceGenerativeEngine",
+    "ReferenceMixedClusterSimulator",
     "make_requests",
     "make_gen_requests",
     "Request",

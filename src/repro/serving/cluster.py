@@ -1,4 +1,4 @@
-"""Scale-out discrete-event serving engine.
+"""Scale-out serving facades over the unified engine core.
 
 Generalizes the single-GPU ``ServingSimulator`` to N replicas: a
 dispatcher routes each request to a worker at its arrival instant, and
@@ -8,6 +8,13 @@ adapting from its own ramp-record stream. This mirrors the paper's
 CPU/GPU controller split per replica: records never cross workers, so
 threshold tuning and ramp adjustment stay an O(window) host-side loop
 regardless of cluster size.
+
+The event loop itself lives in `repro.serving.engine` (shared with the
+generative decode adapter); ``ClusterSimulator`` and
+``MixedClusterSimulator`` are thin facades that build a
+``ClassificationAdapter`` (and, for the mixed case, generative adapters)
+on ONE ``EngineCore`` — one heap, one clock — and stay bit-identical to
+the pre-refactor loops (`repro.serving.reference`).
 
 Dispatch strategies:
 
@@ -25,19 +32,9 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.serving.engine import ClassificationAdapter, EngineCore, GenerativeAdapter, release_offset  # noqa: F401  (release_offset re-exported)
 from repro.serving.policies import PlatformConfig, get_policy
 from repro.serving.request import Request, Response
-
-
-def release_offset(profile, site: int, bs: int, active: Sequence[int]) -> float:
-    """Time into batch execution at which a result exiting at ``site``
-    leaves the platform: the trunk compute through the site's layer plus
-    every active ramp head at or before it (all on the critical path)."""
-    ovh = 0.0
-    for s in sorted(active):
-        if s <= site:
-            ovh += profile.ramp_overhead(s, bs)
-    return profile.time_to_layer(profile.sites[site], bs) + ovh
 
 
 @dataclasses.dataclass
@@ -45,6 +42,9 @@ class ClusterConfig:
     n_workers: int = 1
     dispatch: str = "round_robin"  # 'round_robin' | 'jsq' | 'slo_aware'
     platform: PlatformConfig = dataclasses.field(default_factory=PlatformConfig)
+    # SLO-aware admission control (None = queue everything, the paper's
+    # platforms): an AdmissionPolicy shared with the generative adapter
+    admission: Optional[object] = None
 
 
 class Worker:
@@ -177,7 +177,7 @@ def get_dispatcher(name: str) -> Dispatcher:
 
 
 class ClusterSimulator:
-    """N-worker discrete-event loop.
+    """N-worker serving facade over the unified engine core.
 
     ``controllers`` — one per worker (each replica adapts independently),
     or ``None`` for vanilla serving. The runner is shared: it is a pure
@@ -204,54 +204,22 @@ class ClusterSimulator:
         ]
         self.dispatcher = get_dispatcher(cluster.dispatch)
         self.makespan_ms = 0.0
+        self.core: Optional[EngineCore] = None  # last run's engine core
+
+    def _make_adapter(self, requests: Sequence[Request]) -> ClassificationAdapter:
+        """The engine-core adapter over THIS simulator's workers/dispatcher
+        (shared with ``MixedClusterSimulator``, which co-schedules it with
+        generative adapters on one core)."""
+        return ClassificationAdapter(self.workers, self.dispatcher, requests,
+                                     admission=self.cfg.admission)
 
     def run(self, requests: List[Request]) -> List[Response]:
-        workers = self.workers
-        responses: List[Response] = []
-        i, n = 0, len(requests)
-        now = 0.0
-        while i < n or any(w.queue for w in workers):
-            # dispatch arrivals up to `now` (routing sees the state at arrival)
-            while i < n and requests[i].arrival_ms <= now + 1e-9:
-                self.dispatcher.pick(workers, requests[i], now).queue.append(requests[i])
-                i += 1
-            nxt = requests[i].arrival_ms if i < n else np.inf
-            # let every free worker with queued requests act at `now`
-            acted = False
-            for w in workers:
-                if not w.queue or now + 1e-9 < w.free_at:
-                    continue
-                batch = w.policy.form_batch(w.queue, now, nxt, w.exec_time)
-                if batch is None:
-                    continue
-                acted = True
-                if not batch:  # DROP sentinel: shed head-of-line request
-                    r = w.queue.pop(0)
-                    responses.append(
-                        Response(r.rid, now, -1, -1, now - r.arrival_ms, 0, True,
-                                 worker=w.wid, slo_ms=r.slo_ms)
-                    )
-                    continue
-                del w.queue[: len(batch)]
-                responses.extend(w.execute(batch, now))
-            if acted:
-                continue
-            # advance to the next decision point: arrival, a busy worker
-            # freeing up, or a waiting policy's timeout expiry
-            cand = [nxt]
-            for w in workers:
-                if not w.queue:
-                    continue
-                if now < w.free_at:
-                    cand.append(w.free_at)
-                else:
-                    cand.append(w.policy.next_wake(w.queue, now, nxt))
-            t = min(cand)
-            if not np.isfinite(t):
-                break  # defensive: nothing can ever progress
-            now = max(now, t)
-        self.makespan_ms = max([now] + [w.free_at for w in workers])
-        return responses
+        core = EngineCore()
+        adapter = core.add(self._make_adapter(requests))
+        core.run()
+        self.core = core
+        self.makespan_ms = adapter.makespan()
+        return adapter.responses
 
     def worker_stats(self) -> Dict[int, Dict[str, float]]:
         return {w.wid: w.stats() for w in self.workers}
@@ -260,14 +228,17 @@ class ClusterSimulator:
 class MixedClusterSimulator:
     """Heterogeneous replica pools in one cluster: classification workers
     (a ``ClusterSimulator``) + generative decode replicas
-    (``GenerativeEngine`` duck type from ``repro.serving.generative``)
-    behind one frontend — the ROADMAP's CV/NLP/generative mixture.
+    (``GenerativeEngine`` from ``repro.serving.generative``) behind one
+    frontend — the ROADMAP's CV/NLP/generative mixture.
 
-    Replicas share nothing: a generative replica holds an LM plus its KV
-    slots, a classification replica its classifier, and the frontend
-    splits the mixed request stream by kind at arrival. Because no state
-    crosses the pools, simulating each pool independently is *exact* for
-    the mixture, not an approximation.
+    Replicas share nothing (a generative replica holds an LM plus its KV
+    slots, a classification replica its classifier), but since the
+    unification all pools run on ONE ``EngineCore``: a single event heap
+    and a single monotone clock, so cross-pool event interleavings are
+    globally time-ordered (``self.core.completions``) instead of each
+    pool living on its own clock — the property the pre-refactor
+    independent-pool frontend could never even observe. Per-pool results
+    are unchanged (pools still share no state).
 
     Generative dispatch is arrival-order greedy on outstanding token work
     (the decode analogue of join-shortest-queue: queued tokens, not queued
@@ -281,6 +252,7 @@ class MixedClusterSimulator:
         self.cls_sim = cls_sim
         self.gen_engines = list(gen_engines)
         self.makespan_ms = 0.0
+        self.core: Optional[EngineCore] = None  # last run's shared engine core
 
     def run(self, cls_requests: Sequence[Request] = (), gen_requests: Sequence = ()):
         """Returns (classification Responses, GenResponses)."""
@@ -288,18 +260,30 @@ class MixedClusterSimulator:
             raise ValueError("classification requests but no classification pool")
         if gen_requests and not self.gen_engines:
             raise ValueError("generative requests but no generative pool")
-        cls_resp: List[Response] = (
-            self.cls_sim.run(list(cls_requests)) if cls_requests else []
-        )
+        core = EngineCore()
+        cls_adapter = None
+        if cls_requests:
+            cls_adapter = core.add(self.cls_sim._make_adapter(list(cls_requests)))
         buckets: List[list] = [[] for _ in self.gen_engines]
         load = [0.0] * len(self.gen_engines)
         for r in sorted(gen_requests, key=lambda q: (q.arrival_ms, q.rid)):
             k = min(range(len(load)), key=lambda j: (load[j], j))
             buckets[k].append(r)
             load[k] += r.n_tokens
+        gen_adapters = [
+            core.add(GenerativeAdapter(eng, buckets[k]))
+            for k, eng in enumerate(self.gen_engines)
+        ]
+        core.run()
+        self.core = core
+        cls_resp: List[Response] = []
+        if cls_adapter is not None:
+            cls_resp = cls_adapter.responses
+            self.cls_sim.core = core
+            self.cls_sim.makespan_ms = cls_adapter.makespan()
         gen_resp: List = []
-        for k, eng in enumerate(self.gen_engines):
-            rs = eng.run(buckets[k])
+        for k, ad in enumerate(gen_adapters):
+            rs = ad.finalize()
             for r in rs:
                 r.worker = k
             gen_resp.extend(rs)

@@ -1,0 +1,427 @@
+"""Unified event-driven serving engine core.
+
+Every serving workload in this repo used to hand-roll its own
+discrete-event loop — ``ServingSimulator`` (single worker),
+``ClusterSimulator``/``MixedClusterSimulator`` (scale-out + mixed pools),
+and the generative decode engine — each re-implementing clock advance,
+queue draining, and controller feedback. This module is the single core
+they are now thin facades over:
+
+  * ``EngineCore`` — ONE event heap and ONE monotone clock. Adapters
+    schedule wake events; completions are themselves heap events, so
+    ``EngineCore.completions`` pops globally time-ordered across every
+    pool (the property ``MixedClusterSimulator`` could never test while
+    its pools ran on independent clocks).
+  * ``ClassificationAdapter`` — per-replica queues (``Worker`` objects),
+    the `repro.serving.policies` batch-formation strategies, dispatcher
+    routing at arrival, and the Apparate controller hookpoint in
+    ``Worker.execute``.
+  * ``GenerativeAdapter`` — slot-based continuous batching, per-token
+    early exits with deferred KV catch-up, plus the two capabilities the
+    split loops made impossible: **chunked prefill interleaving**
+    (``GenerativeConfig.prefill_chunk`` splits a long prompt into chunks
+    co-scheduled with in-flight decode steps, so TPT never stalls behind
+    a monolithic prefill) and **SLO-aware admission / mid-stream shedding**
+    via the shared ``AdmissionPolicy`` (`repro.serving.policies`).
+
+Exactness contract: with ``prefill_chunk == 0`` and no admission policy,
+both adapters reproduce the pre-refactor loops bit-for-bit — pinned by
+the facade-vs-reference fuzz in ``tests/test_engine_equivalence.py``
+against the frozen oracles in `repro.serving.reference`.
+"""
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.request import GenResponse, Request, Response
+
+
+def release_offset(profile, site: int, bs: int, active: Sequence[int]) -> float:
+    """Time into batch execution at which a result exiting at ``site``
+    leaves the platform: the trunk compute through the site's layer plus
+    every active ramp head at or before it (all on the critical path)."""
+    ovh = 0.0
+    for s in sorted(active):
+        if s <= site:
+            ovh += profile.ramp_overhead(s, bs)
+    return profile.time_to_layer(profile.sites[site], bs) + ovh
+
+
+class EngineCore:
+    """Single discrete-event core: one heap, one clock, N adapters.
+
+    Adapters schedule their own wake events (``schedule``) and log
+    completions (``emit``); the core pops events in global time order, so
+    ``now`` is monotone across every pool and ``completions`` interleaves
+    classification and generative releases in true time order.
+    """
+
+    def __init__(self):
+        self.now = 0.0
+        self.adapters: List = []
+        self._heap: List = []  # (time, seq, adapter | None, completion)
+        self._seq = 0
+        #: (time, pool, record) tuples appended as the clock passes them —
+        #: globally time-ordered across every adapter on this core.
+        self.completions: List = []
+
+    def add(self, adapter):
+        adapter.core = self
+        self.adapters.append(adapter)
+        return adapter
+
+    def schedule(self, t: float, adapter) -> None:
+        """Wake ``adapter`` when the clock reaches ``t`` (FIFO at ties)."""
+        heapq.heappush(self._heap, (float(t), self._seq, adapter, None))
+        self._seq += 1
+
+    def emit(self, t: float, pool: str, record) -> None:
+        """Log a completion at time ``t``. The record rides the heap, so it
+        lands in ``completions`` only when the clock reaches it — later
+        emissions with earlier timestamps still order correctly."""
+        heapq.heappush(self._heap, (float(t), self._seq, None, (pool, record)))
+        self._seq += 1
+
+    def run(self) -> "EngineCore":
+        for a in self.adapters:
+            a.prime(self)
+        while self._heap:
+            t, _, adapter, rec = heapq.heappop(self._heap)
+            if t > self.now:
+                self.now = t
+            if adapter is None:
+                self.completions.append((t, rec[0], rec[1]))
+            else:
+                adapter.wake(self, self.now)
+        return self
+
+
+class ClassificationAdapter:
+    """Classification-batch workload on the shared core.
+
+    Exact port of the pre-refactor ``ClusterSimulator`` loop: dispatch at
+    arrival (routing sees the state at that instant), every free worker
+    acts until quiescent at each decision point, then one wake is
+    scheduled at the next decision instant (arrival, a busy worker with
+    backlog freeing up, or a waiting policy's timeout expiry).
+
+    ``admission`` (an ``AdmissionPolicy``) adds SLO-aware admission
+    control: a request whose earliest estimated completion on its routed
+    worker already misses its deadline is shed at arrival instead of
+    wasting queue capacity — the InferLine-style early drop the
+    ``slo_aware`` dispatcher estimates but never acts on.
+    """
+
+    pool = "classification"
+
+    def __init__(self, workers, dispatcher, requests, admission=None):
+        self.workers = workers
+        self.dispatcher = dispatcher
+        self.reqs = list(requests)
+        self.admission = admission
+        self.responses: List[Response] = []
+        self._i = 0
+        self._now = 0.0  # last decision instant (the old loop's final `now`)
+
+    def prime(self, core: EngineCore) -> None:
+        if self.reqs:
+            core.schedule(0.0, self)
+
+    def _pending(self) -> bool:
+        return self._i < len(self.reqs) or any(w.queue for w in self.workers)
+
+    def wake(self, core: EngineCore, now: float) -> None:
+        workers = self.workers
+        self._now = now
+        nxt = np.inf
+        while True:
+            # dispatch arrivals up to `now` (routing sees the state at arrival)
+            while self._i < len(self.reqs) and self.reqs[self._i].arrival_ms <= now + 1e-9:
+                req = self.reqs[self._i]
+                self._i += 1
+                w = self.dispatcher.pick(workers, req, now)
+                if self.admission is not None and not self.admission.admit_request(
+                    req, now, w.backlog_eta(now)
+                ):
+                    r = Response(req.rid, now, -1, -1, now - req.arrival_ms, 0, True,
+                                 worker=w.wid, slo_ms=req.slo_ms)
+                    self.responses.append(r)
+                    core.emit(now, self.pool, r)
+                    continue
+                w.queue.append(req)
+            nxt = self.reqs[self._i].arrival_ms if self._i < len(self.reqs) else np.inf
+            # let every free worker with queued requests act at `now`
+            acted = False
+            for w in workers:
+                if not w.queue or now + 1e-9 < w.free_at:
+                    continue
+                batch = w.policy.form_batch(w.queue, now, nxt, w.exec_time)
+                if batch is None:
+                    continue
+                acted = True
+                if not batch:  # DROP sentinel: shed head-of-line request
+                    r = w.queue.pop(0)
+                    resp = Response(r.rid, now, -1, -1, now - r.arrival_ms, 0, True,
+                                    worker=w.wid, slo_ms=r.slo_ms)
+                    self.responses.append(resp)
+                    core.emit(now, self.pool, resp)
+                    continue
+                del w.queue[: len(batch)]
+                out = w.execute(batch, now)
+                self.responses.extend(out)
+                for r in out:
+                    core.emit(r.release_ms, self.pool, r)
+            if not acted:
+                break
+        if not self._pending():
+            return
+        # next decision point: arrival, a busy worker freeing up, or a
+        # waiting policy's timeout expiry
+        cand = [nxt]
+        for w in workers:
+            if not w.queue:
+                continue
+            cand.append(w.free_at if now < w.free_at else w.policy.next_wake(w.queue, now, nxt))
+        t = min(cand)
+        if np.isfinite(t):
+            core.schedule(t, self)
+        # else: defensive — nothing can ever progress (the old loop's break)
+
+    def makespan(self) -> float:
+        return max([self._now] + [w.free_at for w in self.workers])
+
+
+class GenerativeAdapter:
+    """Generative decode workload on the shared core.
+
+    Owns slot admission and decode steps for one ``GenerativeEngine``
+    (the engine object carries config/profile/runner/controller and
+    accumulates the run stats). The legacy path (``prefill_chunk == 0``,
+    no admission) is an exact port of the pre-refactor engine loop:
+    admission prefills serially at the step boundary and the whole batch
+    stalls behind it.
+
+    With ``prefill_chunk > 0`` admission only *claims* the slot; the
+    prompt then prefills in ``prefill_chunk``-token chunks co-scheduled
+    with the in-flight decode steps (one chunk per prefilling slot per
+    step, priced by ``prefill_ms``), and the first token releases at the
+    end of the step that completes the prompt. Runners exposing
+    ``prefill_begin``/``prefill_resume`` (``DecodeRunner``) fill the real
+    slot cache incrementally; other runners are started once the last
+    chunk lands (timing-only chunking).
+
+    With an ``AdmissionPolicy``, a request whose per-token SLO is hopeless
+    is dropped at admission, and a live slot whose observed TPT has
+    violated its SLO for ``shed_after`` consecutive tokens is shed at the
+    next step boundary (partial response marked ``shed=True``).
+    """
+
+    pool = "generative"
+
+    def __init__(self, eng, requests):
+        self.eng = eng
+        self.reqs = sorted(requests, key=lambda r: (r.arrival_ms, r.rid))
+        self.queue: deque = deque()
+        self.slots: Dict[int, dict] = {}  # slot id -> {req, resp, [pf_left, pf_fed]}
+        self.free = list(range(eng.cfg.max_batch_size))
+        self.responses: List[GenResponse] = []
+        self._i = 0
+        self._now = 0.0  # pool-local clock (the old loop's `now`)
+        self._pending_kv = 0.0
+
+    def prime(self, core: EngineCore) -> None:
+        if self.reqs:
+            core.schedule(0.0, self)
+
+    # -- helpers -------------------------------------------------------------
+
+    def _finish(self, sid: int, core: EngineCore, shed: bool = False):
+        sl = self.slots.pop(sid)
+        self.free.append(sid)
+        self.free.sort()
+        if self.eng.runner is not None:
+            self.eng.runner.free(sid)
+        if self.eng.admission is not None:
+            # the stream ended: drop its violation streak so the next
+            # stream reusing this (wid, slot, rid) key starts fresh
+            self.eng.admission.forget((self.eng.wid, sid, sl["req"].rid))
+        resp = sl["resp"]
+        if shed:
+            resp.shed = True
+            self.eng.n_shed += 1
+        self.responses.append(resp)
+
+    def _admit_one(self, r, core: EngineCore):
+        """Claim a slot for ``r``. Legacy path: serial prefill advances the
+        pool clock and the first token releases immediately. Chunked path:
+        the slot enters the prefilling state; chunks run inside steps."""
+        eng = self.eng
+        sid = self.free.pop(0)
+        if eng.cfg.prefill_chunk > 0:
+            self.slots[sid] = {"req": r, "resp": None,
+                               "pf_left": r.prompt_len, "pf_fed": 0}
+            return
+        self._now += eng.prefill_ms(r.prompt_len)
+        tok = eng.runner.start(sid, r.item) if eng.runner is not None else 0
+        resp = GenResponse(
+            rid=r.rid, arrival_ms=r.arrival_ms, release_ms=[self._now],
+            exit_sites=[-1], tokens=[tok], final_tokens=[tok],
+            worker=eng.wid, slo_ms=r.slo_ms,
+        )
+        self.slots[sid] = {"req": r, "resp": resp}
+        eng.n_tokens += 1
+        core.emit(self._now, self.pool, (r.rid, 0))
+        if r.n_tokens <= 1:
+            self._finish(sid, core)
+
+    def _prefill_chunks(self, core: EngineCore) -> float:
+        """Run one prefill chunk per prefilling slot; returns the chunk time
+        co-scheduled into this step. Completed prompts are recorded in the
+        slot state; their first token releases at step end."""
+        eng = self.eng
+        incremental = eng.runner is not None and hasattr(eng.runner, "prefill_begin")
+        chunk_ms = 0.0
+        for sid in sorted(self.slots):
+            sl = self.slots[sid]
+            if sl["resp"] is not None:
+                continue
+            c = min(eng.cfg.prefill_chunk, sl["pf_left"])
+            r = sl["req"]
+            if c > 0:
+                chunk_ms += eng.prefill_ms(c)
+                eng.n_chunks += 1
+                if incremental and "pf_tok" not in sl:
+                    tok = (eng.runner.prefill_begin(sid, r.item, c) if sl["pf_fed"] == 0
+                           else eng.runner.prefill_resume(sid, c))
+                    if tok is not None:  # runner's prompt exhausted: first token
+                        sl["pf_tok"] = int(tok)
+                sl["pf_left"] -= c
+                sl["pf_fed"] += c
+            if sl["pf_left"] <= 0 and "pf_tok" not in sl:
+                # non-incremental runner (or None), or a zero-length prompt:
+                # one-shot start at the completing chunk
+                sl["pf_tok"] = int(eng.runner.start(sid, r.item)) if (
+                    eng.runner is not None) else 0
+        eng.chunk_ms += chunk_ms
+        return chunk_ms
+
+    # -- event loop ----------------------------------------------------------
+
+    def wake(self, core: EngineCore, t: float) -> None:
+        eng = self.eng
+        self._now = max(self._now, t)
+        n = len(self.reqs)
+        while self._i < n or self.queue or self.slots:
+            now = self._now
+            while self._i < n and self.reqs[self._i].arrival_ms <= now + 1e-9:
+                r = self.reqs[self._i]
+                self._i += 1
+                if eng.admission is not None and not eng.admission.admit_token_stream(
+                    r, now, eng.profile.vanilla_time(1)
+                ):
+                    resp = GenResponse(rid=r.rid, arrival_ms=r.arrival_ms,
+                                       release_ms=[], exit_sites=[], tokens=[],
+                                       final_tokens=[], worker=eng.wid,
+                                       slo_ms=r.slo_ms, dropped=True)
+                    self.responses.append(resp)
+                    core.emit(now, self.pool, (r.rid, -1))
+                    continue
+                self.queue.append(r)
+            if not self.slots and not self.queue:
+                if self._i >= n:
+                    break
+                core.schedule(self.reqs[self._i].arrival_ms, self)  # idle
+                return
+            # admit queued requests into free slots (FCFS, step boundary)
+            while self.queue and self.free:
+                self._admit_one(self.queue.popleft(), core)
+            if not self.slots:
+                continue
+            self._step(core)
+            core.schedule(self._now, self)
+            return
+
+    def _step(self, core: EngineCore) -> None:
+        """One engine step: chunked prefills co-scheduled with one decode
+        step over the decoding slots (the legacy path is the special case
+        of zero prefilling slots)."""
+        eng = self.eng
+        chunk_ms = self._prefill_chunks(core) if eng.cfg.prefill_chunk > 0 else 0.0
+        sids = [s for s in sorted(self.slots) if self.slots[s]["resp"] is not None]
+        B = len(sids)
+        eng.peak_slots = max(eng.peak_slots, B)
+        eng.slot_history.append(B)
+        ctl = eng.controller
+        act = sorted(ctl.active) if ctl is not None else []
+        if B and eng.runner is not None and ctl is not None:
+            labels, unc, finals = eng.runner.step(sids, act)
+            dec = ctl.observe(labels, unc, finals)
+            ex = np.asarray(dec.exit_sites, np.int64)
+            released = np.asarray(dec.released_labels)
+        else:
+            finals = np.zeros(B, np.int64)
+            ex = np.full(B, -1, np.int64)
+            released = finals
+        kv_now = self._pending_kv
+        step_ms = eng.profile.decode_step_time(ex, act) + chunk_ms
+        start = self._now
+        end = start + kv_now + step_ms
+        self._pending_kv = 0.0
+        eng.kv_ms += kv_now
+        # releases + next-step KV deferral, grouped by exit site so the
+        # catch-up's weight traffic amortizes across this step's exits
+        kv_by_site: Dict[int, int] = {}
+        for j, sid in enumerate(sids):
+            sl = self.slots[sid]
+            site = int(ex[j])
+            if site >= 0:
+                off = release_offset(eng.profile, site, B, act)
+                rel = min(start + kv_now + off, end)
+            else:
+                rel = end
+            resp = sl["resp"]
+            resp.release_ms.append(rel)
+            resp.exit_sites.append(site)
+            resp.tokens.append(int(released[j]))
+            resp.final_tokens.append(int(finals[j]))
+            eng.n_tokens += 1
+            core.emit(rel, self.pool, (sl["req"].rid, len(resp.tokens) - 1))
+            done = len(resp.tokens)
+            if done >= sl["req"].n_tokens:
+                self._finish(sid, core)  # slot reusable at the next step boundary
+            elif eng.admission is not None and eng.admission.note_token(
+                (eng.wid, sid, sl["req"].rid), rel - resp.release_ms[-2], sl["req"].slo_ms
+            ):
+                self._finish(sid, core, shed=True)  # doomed mid-stream: shed
+            elif site >= 0:
+                kv_by_site[site] = kv_by_site.get(site, 0) + 1
+        # completed prefills release their first token at step end
+        for sid in sorted(self.slots):
+            sl = self.slots[sid]
+            if sl["resp"] is not None or sl.get("pf_left", 1) > 0:
+                continue
+            r, tok = sl["req"], sl.pop("pf_tok")
+            del sl["pf_left"], sl["pf_fed"]
+            sl["resp"] = GenResponse(
+                rid=r.rid, arrival_ms=r.arrival_ms, release_ms=[end],
+                exit_sites=[-1], tokens=[tok], final_tokens=[tok],
+                worker=eng.wid, slo_ms=r.slo_ms,
+            )
+            eng.n_tokens += 1
+            core.emit(end, self.pool, (r.rid, 0))
+            if r.n_tokens <= 1:
+                self._finish(sid, core)
+        for site, cnt in kv_by_site.items():
+            self._pending_kv += eng.profile.kv_fill_cost(site, cnt)
+        eng.busy_ms += kv_now + step_ms
+        eng.n_steps += 1
+        self._now = end
+
+    def finalize(self) -> List[GenResponse]:
+        self.eng.makespan_ms = self._now
+        self.responses.sort(key=lambda r: r.rid)
+        return self.responses

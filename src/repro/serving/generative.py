@@ -21,18 +21,32 @@ record per in-flight token. A token that exits at ramp ``s``:
     (grouped by exit site so weight traffic amortizes across the step's
     exits). Exits are never free; a request's LAST token owes nothing.
 
+The event loop itself lives in `repro.serving.engine`
+(``GenerativeAdapter`` on the shared ``EngineCore``); this class is the
+replica facade holding config, profile, runner/controller, and run
+stats. Unification opened two capabilities the bespoke loop could not
+express:
+
+  * **chunked prefill** — ``GenerativeConfig.prefill_chunk > 0`` splits
+    each prompt into chunks co-scheduled with in-flight decode steps
+    (one chunk per prefilling slot per step), so TPT never stalls behind
+    a monolithic prefill; ``DecodeRunner`` prefills the real slot cache
+    incrementally via ``prefill_begin``/``prefill_resume``;
+  * **SLO-aware admission** — an ``AdmissionPolicy``
+    (`repro.serving.policies`) drops hopeless requests at admission and
+    sheds doomed slots mid-stream (reported by ``summarize_generative``).
+
 TTFT = queue wait + prefill; per-token TPT = successive release deltas —
 the split `summarize_generative` reports.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.serving.cluster import release_offset
+from repro.serving.engine import EngineCore, GenerativeAdapter
 from repro.serving.request import GenRequest, GenResponse
 
 
@@ -44,6 +58,10 @@ class GenerativeConfig:
     # token costs a fraction of a memory-bound decode step. Overridable per
     # engine via ``prefill_ms``.
     prefill_frac: float = 0.3
+    # > 0: chunked prefill — split each prompt into chunks of this many
+    # tokens, co-scheduled with in-flight decode steps (0 = legacy serial
+    # prefill at admission, which stalls the whole batch)
+    prefill_chunk: int = 0
 
 
 def offered_decode_qps(profile, *, max_batch_size: int, tokens_per_request: int,
@@ -62,7 +80,8 @@ class GenerativeEngine:
 
     ``runner``/``controller`` may both be None for the vanilla (no-EE)
     baseline: identical admission and batching, every token runs to
-    completion, no ramp overhead, no KV catch-up.
+    completion, no ramp overhead, no KV catch-up. ``admission`` is an
+    optional ``AdmissionPolicy`` for SLO-aware drop/shed behavior.
     """
 
     def __init__(
@@ -74,15 +93,19 @@ class GenerativeEngine:
         *,
         wid: int = 0,
         prefill_ms: Optional[Callable[[int], float]] = None,
+        admission=None,
     ):
         self.profile = profile
         self.cfg = cfg or GenerativeConfig()
         if self.cfg.max_batch_size < 1:
             raise ValueError(f"max_batch_size must be >= 1, got {self.cfg.max_batch_size}")
+        if self.cfg.prefill_chunk < 0:
+            raise ValueError(f"prefill_chunk must be >= 0, got {self.cfg.prefill_chunk}")
         if (runner is None) != (controller is None):
             raise ValueError("runner and controller must be supplied together (or neither)")
         self.runner = runner
         self.controller = controller
+        self.admission = admission
         self.wid = wid
         self.prefill_ms = prefill_ms or (
             lambda plen: plen * self.cfg.prefill_frac * profile.vanilla_time(1)
@@ -91,107 +114,29 @@ class GenerativeEngine:
         self.makespan_ms = 0.0
         self.busy_ms = 0.0
         self.kv_ms = 0.0  # total deferred KV catch-up paid
+        self.chunk_ms = 0.0  # co-scheduled chunked-prefill time
         self.n_steps = 0
         self.n_tokens = 0
+        self.n_chunks = 0  # prefill chunks co-scheduled into steps
+        self.n_shed = 0  # slots shed mid-stream by the admission policy
         self.peak_slots = 0
-        self.slot_history: List[int] = []  # per-step batch sizes
+        self.slot_history: List[int] = []  # per-step decoding batch sizes
+        self.core: Optional[EngineCore] = None  # last run's engine core
 
-    # -- event loop ----------------------------------------------------------
+    # -- event loop (delegated to the unified engine core) -------------------
+
+    def _make_adapter(self, requests: Sequence[GenRequest]) -> GenerativeAdapter:
+        """The engine-core adapter for this replica (shared with
+        ``MixedClusterSimulator``, which co-schedules several replicas on
+        one core)."""
+        return GenerativeAdapter(self, requests)
 
     def run(self, requests: Sequence[GenRequest]) -> List[GenResponse]:
-        reqs = sorted(requests, key=lambda r: (r.arrival_ms, r.rid))
-        queue: deque = deque()
-        slots: Dict[int, dict] = {}  # slot id -> {req, resp}
-        free = list(range(self.cfg.max_batch_size))
-        responses: List[GenResponse] = []
-        now, i, n = 0.0, 0, len(reqs)
-        pending_kv = 0.0
-
-        def finish(sid: int):
-            sl = slots.pop(sid)
-            free.append(sid)
-            free.sort()
-            if self.runner is not None:
-                self.runner.free(sid)
-            responses.append(sl["resp"])
-
-        while i < n or queue or slots:
-            while i < n and reqs[i].arrival_ms <= now + 1e-9:
-                queue.append(reqs[i])
-                i += 1
-            if not slots and not queue:
-                now = max(now, reqs[i].arrival_ms)  # idle: jump to next arrival
-                continue
-            # admit queued requests into free slots (FCFS, step boundary);
-            # their prefills run before this step's decode launch
-            while queue and free:
-                r = queue.popleft()
-                sid = free.pop(0)
-                now += self.prefill_ms(r.prompt_len)
-                tok = self.runner.start(sid, r.item) if self.runner is not None else 0
-                resp = GenResponse(
-                    rid=r.rid, arrival_ms=r.arrival_ms, release_ms=[now],
-                    exit_sites=[-1], tokens=[tok], final_tokens=[tok],
-                    worker=self.wid, slo_ms=r.slo_ms,
-                )
-                slots[sid] = {"req": r, "resp": resp}
-                self.n_tokens += 1
-                if r.n_tokens <= 1:
-                    finish(sid)
-            if not slots:
-                continue
-            # one decode step over the current slot set
-            sids = sorted(slots)
-            B = len(sids)
-            self.peak_slots = max(self.peak_slots, B)
-            self.slot_history.append(B)
-            ctl = self.controller
-            act = sorted(ctl.active) if ctl is not None else []
-            if self.runner is not None and ctl is not None:
-                labels, unc, finals = self.runner.step(sids, act)
-                dec = ctl.observe(labels, unc, finals)
-                ex = np.asarray(dec.exit_sites, np.int64)
-                released = np.asarray(dec.released_labels)
-            else:
-                finals = np.zeros(B, np.int64)
-                ex = np.full(B, -1, np.int64)
-                released = finals
-            kv_now = pending_kv
-            step_ms = self.profile.decode_step_time(ex, act)
-            start = now
-            end = start + kv_now + step_ms
-            pending_kv = 0.0
-            self.kv_ms += kv_now
-            # releases + next-step KV deferral, grouped by exit site so the
-            # catch-up's weight traffic amortizes across this step's exits
-            kv_by_site: Dict[int, int] = {}
-            for j, sid in enumerate(sids):
-                sl = slots[sid]
-                site = int(ex[j])
-                if site >= 0:
-                    off = release_offset(self.profile, site, B, act)
-                    rel = min(start + kv_now + off, end)
-                else:
-                    rel = end
-                resp = sl["resp"]
-                resp.release_ms.append(rel)
-                resp.exit_sites.append(site)
-                resp.tokens.append(int(released[j]))
-                resp.final_tokens.append(int(finals[j]))
-                self.n_tokens += 1
-                done = len(resp.tokens)
-                if done >= sl["req"].n_tokens:
-                    finish(sid)  # slot reusable at the next step boundary
-                elif site >= 0:
-                    kv_by_site[site] = kv_by_site.get(site, 0) + 1
-            for site, cnt in kv_by_site.items():
-                pending_kv += self.profile.kv_fill_cost(site, cnt)
-            self.busy_ms += kv_now + step_ms
-            self.n_steps += 1
-            now = end
-        self.makespan_ms = now
-        responses.sort(key=lambda r: r.rid)
-        return responses
+        core = EngineCore()
+        adapter = core.add(self._make_adapter(requests))
+        core.run()
+        self.core = core
+        return adapter.finalize()
 
     def stats(self) -> Dict[str, float]:
         out = {
@@ -202,6 +147,12 @@ class GenerativeEngine:
             "peak_slots": float(self.peak_slots),
             "mean_step_batch": float(np.mean(self.slot_history)) if self.slot_history else 0.0,
         }
+        if self.cfg.prefill_chunk > 0:
+            out["prefill_chunks"] = float(self.n_chunks)
+            out["prefill_chunk_ms"] = self.chunk_ms
+        if self.admission is not None:
+            out["shed"] = float(self.n_shed)
+            out.update({f"admission_{k}": v for k, v in self.admission.stats().items()})
         if self.controller is not None:
             out["ramp_overhead_ms"] = self.controller.total_ramp_overhead(1)
             out["active_ramps"] = float(len(self.controller.active))

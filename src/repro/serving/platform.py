@@ -14,7 +14,8 @@ time offset (§3). Batch execution time = vanilla + active ramp overheads
 (the ramp-budget guarantee is directly visible in the tail latency).
 
 Batch formation lives in `repro.serving.policies`; the event loop lives
-in `repro.serving.cluster`. ``ServingSimulator`` is the 1-worker special
+in `repro.serving.engine` (the unified event-driven core shared with the
+generative decode adapter). ``ServingSimulator`` is the 1-worker special
 case of ``ClusterSimulator`` (the paper's single-GPU setup) and keeps
 the original call signature.
 """
@@ -38,11 +39,14 @@ class ServingSimulator:
         platform: PlatformConfig,
         runner=None,
         controller=None,
+        *,
+        admission=None,
     ):
         self.profile = profile
         self.pf = platform
         self.runner = runner
         self.controller = controller
+        self.admission = admission  # optional SLO-aware AdmissionPolicy
 
     def exec_time(self, bs: int) -> float:
         t = self.profile.vanilla_time(bs)
@@ -58,7 +62,7 @@ class ServingSimulator:
     def run(self, requests: List[Request]) -> List[Response]:
         sim = ClusterSimulator(
             self.profile,
-            ClusterConfig(n_workers=1, platform=self.pf),
+            ClusterConfig(n_workers=1, platform=self.pf, admission=self.admission),
             runner=self.runner,
             controllers=[self.controller] if self.controller is not None else None,
         )

@@ -98,6 +98,97 @@ class ClockworkPolicy(BatchPolicy):
         return queue[:1]  # serve anyway (degraded)
 
 
+@dataclasses.dataclass
+class AdmissionConfig:
+    """Knobs for SLO-aware admission (shared by both workload adapters)."""
+
+    slack: float = 1.0  # deadline multiplier before a request is hopeless
+    shed_after: int = 3  # consecutive SLO-violating tokens before a shed
+    drop_on_admit: bool = True  # shed hopeless requests at admission
+    shed_mid_stream: bool = True  # shed doomed generative slots mid-run
+
+
+class AdmissionPolicy:
+    """SLO-aware admission shared by the classification and generative
+    adapters of the unified engine (`repro.serving.engine`).
+
+    The paper's platforms only shed *after* queueing (clockwork's
+    drop-on-miss); InferLine/SuperServe-style serving sheds at admission,
+    before a hopeless request wastes queue or slot capacity:
+
+      * classification (request granularity): a request whose earliest
+        estimated completion on its routed worker — residual busy time +
+        backlog, the same estimate ``slo_aware`` dispatch ranks by —
+        already misses ``arrival + slack * slo`` is dropped at arrival;
+      * generative admission (stream granularity): a request whose
+        per-token SLO is tighter than even an unbatched decode step can
+        ever meet is dropped instead of occupying a slot;
+      * generative mid-stream (token granularity): a live slot whose
+        observed per-token latency has violated its SLO for
+        ``shed_after`` consecutive tokens is shed at the next step
+        boundary, freeing the slot for admissible work (the partial
+        response is marked ``shed`` and reported by
+        ``summarize_generative``).
+    """
+
+    def __init__(self, cfg: Optional[AdmissionConfig] = None):
+        self.cfg = cfg or AdmissionConfig()
+        if self.cfg.shed_after < 1:
+            raise ValueError(f"shed_after must be >= 1, got {self.cfg.shed_after}")
+        self.n_admit_drops = 0
+        self.n_sheds = 0
+        self._viol: dict = {}  # stream key -> consecutive SLO violations
+
+    def admit_request(self, req, now: float, eta_ms: float) -> bool:
+        """Classification: False = drop (projected completion misses the
+        deadline even on the best-estimate worker)."""
+        if not self.cfg.drop_on_admit or not np.isfinite(req.slo_ms):
+            return True
+        if now + eta_ms <= req.arrival_ms + self.cfg.slack * req.slo_ms + 1e-9:
+            return True
+        self.n_admit_drops += 1
+        return False
+
+    def admit_token_stream(self, req, now: float, best_step_ms: float) -> bool:
+        """Generative: False = drop (the per-token SLO is tighter than the
+        best achievable step time — the stream is doomed before it starts)."""
+        if not self.cfg.drop_on_admit or not np.isfinite(req.slo_ms):
+            return True
+        if best_step_ms <= self.cfg.slack * req.slo_ms + 1e-9:
+            return True
+        self.n_admit_drops += 1
+        return False
+
+    def note_token(self, key, tpt_ms: float, slo_ms: float) -> bool:
+        """Generative mid-stream: record one decode token's TPT sample for
+        stream ``key``; True = shed the slot now (``shed_after``
+        consecutive violations)."""
+        if not self.cfg.shed_mid_stream or not np.isfinite(slo_ms):
+            return False
+        if tpt_ms <= self.cfg.slack * slo_ms + 1e-9:
+            self._viol.pop(key, None)
+            return False
+        n = self._viol.get(key, 0) + 1
+        if n >= self.cfg.shed_after:
+            self._viol.pop(key, None)
+            self.n_sheds += 1
+            return True
+        self._viol[key] = n
+        return False
+
+    def forget(self, key) -> None:
+        """Drop stream ``key``'s violation streak. The engine calls this
+        when a stream ends (finish or shed): ``(wid, slot, rid)`` keys
+        repeat across runs and slot reuse, so a streak left behind by a
+        stream that ended mid-streak must not be inherited by the next
+        stream with the same key."""
+        self._viol.pop(key, None)
+
+    def stats(self) -> dict:
+        return {"admit_drops": float(self.n_admit_drops),
+                "sheds": float(self.n_sheds)}
+
+
 POLICIES = {
     TFServePolicy.name: TFServePolicy,
     ClockworkPolicy.name: ClockworkPolicy,

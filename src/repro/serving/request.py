@@ -56,6 +56,8 @@ class GenResponse:
     final_tokens: List[int]  # original-model greedy tokens
     worker: int = 0
     slo_ms: float = float("nan")
+    dropped: bool = False  # shed at admission (SLO-aware admission policy)
+    shed: bool = False  # shed mid-stream (doomed slot; partial tokens kept)
 
     @property
     def ttft_ms(self) -> float:

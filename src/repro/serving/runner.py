@@ -360,6 +360,8 @@ class DecodeRunner:
         self._tok = np.zeros(0, np.int64)
         self._axes: Optional[Tuple[int, ...]] = None  # per-leaf batch axis
         self._pf = None
+        self._pf_paged = {}  # paged prefill programs, keyed by token count
+        self._pf_progress = {}  # slot -> item for in-flight chunked prefills
         self._dec = None
         self._dec0 = None  # no-ramp (vanilla) decode variant
         # -- paged-KV state (decode_attn='paged'|'paged-kernel'|'paged-interpret')
@@ -541,14 +543,17 @@ class DecodeRunner:
             self._dec0 = dec0
         return self._dec0
 
-    def _prefill_fn_paged(self):
-        """Prefill one prompt contiguously AND scatter its KV into the
-        slot's claimed pool blocks — one dispatch per admit (``blk_ids``
-        is a traced array: no recompile per block assignment)."""
-        if self._pf is None:
+    def _prefill_fn_paged(self, n_tokens: Optional[int] = None):
+        """Prefill one prompt (or its first ``n_tokens`` — a chunked-prefill
+        first chunk) contiguously AND scatter its KV into the slot's claimed
+        pool blocks — one dispatch per admit (``blk_ids`` is a traced
+        array: no recompile per block assignment). Compiled per distinct
+        token count (full prompts and one chunk size in practice)."""
+        n_tokens = self.prompts.shape[1] if n_tokens is None else n_tokens
+        if n_tokens not in self._pf_paged:
             m, cache_len = self.model, self._cache_len
             bs = self._bs_blk
-            nb_pf = -(-self.prompts.shape[1] // bs)
+            nb_pf = -(-n_tokens // bs)
             axes = self._pool_axes
 
             def scatter(pool, cont, ax, blk_ids):
@@ -581,8 +586,8 @@ class DecodeRunner:
                 lab = outs["final"]["label"]
                 return pools, (lab[:, 0] if lab.ndim == 2 else lab)
 
-            self._pf = pf
-        return self._pf
+            self._pf_paged[n_tokens] = pf
+        return self._pf_paged[n_tokens]
 
     def _decode_fn_paged(self):
         if self._dec is None:
@@ -642,7 +647,87 @@ class DecodeRunner:
         self._live.add(slot)
         self._pos[slot] = self.prompts.shape[1]
         self._tok[slot] = tok
+        self._pf_progress.pop(slot, None)  # one-shot start supersedes chunks
         return tok
+
+    # -- chunked prefill (resumable against the same slot cache) ------------
+
+    def prefill_begin(self, slot: int, item: int, n_tokens: int) -> Optional[int]:
+        """First chunk of a chunked prefill: jitted prefill of the prompt's
+        first ``n_tokens`` into the slot row (contiguous) or its freshly
+        claimed pool blocks (paged). Returns the first generated token when
+        ``n_tokens`` already covers the whole prompt (== ``start``), else
+        None — resume with ``prefill_resume``; the slot cache is valid
+        mid-prompt, so decode steps for OTHER slots interleave freely."""
+        S = self.prompts.shape[1]
+        n = min(int(n_tokens), S)
+        if n >= S:
+            return self.start(slot, item)
+        if n < 1:
+            raise ValueError(f"prefill chunk must be >= 1 token, got {n_tokens}")
+        self._ensure_rows(slot + 1)
+        toks = jnp.asarray(self.prompts[item][None, :n])
+        if self.paged:
+            if slot in self._live:  # engine frees before reuse; be defensive
+                self._alloc.free_slot(slot)
+            blks = self._alloc.alloc(slot, -(-n // self._bs_blk))
+            self._cache, _ = self._prefill_fn_paged(n)(
+                self.params, self._cache, toks, jnp.asarray(blks, jnp.int32)
+            )
+        else:
+            self._cache, _ = self._prefill_fn()(
+                self.params, self._cache, toks, jnp.int32(slot)
+            )
+        self._live.add(slot)
+        self._pos[slot] = n
+        self._pf_progress[slot] = item
+        return None
+
+    def prefill_resume(self, slot: int, n_tokens: int) -> Optional[int]:
+        """Resume a chunked prefill: feed the next ``n_tokens`` prompt
+        tokens through the no-ramp decode path, one token per dispatch —
+        each token scatters its KV at the slot's position exactly as a
+        decode step would (appending pool blocks as they fill on the paged
+        layout), so the chunk is genuinely incremental against the shared
+        slot cache. Returns the first generated token (the greedy
+        continuation of the last prompt token) once the prompt is
+        exhausted, else None. A production kernel would run the chunk as
+        one (n_tokens)-wide dispatch; the per-token loop is the
+        oracle-grade equivalent at the same cache layout."""
+        item = self._pf_progress[slot]
+        S = self.prompts.shape[1]
+        lab = None
+        end = min(int(self._pos[slot]) + int(n_tokens), S)
+        for p in range(int(self._pos[slot]), end):
+            lab = self._feed_prompt_token(slot, int(self.prompts[item][p]))
+        if int(self._pos[slot]) >= S:
+            del self._pf_progress[slot]
+            self._tok[slot] = int(lab)
+            return int(lab)
+        return None
+
+    def _feed_prompt_token(self, slot: int, tok: int) -> int:
+        """One resumed-prefill token through the (no-ramp) decode program:
+        B=1 gather/scatter on the batched cache, per-row position — the
+        same compiled path a decode step uses, so the cache layout cannot
+        diverge between chunked and one-shot prefill."""
+        rows = np.asarray([slot], np.int64)
+        toks = jnp.asarray([[tok]], jnp.int32)
+        pos = jnp.asarray(self._pos[rows], jnp.int32)
+        if self.paged:
+            while int(self._alloc.owned[slot]) * self._bs_blk <= int(self._pos[slot]):
+                self._alloc.alloc(slot, 1)
+            tables = jnp.asarray(self._alloc.table[rows], jnp.int32)
+            self._cache, fl = self._decode_fn_paged_noramp()(
+                self.params, self._cache, toks, pos, tables
+            )
+        else:
+            self._cache, fl = self._decode_fn_noramp()(
+                self.params, self._cache, toks, pos, jnp.asarray(rows, jnp.int32)
+            )
+        self.dispatches += 1
+        self._pos[slot] += 1
+        return int(np.asarray(fl).reshape(-1)[0])
 
     def step(self, slots: Sequence[int], active: Sequence[int]):
         """ONE decode step — one jitted dispatch — for every slot in
@@ -652,6 +737,8 @@ class DecodeRunner:
         for s in slots:
             if s not in self._live:
                 raise KeyError(f"slot {s} is not live (freed or never started)")
+            if s in self._pf_progress:
+                raise KeyError(f"slot {s} is mid-prefill (resume its chunks first)")
         B = len(slots)
         if B == 0:  # nothing in flight: no dispatch (mirrors the loop runner)
             k = len(sorted(active)[: self.max_slots])
@@ -721,6 +808,7 @@ class DecodeRunner:
         if self.paged and self._alloc is not None and slot in self._live:
             self._alloc.free_slot(slot)
         self._live.discard(slot)
+        self._pf_progress.pop(slot, None)
 
 
 class LoopDecodeRunner:

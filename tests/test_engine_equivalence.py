@@ -1,0 +1,331 @@
+"""The unified engine facades must be EXACTLY the pre-refactor loops.
+
+PR 5 rebuilt ``ServingSimulator``/``ClusterSimulator``/
+``MixedClusterSimulator``/``GenerativeEngine`` as thin facades over the
+event-driven core in `repro.serving.engine`. The pre-refactor loop
+bodies are frozen verbatim in `repro.serving.reference` (the PR 3/4
+oracle pattern: ``LoopDecodeRunner``, ``tune_thresholds_reference``),
+and this suite drives seeded randomized arrival schedules through BOTH
+entry points, comparing full response records bit-for-bit.
+
+Also pins the one intentional behavior the refactor ADDS: all pools of a
+``MixedClusterSimulator`` now run on ONE event heap and ONE monotone
+clock, so completions interleave in true global time order
+(``EngineCore.completions``) — the property the old independent-pool
+frontend could not even observe. And the metrics-dedup satellite: the
+shared percentile/span/rate helpers must reproduce the historical
+summary outputs exactly on a recorded stream.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import ApparateController, ControllerConfig, build_profile
+from repro.serving import (
+    ClusterConfig,
+    ClusterSimulator,
+    GenerativeConfig,
+    GenerativeEngine,
+    GenResponse,
+    MixedClusterSimulator,
+    PlatformConfig,
+    ReferenceClusterSimulator,
+    ReferenceGenerativeEngine,
+    ReferenceMixedClusterSimulator,
+    Response,
+    ServingSimulator,
+    SyntheticDecodeRunner,
+    SyntheticRunner,
+    make_gen_requests,
+    make_requests,
+    maf_trace,
+    offered_decode_qps,
+    summarize,
+    summarize_cluster,
+    summarize_generative,
+)
+
+PROF = build_profile(get_config("gpt2-medium"), mode="decode", chips=1)
+GPROF = build_profile(
+    get_config("gpt2-medium").replace(n_classes=0, ramp_style="tied"),
+    mode="decode", chips=1, charge_kv=True,
+)
+NS = len(PROF.sites)
+NGS = len(GPROF.sites)
+
+
+def _cls_records(responses):
+    return [
+        (r.rid, r.release_ms, r.label, r.exit_site, r.latency_ms, r.batch_size,
+         r.dropped, r.worker, r.slo_ms)
+        for r in responses
+    ]
+
+
+def _gen_records(responses):
+    return [
+        (r.rid, r.arrival_ms, tuple(r.release_ms), tuple(r.exit_sites),
+         tuple(r.tokens), tuple(r.final_tokens), r.worker)
+        for r in responses
+    ]
+
+
+def _rand_cls_requests(rng, n):
+    mbs = 8
+    cap = mbs * 1000.0 / PROF.vanilla_time(mbs)
+    arr = maf_trace(n, mean_qps=float(rng.uniform(0.3, 2.5)) * cap,
+                    seed=int(rng.integers(1 << 30)))
+    return make_requests(arr, slo_ms=float(rng.uniform(1.2, 4.0)) * PROF.vanilla_time(1))
+
+
+# -- classification facade fuzz ----------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_cluster_facade_bit_identical_fuzz(seed):
+    """Seeded random arrival schedules x random platform/cluster configs:
+    the facade's full response records (order included) match the frozen
+    pre-refactor loop bit for bit, as do makespan and worker stats."""
+    rng = np.random.default_rng(1000 + seed)
+    reqs = _rand_cls_requests(rng, int(rng.integers(60, 260)))
+    policy = ["tfserve", "clockwork"][int(rng.integers(2))]
+    pf = PlatformConfig(
+        policy=policy,
+        max_batch_size=int(rng.integers(2, 17)),
+        batch_timeout_ms=float(rng.uniform(0.3, 3.0)) * PROF.vanilla_time(1),
+        drop_on_slo_miss=bool(rng.integers(2)) and policy == "clockwork",
+    )
+    nw = int(rng.integers(1, 5))
+    dispatch = ["round_robin", "jsq", "slo_aware"][int(rng.integers(3))]
+    cc = ClusterConfig(n_workers=nw, dispatch=dispatch, platform=pf)
+    with_ee = bool(rng.integers(2))
+    kw_new, kw_ref = {}, {}
+    if with_ee:
+        runner = SyntheticRunner(NS, exit_site=NS // 3, easy_frac=0.8)
+        kw_new = dict(runner=runner, controllers=[
+            ApparateController(NS, PROF, ControllerConfig(max_slots=4)) for _ in range(nw)])
+        kw_ref = dict(runner=runner, controllers=[
+            ApparateController(NS, PROF, ControllerConfig(max_slots=4)) for _ in range(nw)])
+    sim = ClusterSimulator(PROF, cc, **kw_new)
+    ref = ReferenceClusterSimulator(PROF, cc, **kw_ref)
+    a, b = sim.run(reqs), ref.run(reqs)
+    assert _cls_records(a) == _cls_records(b)
+    assert sim.makespan_ms == ref.makespan_ms
+    assert sim.worker_stats() == ref.worker_stats()
+
+
+def test_serving_simulator_facade_matches_reference():
+    """The 1-worker facade chain (ServingSimulator -> ClusterSimulator ->
+    engine core) equals the reference loop byte for byte."""
+    rng = np.random.default_rng(7)
+    reqs = _rand_cls_requests(rng, 150)
+    pf = PlatformConfig(policy="tfserve", max_batch_size=8,
+                        batch_timeout_ms=PROF.vanilla_time(1))
+    a = ServingSimulator(PROF, pf).run(reqs)
+    b = ReferenceClusterSimulator(PROF, ClusterConfig(n_workers=1, platform=pf)).run(reqs)
+    assert _cls_records(a) == _cls_records(b)
+
+
+# -- generative facade fuzz ---------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_generative_facade_bit_identical_fuzz(seed):
+    """Seeded random decode schedules (jittered token counts, random load
+    and slot counts, with/without the EE runner+controller): facade and
+    frozen loop produce identical responses AND identical engine stats."""
+    rng = np.random.default_rng(2000 + seed)
+    mbs = int(rng.integers(2, 9))
+    tokens = int(rng.integers(2, 24))
+    n = int(rng.integers(10, 50))
+    qps = offered_decode_qps(GPROF, max_batch_size=mbs, tokens_per_request=tokens,
+                             load=float(rng.uniform(0.3, 2.0)))
+    arr = maf_trace(n, mean_qps=qps, seed=int(rng.integers(1 << 30)))
+    nt = rng.integers(1, 2 * tokens + 1, n)
+    reqs = make_gen_requests(arr, n_tokens=nt, prompt_len=int(rng.integers(8, 128)),
+                             slo_ms=3 * GPROF.vanilla_time(1))
+    with_ee = bool(rng.integers(2))
+    kw_new, kw_ref = {}, {}
+    if with_ee:
+        site = int(rng.integers(NGS))
+        kw_new = dict(runner=SyntheticDecodeRunner(NGS, exit_site=site),
+                      controller=ApparateController(NGS, GPROF, ControllerConfig(max_slots=4)))
+        kw_ref = dict(runner=SyntheticDecodeRunner(NGS, exit_site=site),
+                      controller=ApparateController(NGS, GPROF, ControllerConfig(max_slots=4)))
+    eng = GenerativeEngine(GPROF, GenerativeConfig(max_batch_size=mbs), **kw_new)
+    ref = ReferenceGenerativeEngine(GPROF, GenerativeConfig(max_batch_size=mbs), **kw_ref)
+    a, b = eng.run(reqs), ref.run(reqs)
+    assert _gen_records(a) == _gen_records(b)
+    assert (eng.makespan_ms, eng.busy_ms, eng.kv_ms, eng.n_steps, eng.n_tokens,
+            eng.peak_slots, eng.slot_history) == (
+        ref.makespan_ms, ref.busy_ms, ref.kv_ms, ref.n_steps, ref.n_tokens,
+        ref.peak_slots, ref.slot_history)
+
+
+def test_generative_facade_empty_run():
+    eng = GenerativeEngine(GPROF, GenerativeConfig(max_batch_size=4))
+    ref = ReferenceGenerativeEngine(GPROF, GenerativeConfig(max_batch_size=4))
+    assert eng.run([]) == ref.run([]) == []
+    assert eng.makespan_ms == ref.makespan_ms == 0.0
+
+
+# -- mixed cluster: facade equivalence + the single-clock regression ---------
+
+
+def _mixed_pair(seed):
+    rng = np.random.default_rng(seed)
+    pf = PlatformConfig(policy="tfserve", max_batch_size=8,
+                        batch_timeout_ms=PROF.vanilla_time(1))
+
+    def build(sim_cls, eng_cls):
+        cls_sim = sim_cls(
+            PROF, ClusterConfig(n_workers=2, dispatch="jsq", platform=pf),
+            runner=SyntheticRunner(NS, exit_site=NS // 3),
+            controllers=[ApparateController(NS, PROF, ControllerConfig(max_slots=4))
+                         for _ in range(2)],
+        )
+        gens = [
+            eng_cls(GPROF, GenerativeConfig(max_batch_size=4),
+                    SyntheticDecodeRunner(NGS, exit_site=NGS // 3),
+                    ApparateController(NGS, GPROF, ControllerConfig(max_slots=4)))
+            for _ in range(2)
+        ]
+        return cls_sim, gens
+
+    cls_reqs = _rand_cls_requests(rng, 120)
+    qps = offered_decode_qps(GPROF, max_batch_size=4, tokens_per_request=10, load=1.4)
+    gen_reqs = make_gen_requests(
+        maf_trace(24, mean_qps=qps, seed=seed), n_tokens=10, prompt_len=32,
+        slo_ms=3 * GPROF.vanilla_time(1),
+    )
+    return build, cls_reqs, gen_reqs
+
+
+@pytest.mark.parametrize("seed", [3, 11])
+def test_mixed_cluster_facade_bit_identical(seed):
+    """Sharing one engine core across pools must not change any pool's
+    results: responses, makespans, and worker stats all match the
+    independent-pool reference exactly."""
+    build, cls_reqs, gen_reqs = _mixed_pair(seed)
+    cls_a, gens_a = build(ClusterSimulator, GenerativeEngine)
+    cls_b, gens_b = build(ReferenceClusterSimulator, ReferenceGenerativeEngine)
+    mixed = MixedClusterSimulator(cls_a, gens_a)
+    ref = ReferenceMixedClusterSimulator(cls_b, gens_b)
+    ca, ga = mixed.run(cls_reqs, gen_reqs)
+    cb, gb = ref.run(cls_reqs, gen_reqs)
+    assert _cls_records(ca) == _cls_records(cb)
+    assert _gen_records(ga) == _gen_records(gb)
+    assert mixed.makespan_ms == ref.makespan_ms
+    assert cls_a.makespan_ms == cls_b.makespan_ms
+    for ea, eb in zip(gens_a, gens_b):
+        assert (ea.makespan_ms, ea.busy_ms, ea.n_steps) == (eb.makespan_ms, eb.busy_ms, eb.n_steps)
+
+
+def test_mixed_cluster_completions_globally_time_ordered():
+    """The PR's single-clock regression: the pre-refactor frontend ran its
+    pools on independent clocks, so a global completion order between
+    pools was untestable. On the unified core, every pool's completions
+    ride ONE event heap — the completion log must be non-decreasing in
+    time and genuinely interleave both workload kinds."""
+    build, cls_reqs, gen_reqs = _mixed_pair(5)
+    cls_sim, gens = build(ClusterSimulator, GenerativeEngine)
+    mixed = MixedClusterSimulator(cls_sim, gens)
+    mixed.run(cls_reqs, gen_reqs)
+    comp = mixed.core.completions
+    assert len(comp) >= len(cls_reqs) + sum(q.n_tokens for q in gen_reqs) - 1
+    times = [t for t, _, _ in comp]
+    assert all(b >= a - 1e-12 for a, b in zip(times, times[1:])), \
+        "completion log must be globally time-ordered"
+    kinds = [pool for _, pool, _ in comp]
+    assert {"classification", "generative"} <= set(kinds)
+    # genuine interleaving: neither pool's completions form one contiguous
+    # block (the old independent-pool simulation could only produce blocks)
+    first_gen = kinds.index("generative")
+    last_gen = len(kinds) - 1 - kinds[::-1].index("generative")
+    assert any(k == "classification" for k in kinds[first_gen:last_gen]), \
+        "classification completions must interleave inside the generative span"
+
+
+# -- metrics dedup: shared helpers pin the historical outputs ----------------
+
+
+def _recorded_cls_stream():
+    """A small fixed classification stream exercising drops, multiple
+    workers, exits and full-model releases."""
+    return [
+        Response(0, 12.5, 3, 1, 10.0, 4, False, worker=0, slo_ms=20.0),
+        Response(1, 13.0, 2, -1, 9.5, 4, False, worker=1, slo_ms=20.0),
+        Response(2, 14.0, 1, 0, 12.0, 4, False, worker=0, slo_ms=20.0),
+        Response(3, 16.0, -1, -1, 13.0, 0, True, worker=1, slo_ms=20.0),
+        Response(4, 30.0, 5, 2, 25.0, 2, False, worker=1, slo_ms=20.0),
+        Response(5, 31.0, 0, -1, 8.0, 2, False, worker=0, slo_ms=20.0),
+    ]
+
+
+def test_summarize_pinned_on_recorded_stream():
+    """The shared percentile/span/rate helpers must reproduce the exact
+    pre-dedup numbers on a recorded stream (values computed with the
+    PR 4 implementation and pinned here)."""
+    out = summarize(_recorded_cls_stream())
+    assert out["n"] == 6.0 and out["dropped"] == 1.0
+    np.testing.assert_allclose(out["p25_ms"], 9.5)
+    np.testing.assert_allclose(out["p50_ms"], 10.0)
+    np.testing.assert_allclose(out["p95_ms"], 22.4)
+    np.testing.assert_allclose(out["p99_ms"], 24.48)
+    np.testing.assert_allclose(out["mean_batch"], 3.2)
+    np.testing.assert_allclose(out["exit_rate"], 0.6)
+    np.testing.assert_allclose(out["throughput_qps"], 5 / 0.031)
+    np.testing.assert_allclose(out["goodput_qps"], 4 / 0.031)
+    np.testing.assert_allclose(out["slo_miss_rate"], 1 - 4 / 6)
+    # empty stream: the historical NaN sentinels survive the dedup
+    empty = summarize([])
+    assert empty["n"] == 0.0 and np.isnan(empty["p50_ms"]) and np.isnan(empty["mean_batch"])
+    assert empty["exit_rate"] == 0.0
+
+
+def test_summarize_cluster_consistent_with_summarize():
+    """The cluster aggregate IS `summarize` over the shared horizon —
+    the dedup must keep them identical key for key."""
+    stream = _recorded_cls_stream()
+    rep = summarize_cluster(stream, n_workers=2)
+    flat = summarize(stream, horizon_ms=31.0)
+    for k, v in flat.items():
+        np.testing.assert_allclose(rep["aggregate"][k], v, err_msg=k)
+    assert rep["aggregate"]["n_workers"] == 2.0
+    assert set(rep["workers"]) == {0, 1}
+    # per-worker rates over the shared horizon sum to the aggregate
+    per = sum(w["throughput_qps"] for w in rep["workers"].values())
+    np.testing.assert_allclose(per, flat["throughput_qps"])
+
+
+def test_summarize_generative_pinned_on_recorded_stream():
+    """Generative summary on a recorded token stream: pinned values, plus
+    the new dropped/shed accounting (dropped excluded from token metrics,
+    sheds keep their partial tokens)."""
+    resp = [
+        GenResponse(rid=0, arrival_ms=0.0, release_ms=[2.0, 4.0, 8.0],
+                    exit_sites=[-1, 0, -1], tokens=[1, 2, 3],
+                    final_tokens=[1, 2, 9], slo_ms=5.0),
+        GenResponse(rid=1, arrival_ms=1.0, release_ms=[3.0, 6.0],
+                    exit_sites=[-1, 1], tokens=[4, 5],
+                    final_tokens=[4, 5], slo_ms=5.0, shed=True),
+        GenResponse(rid=2, arrival_ms=2.0, release_ms=[], exit_sites=[],
+                    tokens=[], final_tokens=[], slo_ms=5.0, dropped=True),
+    ]
+    out = summarize_generative(resp)
+    assert out["n"] == 3.0 and out["tokens"] == 5.0
+    assert out["dropped"] == 1.0 and out["shed"] == 1.0
+    np.testing.assert_allclose(out["ttft_p50_ms"], 2.0)
+    np.testing.assert_allclose(out["tpt_p50_ms"], 3.0)
+    np.testing.assert_allclose(out["tpt_p95_ms"], 3.9)
+    np.testing.assert_allclose(out["tpt_mean_ms"], 3.0)
+    np.testing.assert_allclose(out["exit_rate"], 2 / 3)
+    np.testing.assert_allclose(out["agreement"], 2 / 3)
+    np.testing.assert_allclose(out["tokens_per_sec"], 5 / 0.008)
+    np.testing.assert_allclose(out["tpt_slo_miss_rate"], 0.0)
+    # fully-dropped stream: zeroed key set, not NaN
+    all_drop = [GenResponse(rid=0, arrival_ms=0.0, release_ms=[], exit_sites=[],
+                           tokens=[], final_tokens=[], slo_ms=5.0, dropped=True)]
+    z = summarize_generative(all_drop)
+    assert z["n"] == 1.0 and z["dropped"] == 1.0 and z["tpt_p50_ms"] == 0.0
+    assert all(np.isfinite(v) for v in z.values())
