@@ -668,6 +668,8 @@ def bench_kernels():
     emit("kernel_ssd_ref", us, f"interp_max_err={err:.2e}")
 
 
+from benchmarks.bench_prefix_cache import bench_prefix_cache  # noqa: E402
+
 ALL = [
     bench_fig3_knobs,
     bench_fig5_optimal_ee,
@@ -687,6 +689,7 @@ ALL = [
     bench_tune_wall,
     bench_paged_kv,
     bench_chunked_prefill,
+    bench_prefix_cache,
     bench_kernels,
 ]
 

@@ -130,7 +130,7 @@ def serve(domain: str, n: int, *, policy="tfserve", budget=0.02, acc=0.99,
 def serve_generative(n=48, *, decode_tokens=16, budget=0.02, acc=0.99, load=0.5,
                      seed=2, slots=4, layers=6, kv_block_size=0, kv_blocks=None,
                      prefill_chunk=0, admission=False, admission_slack=1.0,
-                     verbose=True):
+                     prefix_cache=False, preempt="none", verbose=True):
     """End-to-end generative decode serving on a trained tiny LM: vanilla
     (no-EE) vs Apparate per-token exits, KV catch-up charged, at the same
     accuracy constraint. The latency profile uses the full qwen2-1.5b
@@ -146,7 +146,18 @@ def serve_generative(n=48, *, decode_tokens=16, budget=0.02, acc=0.99, load=0.5,
     co-scheduled with in-flight decode steps (the unified engine's
     chunked-prefill path; ``DecodeRunner`` prefills the slot cache
     incrementally). ``admission`` enables the SLO-aware admission policy
-    (drop hopeless streams at admission, shed doomed slots mid-run)."""
+    (drop hopeless streams at admission, shed doomed slots mid-run).
+
+    ``prefix_cache`` (paged only) shares cached prompt-prefix blocks
+    across slots via the refcounted allocator — repeated prompts skip
+    their prefill entirely. ``preempt`` picks the pool-exhaustion
+    reaction: 'swap' moves a victim's blocks to a host buffer and
+    readmits it later; 'shed' discards the victim; 'none' propagates
+    ``PoolExhausted`` (legacy)."""
+    if prefix_cache and not kv_block_size:
+        raise ValueError("--prefix-cache requires --kv-block-size > 0 (paged KV)")
+    if preempt != "none" and not kv_block_size:
+        raise ValueError("--preempt requires --kv-block-size > 0 (paged KV)")
     # decode_attn='ref' routes single-token attention through the
     # flash-decode wrapper (kernels/decode_attention) — the jnp oracle on
     # CPU; 'kernel' is the Pallas path on real hardware. 'paged' is the
@@ -183,7 +194,8 @@ def serve_generative(n=48, *, decode_tokens=16, budget=0.02, acc=0.99, load=0.5,
     arr = maf_trace(n, mean_qps=qps, seed=seed)
     reqs = make_gen_requests(arr, n_tokens=decode_tokens, prompt_len=seq_len,
                              slo_ms=3 * prof.vanilla_time(1))
-    gcfg = GenerativeConfig(max_batch_size=mbs, prefill_chunk=prefill_chunk)
+    gcfg = GenerativeConfig(max_batch_size=mbs, prefill_chunk=prefill_chunk,
+                            preempt=preempt)
 
     def adm():
         return (AdmissionPolicy(AdmissionConfig(slack=admission_slack))
@@ -195,7 +207,8 @@ def serve_generative(n=48, *, decode_tokens=16, budget=0.02, acc=0.99, load=0.5,
         max_slots=slots, ramp_budget_frac=budget, acc_constraint=acc))
     rkw = {}
     if kv_block_size:
-        rkw = dict(kv_block_size=kv_block_size, kv_blocks=kv_blocks)
+        rkw = dict(kv_block_size=kv_block_size, kv_blocks=kv_blocks,
+                   prefix_cache=prefix_cache)
     runner = DecodeRunner(model, state["params"], stream.data[:, :seq_len],
                           max_new_tokens=decode_tokens + 2, max_slots=slots,
                           n_slots=mbs, **rkw)
@@ -216,6 +229,8 @@ def serve_generative(n=48, *, decode_tokens=16, budget=0.02, acc=0.99, load=0.5,
     }
     if prefill_chunk:
         out["prefill_chunk"] = prefill_chunk
+    if preempt != "none":
+        out["preempt"] = preempt
     if admission:
         out["admission"] = {"vanilla": base_eng.admission.stats(),
                             "apparate": eng.admission.stats()}
@@ -240,6 +255,14 @@ def main(argv=None):
                     help="generative: >0 splits each prompt's prefill into "
                          "chunks of this many tokens, co-scheduled with "
                          "in-flight decode steps (0 = serial prefill)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="generative + paged: share cached prompt-prefix "
+                         "blocks across slots (refcount + copy-on-write); "
+                         "repeated prompts skip their prefill (TTFT ~ 0)")
+    ap.add_argument("--preempt", default="none", choices=["none", "swap", "shed"],
+                    help="generative + paged: pool-exhaustion reaction — "
+                         "swap a victim's KV to host and readmit it later, "
+                         "shed it outright, or propagate the error")
     ap.add_argument("--admission", action="store_true",
                     help="enable the SLO-aware admission policy: drop "
                          "hopeless requests at admission; generative mode "
@@ -261,7 +284,9 @@ def main(argv=None):
                          kv_block_size=args.kv_block_size, kv_blocks=args.kv_blocks,
                          prefill_chunk=args.prefill_chunk,
                          admission=args.admission,
-                         admission_slack=args.admission_slack)
+                         admission_slack=args.admission_slack,
+                         prefix_cache=args.prefix_cache,
+                         preempt=args.preempt)
     else:
         serve(args.domain, args.n if args.n is not None else 3000,
               policy=args.policy, budget=args.budget,

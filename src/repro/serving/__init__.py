@@ -49,6 +49,7 @@ from repro.serving.runner import (
     LMTokenRunner,
     LoopDecodeRunner,
     PoolExhausted,
+    PrefixCache,
     SyntheticDecodeRunner,
     SyntheticRunner,
 )
@@ -89,6 +90,7 @@ __all__ = [
     "GenResponse",
     "BlockAllocator",
     "PoolExhausted",
+    "PrefixCache",
     "ClassifierRunner",
     "DecodeRunner",
     "LMTokenRunner",

@@ -38,6 +38,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.serving.request import GenResponse, Request, Response
+from repro.serving.runner import PoolExhausted
 
 
 def release_offset(profile, site: int, bs: int, active: Sequence[int]) -> float:
@@ -218,6 +219,14 @@ class GenerativeAdapter:
     is dropped at admission, and a live slot whose observed TPT has
     violated its SLO for ``shed_after`` consecutive tokens is shed at the
     next step boundary (partial response marked ``shed=True``).
+
+    With ``GenerativeConfig.preempt != 'none'``, a mid-run
+    ``PoolExhausted`` from the paged KV pool no longer propagates: the
+    adapter preempts the victim slot with the most SLO slack — swapping
+    its KV blocks to a host buffer for later readmission ('swap', via
+    ``DecodeRunner.swap_out``/``swap_in``) or discarding it ('shed') —
+    and retries. An ``AdmissionPolicy`` refines the swap-vs-shed choice
+    per victim by SLO slack (``preempt_stream``).
     """
 
     pool = "generative"
@@ -228,6 +237,7 @@ class GenerativeAdapter:
         self.queue: deque = deque()
         self.slots: Dict[int, dict] = {}  # slot id -> {req, resp, [pf_left, pf_fed]}
         self.free = list(range(eng.cfg.max_batch_size))
+        self.swapped: deque = deque()  # preempted streams awaiting readmission
         self.responses: List[GenResponse] = []
         self._i = 0
         self._now = 0.0  # pool-local clock (the old loop's `now`)
@@ -255,18 +265,124 @@ class GenerativeAdapter:
             self.eng.n_shed += 1
         self.responses.append(resp)
 
-    def _admit_one(self, r, core: EngineCore):
+    def _cached_tokens(self, r) -> int:
+        """Prompt tokens the runner's prefix cache already holds for ``r``
+        — the engine prices prefill on the uncached tail only."""
+        eng = self.eng
+        if eng.runner is None or not hasattr(eng.runner, "cached_prefix_tokens"):
+            return 0
+        return min(int(eng.runner.cached_prefix_tokens(r.item)), int(r.prompt_len))
+
+    def _preempt_one(self, core: EngineCore, exclude: Optional[int] = None) -> bool:
+        """Pick a preemption victim for an exhausted KV pool and evict it.
+        Victim = the decoding slot with the most per-token SLO slack
+        (ties: lowest slot id); with no decoding slot, a prefilling slot
+        (excluding ``exclude``, the one mid-feed) is shed — its partial
+        prefill cannot swap. Returns False when nothing is evictable."""
+        eng = self.eng
+
+        def slack(sid):
+            s = self.slots[sid]["req"].slo_ms
+            return s if np.isfinite(s) else np.inf
+
+        decoding = [s for s in sorted(self.slots)
+                    if self.slots[s]["resp"] is not None and s != exclude]
+        if decoding:
+            victim = max(decoding, key=lambda s: (slack(s), -s))
+            sl = self.slots[victim]
+            action = eng.cfg.preempt
+            if action == "swap":
+                if eng.admission is not None:
+                    action = eng.admission.preempt_stream(
+                        sl["req"], self._now, eng.profile.vanilla_time(1)
+                    )
+                if not hasattr(eng.runner, "swap_out"):
+                    action = "shed"
+            if action == "swap":
+                handle = eng.runner.swap_out(victim)
+                sl = self.slots.pop(victim)
+                self.free.append(victim)
+                self.free.sort()
+                if eng.admission is not None:
+                    eng.admission.forget((eng.wid, victim, sl["req"].rid))
+                self.swapped.append({"req": sl["req"], "resp": sl["resp"],
+                                     "handle": handle})
+                eng.n_preempt_swaps += 1
+            else:
+                self._finish(victim, core, shed=True)
+                eng.n_preempt_sheds += 1
+            return True
+        prefilling = [s for s in sorted(self.slots)
+                      if self.slots[s]["resp"] is None and s != exclude]
+        if not prefilling:
+            return False
+        victim = max(prefilling, key=lambda s: (slack(s), -s))
+        sl = self.slots.pop(victim)
+        self.free.append(victim)
+        self.free.sort()
+        if eng.runner is not None:
+            eng.runner.free(victim)
+        if eng.admission is not None:
+            eng.admission.forget((eng.wid, victim, sl["req"].rid))
+        resp = GenResponse(rid=sl["req"].rid, arrival_ms=sl["req"].arrival_ms,
+                           release_ms=[], exit_sites=[], tokens=[],
+                           final_tokens=[], worker=eng.wid,
+                           slo_ms=sl["req"].slo_ms, shed=True)
+        self.responses.append(resp)
+        eng.n_shed += 1
+        eng.n_preempt_sheds += 1
+        return True
+
+    def _readmit(self, core: EngineCore) -> None:
+        """Swap preempted streams back into free slots while the pool has
+        room (FIFO — the earliest victim resumes first)."""
+        eng = self.eng
+        while self.swapped and self.free:
+            sid = self.free[0]
+            try:
+                eng.runner.swap_in(sid, self.swapped[0]["handle"])
+            except PoolExhausted:
+                return
+            ent = self.swapped.popleft()
+            self.free.pop(0)
+            self.slots[sid] = {"req": ent["req"], "resp": ent["resp"]}
+            eng.n_swap_ins += 1
+
+    def _admit_one(self, r, core: EngineCore) -> bool:
         """Claim a slot for ``r``. Legacy path: serial prefill advances the
         pool clock and the first token releases immediately. Chunked path:
-        the slot enters the prefilling state; chunks run inside steps."""
+        the slot enters the prefilling state; chunks run inside steps.
+        Returns False when the KV pool rejected the prompt and ``r`` was
+        put back at the queue head to wait for live slots to drain."""
         eng = self.eng
         sid = self.free.pop(0)
         if eng.cfg.prefill_chunk > 0:
             self.slots[sid] = {"req": r, "resp": None,
                                "pf_left": r.prompt_len, "pf_fed": 0}
-            return
-        self._now += eng.prefill_ms(r.prompt_len)
-        tok = eng.runner.start(sid, r.item) if eng.runner is not None else 0
+            return True
+        skip = self._cached_tokens(r)
+        while True:
+            try:
+                tok = eng.runner.start(sid, r.item) if eng.runner is not None else 0
+                break
+            except PoolExhausted:
+                if eng.cfg.preempt != "none" and self._preempt_one(core):
+                    continue
+                self.free.append(sid)
+                self.free.sort()
+                if self.slots:
+                    # live slots will free blocks: retry at a later boundary
+                    self.queue.appendleft(r)
+                    return False
+                # an empty engine still can't fit the prompt: hopeless
+                resp = GenResponse(rid=r.rid, arrival_ms=r.arrival_ms,
+                                   release_ms=[], exit_sites=[], tokens=[],
+                                   final_tokens=[], worker=eng.wid,
+                                   slo_ms=r.slo_ms, dropped=True)
+                self.responses.append(resp)
+                core.emit(self._now, self.pool, (r.rid, -1))
+                return True
+        self._now += eng.prefill_ms(max(int(r.prompt_len) - skip, 0))
         resp = GenResponse(
             rid=r.rid, arrival_ms=r.arrival_ms, release_ms=[self._now],
             exit_sites=[-1], tokens=[tok], final_tokens=[tok],
@@ -277,6 +393,7 @@ class GenerativeAdapter:
         core.emit(self._now, self.pool, (r.rid, 0))
         if r.n_tokens <= 1:
             self._finish(sid, core)
+        return True
 
     def _prefill_chunks(self, core: EngineCore) -> float:
         """Run one prefill chunk per prefilling slot; returns the chunk time
@@ -286,28 +403,55 @@ class GenerativeAdapter:
         incremental = eng.runner is not None and hasattr(eng.runner, "prefill_begin")
         chunk_ms = 0.0
         for sid in sorted(self.slots):
+            if sid not in self.slots:  # preempted earlier in this pass
+                continue
             sl = self.slots[sid]
             if sl["resp"] is not None:
                 continue
-            c = min(eng.cfg.prefill_chunk, sl["pf_left"])
             r = sl["req"]
+            if incremental and sl["pf_fed"] == 0 and "pf_skip" not in sl:
+                # prompt tokens the prefix cache covers cost no chunk time;
+                # the runner shares their cached blocks at prefill_begin
+                sl["pf_skip"] = min(self._cached_tokens(r), sl["pf_left"])
+                sl["pf_left"] -= sl["pf_skip"]
+            c = min(eng.cfg.prefill_chunk, sl["pf_left"])
             if c > 0:
                 chunk_ms += eng.prefill_ms(c)
                 eng.n_chunks += 1
                 if incremental and "pf_tok" not in sl:
-                    tok = (eng.runner.prefill_begin(sid, r.item, c) if sl["pf_fed"] == 0
-                           else eng.runner.prefill_resume(sid, c))
+                    tok = self._feed_chunk(sid, sl, r, c, core)
+                    if sid not in self.slots:  # shed: its prompt can't fit
+                        continue
                     if tok is not None:  # runner's prompt exhausted: first token
                         sl["pf_tok"] = int(tok)
                 sl["pf_left"] -= c
                 sl["pf_fed"] += c
             if sl["pf_left"] <= 0 and "pf_tok" not in sl:
-                # non-incremental runner (or None), or a zero-length prompt:
-                # one-shot start at the completing chunk
+                # non-incremental runner (or None), a zero-length prompt, or
+                # a fully prefix-cached one: one-shot start at the
+                # completing chunk
                 sl["pf_tok"] = int(eng.runner.start(sid, r.item)) if (
                     eng.runner is not None) else 0
         eng.chunk_ms += chunk_ms
         return chunk_ms
+
+    def _feed_chunk(self, sid: int, sl: dict, r, c: int, core: EngineCore):
+        """Feed one prefill chunk into the runner, preempting victims on
+        pool exhaustion when configured; as a last resort the slot itself
+        is shed (its prompt cannot fit even a drained pool)."""
+        eng = self.eng
+        while True:
+            try:
+                if sl["pf_fed"] == 0:
+                    return eng.runner.prefill_begin(sid, r.item, sl.get("pf_skip", 0) + c)
+                return eng.runner.prefill_resume(sid, c)
+            except PoolExhausted:
+                if eng.cfg.preempt == "none":
+                    raise
+                if not self._preempt_one(core, exclude=sid):
+                    if not self._preempt_one(core):  # shed sid itself
+                        raise
+                    return None
 
     # -- event loop ----------------------------------------------------------
 
@@ -315,7 +459,7 @@ class GenerativeAdapter:
         eng = self.eng
         self._now = max(self._now, t)
         n = len(self.reqs)
-        while self._i < n or self.queue or self.slots:
+        while self._i < n or self.queue or self.slots or self.swapped:
             now = self._now
             while self._i < n and self.reqs[self._i].arrival_ms <= now + 1e-9:
                 r = self.reqs[self._i]
@@ -331,14 +475,26 @@ class GenerativeAdapter:
                     core.emit(now, self.pool, (r.rid, -1))
                     continue
                 self.queue.append(r)
+            # swapped victims get their slots back before new admissions
+            if self.swapped:
+                self._readmit(core)
             if not self.slots and not self.queue:
+                if self.swapped:
+                    # an EMPTY engine still can't readmit the head stream —
+                    # its blocks exceed the drained pool: hopeless, shed it
+                    ent = self.swapped.popleft()
+                    ent["resp"].shed = True
+                    eng.n_shed += 1
+                    self.responses.append(ent["resp"])
+                    continue
                 if self._i >= n:
                     break
                 core.schedule(self.reqs[self._i].arrival_ms, self)  # idle
                 return
             # admit queued requests into free slots (FCFS, step boundary)
             while self.queue and self.free:
-                self._admit_one(self.queue.popleft(), core)
+                if not self._admit_one(self.queue.popleft(), core):
+                    break  # pool-blocked: wait for live slots to drain
             if not self.slots:
                 continue
             self._step(core)
@@ -351,14 +507,24 @@ class GenerativeAdapter:
         of zero prefilling slots)."""
         eng = self.eng
         chunk_ms = self._prefill_chunks(core) if eng.cfg.prefill_chunk > 0 else 0.0
-        sids = [s for s in sorted(self.slots) if self.slots[s]["resp"] is not None]
-        B = len(sids)
-        eng.peak_slots = max(eng.peak_slots, B)
-        eng.slot_history.append(B)
         ctl = eng.controller
         act = sorted(ctl.active) if ctl is not None else []
+        while True:
+            sids = [s for s in sorted(self.slots) if self.slots[s]["resp"] is not None]
+            B = len(sids)
+            if not (B and eng.runner is not None and ctl is not None):
+                break
+            try:
+                labels, unc, finals = eng.runner.step(sids, act)
+                break
+            except PoolExhausted:
+                # a stepped slot needs a block the pool can't give: preempt
+                # the slackest victim and retry with the survivors
+                if eng.cfg.preempt == "none" or not self._preempt_one(core):
+                    raise
+        eng.peak_slots = max(eng.peak_slots, B)
+        eng.slot_history.append(B)
         if B and eng.runner is not None and ctl is not None:
-            labels, unc, finals = eng.runner.step(sids, act)
             dec = ctl.observe(labels, unc, finals)
             ex = np.asarray(dec.exit_sites, np.int64)
             released = np.asarray(dec.released_labels)
@@ -406,6 +572,7 @@ class GenerativeAdapter:
                 continue
             r, tok = sl["req"], sl.pop("pf_tok")
             del sl["pf_left"], sl["pf_fed"]
+            sl.pop("pf_skip", None)
             sl["resp"] = GenResponse(
                 rid=r.rid, arrival_ms=r.arrival_ms, release_ms=[end],
                 exit_sites=[-1], tokens=[tok], final_tokens=[tok],

@@ -62,6 +62,13 @@ class GenerativeConfig:
     # tokens, co-scheduled with in-flight decode steps (0 = legacy serial
     # prefill at admission, which stalls the whole batch)
     prefill_chunk: int = 0
+    # overload reaction when the paged KV pool exhausts mid-run:
+    #   'none' — propagate PoolExhausted (legacy: pool sizing is a hard cap)
+    #   'shed' — shed the slackest victim slot (its work is discarded)
+    #   'swap' — swap the victim's KV blocks to a host buffer and readmit
+    #            it when the pool drains; an AdmissionPolicy (if present)
+    #            refines the choice per victim by SLO slack
+    preempt: str = "none"
 
 
 def offered_decode_qps(profile, *, max_batch_size: int, tokens_per_request: int,
@@ -101,6 +108,10 @@ class GenerativeEngine:
             raise ValueError(f"max_batch_size must be >= 1, got {self.cfg.max_batch_size}")
         if self.cfg.prefill_chunk < 0:
             raise ValueError(f"prefill_chunk must be >= 0, got {self.cfg.prefill_chunk}")
+        if self.cfg.preempt not in ("none", "swap", "shed"):
+            raise ValueError(
+                f"preempt must be 'none'|'swap'|'shed', got {self.cfg.preempt!r}"
+            )
         if (runner is None) != (controller is None):
             raise ValueError("runner and controller must be supplied together (or neither)")
         self.runner = runner
@@ -119,6 +130,9 @@ class GenerativeEngine:
         self.n_tokens = 0
         self.n_chunks = 0  # prefill chunks co-scheduled into steps
         self.n_shed = 0  # slots shed mid-stream by the admission policy
+        self.n_preempt_swaps = 0  # pool-exhaustion victims swapped to host
+        self.n_preempt_sheds = 0  # pool-exhaustion victims shed outright
+        self.n_swap_ins = 0  # swapped streams readmitted
         self.peak_slots = 0
         self.slot_history: List[int] = []  # per-step decoding batch sizes
         self.core: Optional[EngineCore] = None  # last run's engine core
@@ -150,6 +164,10 @@ class GenerativeEngine:
         if self.cfg.prefill_chunk > 0:
             out["prefill_chunks"] = float(self.n_chunks)
             out["prefill_chunk_ms"] = self.chunk_ms
+        if self.cfg.preempt != "none":
+            out["preempt_swaps"] = float(self.n_preempt_swaps)
+            out["preempt_sheds"] = float(self.n_preempt_sheds)
+            out["swap_ins"] = float(self.n_swap_ins)
         if self.admission is not None:
             out["shed"] = float(self.n_shed)
             out.update({f"admission_{k}": v for k, v in self.admission.stats().items()})

@@ -135,7 +135,10 @@ def summarize_generative(
     Requests shed by the SLO-aware admission policy are reported:
     ``dropped`` counts admission drops (no tokens served; excluded from
     every token metric) and ``shed`` counts mid-stream sheds (partial
-    token streams, which DO contribute their served tokens).
+    token streams, which DO contribute their served tokens). A shed
+    stream that never released a token — a mid-prefill preemption
+    victim — still counts under ``shed`` but, like a drop, is excluded
+    from every latency/token statistic.
 
     Degenerate streams stay NaN-free: an empty (or fully-dropped) stream
     returns the full key set zeroed, and a stream of single-token
@@ -143,31 +146,35 @@ def summarize_generative(
     than NaN — downstream win%/JSON consumers choke on NaN.
     """
     served = [r for r in responses if not getattr(r, "dropped", False)]
-    if not served:
-        return dict(_GEN_EMPTY, n=float(len(responses)),
+    n_shed = float(sum(getattr(r, "shed", False) for r in served))
+    # zero-token sheds (mid-prefill preemption victims) have no releases
+    # to take statistics over — count them, then set them aside
+    voiced = [r for r in served if len(r.release_ms) > 0]
+    if not voiced:
+        return dict(_GEN_EMPTY, n=float(len(responses)), shed=n_shed,
                     dropped=float(len(responses) - len(served)))
-    ttft = np.asarray([r.ttft_ms for r in served])
-    tpt = np.concatenate([r.tpt_ms for r in served if len(r.release_ms) > 1] or
+    ttft = np.asarray([r.ttft_ms for r in voiced])
+    tpt = np.concatenate([r.tpt_ms for r in voiced if len(r.release_ms) > 1] or
                          [np.zeros(0)])
     decode_sites = np.concatenate(
-        [np.asarray(r.exit_sites[1:], np.int64) for r in served if len(r.exit_sites) > 1]
+        [np.asarray(r.exit_sites[1:], np.int64) for r in voiced if len(r.exit_sites) > 1]
         or [np.zeros(0, np.int64)]
     )
-    total_tokens = int(sum(len(r.tokens) for r in served))
-    last = max(max(r.release_ms) for r in served)
-    first = min(r.arrival_ms for r in served)
+    total_tokens = int(sum(len(r.tokens) for r in voiced))
+    last = max(max(r.release_ms) for r in voiced)
+    first = min(r.arrival_ms for r in voiced)
     span = _span_ms(horizon_ms, last, first)
     # agreement over DECODE tokens only (same denominator as exit_rate):
     # the prefill token is the final model's own output by construction
     agree = np.concatenate(
-        [np.asarray(r.tokens[1:]) == np.asarray(r.final_tokens[1:]) for r in served]
+        [np.asarray(r.tokens[1:]) == np.asarray(r.final_tokens[1:]) for r in voiced]
         or [np.zeros(0, bool)]
     )
     out = {
         "n": float(len(responses)),
         "tokens": float(total_tokens),
         "dropped": float(len(responses) - len(served)),
-        "shed": float(sum(getattr(r, "shed", False) for r in served)),
+        "shed": n_shed,
         **_percentile_block(ttft, {"ttft_p50_ms": 50, "ttft_p95_ms": 95}, 0.0),
         **_percentile_block(tpt, {"tpt_p50_ms": 50, "tpt_p95_ms": 95}, 0.0),
         "tpt_mean_ms": float(tpt.mean()) if len(tpt) else 0.0,
@@ -177,15 +184,15 @@ def summarize_generative(
         # per-request latency split: how much of a request's life is TTFT
         "ttft_frac": float(
             np.mean([r.ttft_ms / max(max(r.release_ms) - r.arrival_ms, 1e-9)
-                     for r in served])
+                     for r in voiced])
         ),
     }
-    slo = np.asarray([r.slo_ms for r in served])
+    slo = np.asarray([r.slo_ms for r in voiced])
     if np.isfinite(slo).all() and len(tpt):
         # per-token SLO: a request is on time if its median TPT meets it
         per_req = [
             float(np.median(r.tpt_ms)) <= r.slo_ms + 1e-9
-            for r in served if len(r.release_ms) > 1
+            for r in voiced if len(r.release_ms) > 1
         ]
         if per_req:
             out["tpt_slo_miss_rate"] = 1.0 - float(np.mean(per_req))

@@ -176,6 +176,20 @@ class AdmissionPolicy:
         self._viol[key] = n
         return False
 
+    def preempt_stream(self, req, now: float, best_step_ms: float) -> str:
+        """Generative overload: the KV pool is exhausted and ``req``'s slot
+        was chosen as the preemption victim — pick the reaction by SLO
+        slack (InferLine's currency, SuperServe's reactive fine-grained
+        overload handling). A stream whose per-token SLO a best-case step
+        still meets has slack to absorb a swap round-trip, so its work is
+        preserved ('swap'); a stream already doomed against its SLO frees
+        the pool permanently ('shed')."""
+        if not np.isfinite(req.slo_ms):
+            return "swap"  # no deadline: never discard work
+        if best_step_ms <= self.cfg.slack * req.slo_ms + 1e-9:
+            return "swap"
+        return "shed"
+
     def forget(self, key) -> None:
         """Drop stream ``key``'s violation streak. The engine calls this
         when a stream ends (finish or shed): ``(wid, slot, rid)`` keys

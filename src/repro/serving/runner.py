@@ -40,11 +40,22 @@ class BlockAllocator:
     always hands out the lowest id, so identical schedules produce
     identical tables (determinism the equivalence harness relies on).
 
+    Physical blocks are REFCOUNTED: ``alloc`` hands out private blocks
+    (refcount 1), ``share`` maps an already-live block into another slot's
+    table (refcount += 1 — N slots with a common prompt prefix reference
+    ONE physical block set), and the prefix cache holds references via
+    ``pin``/``unpin``. A block returns to the free heap only when its last
+    reference drops. ``cow`` implements copy-on-write: it swaps one table
+    entry for a fresh private block so the caller can copy-then-mutate
+    without touching the shared original.
+
     Invariants (asserted by the property tests):
-      * a block is owned by at most one slot at a time;
-      * ``n_free + sum(owned) == n_blocks`` across any schedule;
+      * every table entry (and every pinned id) references a live block;
+      * ``refcount.sum() == sum(owned) + pins`` across any schedule;
+      * ``n_free + (refcount > 0).sum() == n_blocks`` — no block is both
+        free and referenced, none leaks;
       * allocation at exhaustion raises ``PoolExhausted`` atomically —
-        no table/free-list mutation happens on the failing call.
+        no table/free-list/refcount mutation happens on the failing call.
     """
 
     def __init__(self, n_blocks: int, max_blocks_per_slot: int, n_slots: int = 0):
@@ -56,6 +67,8 @@ class BlockAllocator:
         heapq.heapify(self._free)
         self.table = np.zeros((n_slots, max_blocks_per_slot), np.int32)
         self.owned = np.zeros(n_slots, np.int32)
+        self.refcount = np.zeros(n_blocks + 1, np.int32)  # per physical block
+        self.pins = 0  # live cache (non-slot) references
         self.peak_blocks = 0
 
     @property
@@ -76,38 +89,226 @@ class BlockAllocator:
 
     def grow_pool(self, n_blocks: int) -> None:
         """Extend the pool with fresh block ids (existing ownership kept)."""
+        if n_blocks > self.n_blocks:
+            self.refcount = np.concatenate(
+                [self.refcount, np.zeros(n_blocks - self.n_blocks, np.int32)]
+            )
         for b in range(self.n_blocks + 1, n_blocks + 1):
             heapq.heappush(self._free, b)
         self.n_blocks = max(self.n_blocks, n_blocks)
 
-    def alloc(self, slot: int, n: int = 1) -> List[int]:
-        """Claim ``n`` blocks for ``slot`` (atomic: all or nothing)."""
-        if self.owned[slot] + n > self.max_blocks:
-            raise ValueError(
-                f"slot {slot} would exceed max_blocks={self.max_blocks}"
-            )
+    def require(self, n: int) -> None:
+        """Check ``n`` free blocks exist WITHOUT claiming anything — the
+        all-or-nothing precondition for multi-slot claims."""
         if len(self._free) < n:
             raise PoolExhausted(
                 f"paged KV pool exhausted: need {n} block(s), "
                 f"{len(self._free)}/{self.n_blocks} free"
             )
+
+    def alloc(self, slot: int, n: int = 1) -> List[int]:
+        """Claim ``n`` private blocks for ``slot`` (atomic: all or nothing)."""
+        if self.owned[slot] + n > self.max_blocks:
+            raise ValueError(
+                f"slot {slot} would exceed max_blocks={self.max_blocks}"
+            )
+        self.require(n)
         ids = [heapq.heappop(self._free) for _ in range(n)]
         k = int(self.owned[slot])
         self.table[slot, k : k + n] = ids
         self.owned[slot] += n
+        self.refcount[ids] = 1
         self.peak_blocks = max(self.peak_blocks, self.live_blocks)
         return ids
 
+    def share(self, slot: int, ids: Sequence[int]) -> None:
+        """Map already-live blocks into ``slot``'s table (prefix sharing):
+        the slot references the SAME physical blocks, refcount += 1 each."""
+        if not ids:
+            return
+        if self.owned[slot] + len(ids) > self.max_blocks:
+            raise ValueError(
+                f"slot {slot} would exceed max_blocks={self.max_blocks}"
+            )
+        for b in ids:
+            if not (1 <= b <= self.n_blocks) or self.refcount[b] < 1:
+                raise ValueError(f"cannot share non-live block {b}")
+        k = int(self.owned[slot])
+        self.table[slot, k : k + len(ids)] = ids
+        self.owned[slot] += len(ids)
+        for b in ids:
+            self.refcount[b] += 1
+
+    def cow(self, slot: int, idx: int) -> Tuple[int, int]:
+        """Copy-on-write: replace ``slot``'s ``idx``-th table entry with a
+        fresh private block and drop the reference on the old one. Returns
+        ``(old_id, new_id)`` — the caller copies the block's contents on
+        device before writing. Atomic: raises before any mutation."""
+        self.require(1)
+        old = int(self.table[slot, idx])
+        new = heapq.heappop(self._free)
+        self.refcount[new] = 1
+        self.table[slot, idx] = new
+        self._deref(old)
+        self.peak_blocks = max(self.peak_blocks, self.live_blocks)
+        return old, new
+
+    def pin(self, b: int) -> None:
+        """Take a cache (non-slot) reference on a live block."""
+        if not (1 <= b <= self.n_blocks) or self.refcount[b] < 1:
+            raise ValueError(f"cannot pin non-live block {b}")
+        self.refcount[b] += 1
+        self.pins += 1
+
+    def unpin(self, b: int) -> None:
+        """Drop a cache reference; the block frees once nothing else holds it."""
+        self.pins -= 1
+        self._deref(b)
+
+    def _deref(self, b: int) -> None:
+        self.refcount[b] -= 1
+        if self.refcount[b] == 0:
+            heapq.heappush(self._free, b)
+
     def free_slot(self, slot: int) -> None:
-        """Return every block owned by ``slot`` to the pool."""
+        """Drop every reference ``slot`` holds (blocks free at refcount 0)."""
         k = int(self.owned[slot])
         for b in self.table[slot, :k]:
-            heapq.heappush(self._free, int(b))
+            self._deref(int(b))
         self.table[slot, :] = 0  # stale entries must stay valid pool ids
         self.owned[slot] = 0
 
     def owned_ids(self, slot: int) -> List[int]:
         return [int(b) for b in self.table[slot, : int(self.owned[slot])]]
+
+
+class PrefixCache:
+    """Host-side prompt-prefix trie over the paged KV pool.
+
+    Edges are full ``block_size``-token chunks (keyed by their raw bytes);
+    a node pins the physical block holding that chunk's KV, so N prompts
+    sharing a prefix resolve to ONE block chain. A whole-prompt entry
+    additionally records the partial tail block (when the prompt doesn't
+    end on a block boundary) plus the prompt's greedy first token — a
+    fully cached prompt starts with ZERO device work (TTFT ~ host time).
+
+    The cache holds one ``pin`` reference per cached block; slots that hit
+    ``share`` the same ids. When the pool runs dry, ``evict_for`` unpins
+    LRU leaf entries whose block nobody else references (refcount == 1),
+    so eviction can never yank a block from under a live slot — and never
+    strands a parent, since any slot using a child's chain walked (and
+    shares) every ancestor too.
+    """
+
+    def __init__(self, alloc: BlockAllocator, block_size: int):
+        self._alloc = alloc
+        self.bs = int(block_size)
+        self._root = {"children": {}, "block": 0, "tick": 0, "tails": {}, "first": None}
+        self._tick = 0
+        self.hits = 0
+        self.tokens_saved = 0
+        self.blocks_shared = 0  # cumulative blocks a lookup let a slot skip
+        self.evictions = 0
+
+    def lookup(self, toks: np.ndarray, limit: Optional[int] = None):
+        """Longest cached cover of ``toks[:limit]`` in whole blocks:
+        returns ``(block_ids, n_covered, first_tok)``. ``first_tok`` is
+        non-None only on a whole-prompt hit (tail block included)."""
+        toks = np.asarray(toks)
+        S = len(toks) if limit is None else min(len(toks), int(limit))
+        self._tick += 1
+        node, ids, m = self._root, [], 0
+        while (m + 1) * self.bs <= S:
+            child = node["children"].get(toks[m * self.bs : (m + 1) * self.bs].tobytes())
+            if child is None:
+                break
+            child["tick"] = self._tick
+            ids.append(child["block"])
+            node, m = child, m + 1
+        covered = m * self.bs
+        if covered == S and node is not self._root and node["first"] is not None:
+            return ids, S, node["first"]
+        if m == S // self.bs and S % self.bs and S == len(toks):
+            tail = node["tails"].get(toks[covered:].tobytes())
+            if tail is not None:
+                tail["tick"] = self._tick
+                return ids + [tail["block"]], S, tail["first"]
+        return ids, covered, None
+
+    def register(self, toks: np.ndarray, ids: Sequence[int], first_tok: int) -> None:
+        """Record a fully prefilled prompt: ``ids`` are the owning slot's
+        blocks in order. New chunks pin their block; chunks already cached
+        keep their first-registered block (the slot shares it anyway)."""
+        toks = np.asarray(toks)
+        S = len(toks)
+        self._tick += 1
+        node = self._root
+        for m in range(S // self.bs):
+            key = toks[m * self.bs : (m + 1) * self.bs].tobytes()
+            child = node["children"].get(key)
+            if child is None:
+                child = {"children": {}, "block": int(ids[m]), "tick": self._tick,
+                         "tails": {}, "first": None}
+                self._alloc.pin(int(ids[m]))
+                node["children"][key] = child
+            child["tick"] = self._tick
+            node = child
+        if S % self.bs:
+            key = toks[S - S % self.bs :].tobytes()
+            tail = node["tails"].get(key)
+            if tail is None:
+                node["tails"][key] = {"block": int(ids[S // self.bs]),
+                                      "first": int(first_tok), "tick": self._tick}
+                self._alloc.pin(int(ids[S // self.bs]))
+            else:
+                tail["tick"] = self._tick
+        elif node is not self._root and node["first"] is None:
+            node["first"] = int(first_tok)
+
+    def _evictable(self):
+        """All LRU-evictable entries: tails, plus chunk nodes with no
+        descendants, whose block only the cache still references."""
+        out = []
+        stack = [self._root]
+        while stack:
+            node = stack.pop()
+            for key, tail in node["tails"].items():
+                if self._alloc.refcount[tail["block"]] == 1:
+                    out.append((tail["tick"], 1, key, node, tail))
+            for key, ch in node["children"].items():
+                if (not ch["children"] and not ch["tails"]
+                        and self._alloc.refcount[ch["block"]] == 1):
+                    out.append((ch["tick"], 0, key, node, ch))
+                stack.append(ch)
+        return out
+
+    def evict_for(self, n: int) -> None:
+        """Unpin least-recently-used cache-only entries until ``n`` blocks
+        are free (or nothing evictable remains — the caller's ``require``
+        then raises). Deterministic: ties break on kind then key bytes."""
+        while self._alloc.n_free < n:
+            cands = self._evictable()
+            if not cands:
+                return
+            _, kind, key, parent, entry = min(cands, key=lambda c: c[:3])
+            if kind == 1:
+                del parent["tails"][key]
+            else:
+                del parent["children"][key]
+            self._alloc.unpin(entry["block"])
+            self.evictions += 1
+
+    def clear(self) -> None:
+        """Drop every cache reference (slots keep theirs)."""
+        stack = [self._root]
+        while stack:
+            node = stack.pop()
+            for tail in node["tails"].values():
+                self._alloc.unpin(tail["block"])
+            for ch in node["children"].values():
+                self._alloc.unpin(ch["block"])
+                stack.append(ch)
+        self._root = {"children": {}, "block": 0, "tick": 0, "tails": {}, "first": None}
 
 
 class SyntheticRunner:
@@ -201,7 +402,13 @@ class ClassifierRunner:
         bs = _bucket(len(items))
         idx = np.pad(items, (0, bs - len(items)), mode="edge")
         x = jnp.asarray(self.data[idx])
-        act = tuple(sorted(active))[: self.max_slots]
+        act = tuple(sorted(active))
+        if len(act) > self.max_slots:
+            # silently truncating would return fewer record rows than the
+            # controller asked for — rows land against the wrong sites
+            raise ValueError(
+                f"active ramp set has {len(act)} sites, max_slots={self.max_slots}"
+            )
         k = len(act)
         if k == 0:
             final = np.asarray(self._fn(bs, None)(self.params, x))[: len(items)]
@@ -214,7 +421,10 @@ class ClassifierRunner:
 
     def vanilla_labels(self, n: Optional[int] = None) -> np.ndarray:
         """Original-model labels for the whole stream (accuracy ground truth)."""
-        n = n or len(self.data)
+        # `n or len` would remap an explicit n=0 to the whole dataset
+        n = n if n is not None else len(self.data)
+        if n < 1:
+            return np.zeros(0, np.int64)
         out = []
         for lo in range(0, n, 256):
             hi = min(lo + 256, n)
@@ -276,7 +486,11 @@ class LMTokenRunner:
         # sort (like ClassifierRunner): the controller consumes record rows
         # in ascending-site order, so an unsorted caller set must not leak
         # row misalignment into the window
-        act = sorted(active)[: self.max_slots]
+        act = sorted(active)
+        if len(act) > self.max_slots:
+            raise ValueError(
+                f"active ramp set has {len(act)} sites, max_slots={self.max_slots}"
+            )
         k = len(act)
         if k == 0:
             final = np.asarray(self._fn_noramp(bs)(self.params, toks))[: len(items)]
@@ -293,7 +507,10 @@ class LMTokenRunner:
         )
 
     def vanilla_labels(self, n: Optional[int] = None) -> np.ndarray:
-        n = n or len(self.data)
+        # `n or len` would remap an explicit n=0 to the whole dataset
+        n = n if n is not None else len(self.data)
+        if n < 1:
+            return np.zeros(0, np.int64)
         out = []
         for lo in range(0, n, 128):
             idx = np.arange(lo, min(lo + 128, n))
@@ -344,7 +561,8 @@ class DecodeRunner:
 
     def __init__(self, model, params, prompts: np.ndarray, *, max_new_tokens: int = 64,
                  max_slots: int = 8, n_slots: Optional[int] = None,
-                 kv_block_size: int = 16, kv_blocks: Optional[int] = None):
+                 kv_block_size: int = 16, kv_blocks: Optional[int] = None,
+                 prefix_cache: bool = False):
         self.model = model
         self.params = params
         self.prompts = np.asarray(prompts, np.int32)  # (N, S)
@@ -370,11 +588,21 @@ class DecodeRunner:
         self._kv_blocks = kv_blocks
         if self.paged and self._bs_blk < 1:
             raise ValueError(f"paged decode needs kv_block_size >= 1, got {kv_block_size}")
+        if prefix_cache and not self.paged:
+            raise ValueError("prefix_cache requires a paged decode_attn config")
         # kv_block_size is meaningless for contiguous runners (0 documents
         # "contiguous" at the CLI) — don't let it poison the ceil below
         self._max_blocks = -(-self._cache_len // self._bs_blk) if self.paged else 0
         self._alloc: Optional[BlockAllocator] = None
         self._pool_axes: Optional[Tuple[int, ...]] = None  # per-leaf pool axis
+        self._want_prefix = bool(prefix_cache)
+        self._prefix: Optional[PrefixCache] = None  # built with the allocator
+        self._copy_blk = None  # jitted whole-block pool copy (CoW)
+        self.cow_copies = 0
+        self.saved_blocks = 0  # cumulative blocks prefix hits let slots skip
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.swapped_blocks = 0  # cumulative blocks moved to host buffers
 
     # -- batched-cache plumbing ---------------------------------------------
 
@@ -449,6 +677,8 @@ class DecodeRunner:
                 )
             self._alloc = BlockAllocator(nblk, self._max_blocks, rows)
             self._cache = self.model.init_paged_cache(nblk + 1, self._bs_blk)
+            if self._want_prefix:
+                self._prefix = PrefixCache(self._alloc, self._bs_blk)
         else:
             self._alloc.grow_slots(rows)
             if nblk > self._alloc.n_blocks:
@@ -479,7 +709,20 @@ class DecodeRunner:
                 live_blocks=self._alloc.live_blocks,
                 peak_blocks=self._alloc.peak_blocks,
                 peak_token_capacity=self._alloc.peak_blocks * self._bs_blk,
+                shared_blocks=int((self._alloc.refcount > 1).sum()),
+                cow_copies=self.cow_copies,
+                swap_outs=self.swap_outs,
+                swap_ins=self.swap_ins,
+                swapped_blocks=self.swapped_blocks,
             )
+            if self._prefix is not None:
+                out.update(
+                    prefix_hits=self._prefix.hits,
+                    prefix_tokens_saved=self._prefix.tokens_saved,
+                    saved_blocks=self.saved_blocks,
+                    prefix_evictions=self._prefix.evictions,
+                    pinned_blocks=self._alloc.pins,
+                )
         return out
 
     # -- jitted programs ----------------------------------------------------
@@ -623,27 +866,181 @@ class DecodeRunner:
             self._dec0 = dec0
         return self._dec0
 
+    def _copy_block_fn(self):
+        """Whole-block pool copy (CoW): duplicate physical block ``src``
+        into ``dst`` across every cache leaf — src/dst are traced scalars,
+        so one compile covers every copy."""
+        if self._copy_blk is None:
+            axes = self._pool_axes
+
+            @jax.jit
+            def cp(pools, src, dst):
+                leaves, td = jax.tree.flatten(pools)
+                out = []
+                for l, ax in zip(leaves, axes):
+                    m = jnp.moveaxis(l, ax, 0)
+                    m = m.at[dst].set(m[src])
+                    out.append(jnp.moveaxis(m, 0, ax))
+                return jax.tree.unflatten(td, out)
+
+            self._copy_blk = cp
+        return self._copy_blk
+
+    # -- prefix sharing / CoW / swap plumbing --------------------------------
+
+    def _reserve(self, n: int) -> None:
+        """Guarantee ``n`` free blocks, evicting cache-only prefix entries
+        (LRU) if needed; raises ``PoolExhausted`` without mutating slot
+        state when even a drained cache can't cover the claim."""
+        if self._prefix is not None:
+            self._prefix.evict_for(n)
+        self._alloc.require(n)
+
+    def _claim_step_blocks(self, slots: Sequence[int]) -> None:
+        """All-or-nothing block claim for one decode-token write per slot:
+        totals the appends (slot's current block full) and CoW copies
+        (append lands in a block another slot or the prefix cache still
+        references) across ALL stepped slots, reserves them in one pass,
+        THEN mutates — a mid-loop ``PoolExhausted`` can no longer leave
+        earlier slots holding freshly appended blocks."""
+        al, bs = self._alloc, self._bs_blk
+        need_app, need_cow, total = [], [], 0
+        for s in dict.fromkeys(slots):
+            k, p = int(al.owned[s]), int(self._pos[s])
+            na = max(0, p // bs + 1 - k)
+            if k + na > al.max_blocks:
+                raise ValueError(
+                    f"slot {s} would exceed max_blocks={al.max_blocks}"
+                )
+            if na:
+                need_app.append((s, na))
+                total += na
+            elif al.refcount[al.table[s, p // bs]] > 1:
+                need_cow.append((s, p // bs))
+                total += 1
+        if not total:
+            return
+        self._reserve(total)
+        for s, na in need_app:
+            al.alloc(s, na)
+        for s, bi in need_cow:
+            old, new = al.cow(s, bi)
+            self._cache = self._copy_block_fn()(
+                self._cache, jnp.int32(old), jnp.int32(new)
+            )
+            self.cow_copies += 1
+
+    def cached_prefix_tokens(self, item: int) -> int:
+        """Prompt tokens of ``item`` already covered by the prefix cache
+        (0 without one) — the engine prices prefill on the uncached tail."""
+        if self._prefix is None:
+            return 0
+        _, covered, _ = self._prefix.lookup(self.prompts[item])
+        return covered
+
+    def swap_out(self, slot: int) -> dict:
+        """Preempt ``slot``: gather its KV blocks into host buffers, drop
+        its block references, and retire the slot — the pool space funds
+        other streams. Returns an opaque handle for ``swap_in``. Shared
+        blocks stay live (the other holders keep them); the handle carries
+        their CONTENT, so restore never depends on cache survival."""
+        if not self.paged:
+            raise ValueError("swap_out requires a paged KV cache")
+        if slot not in self._live:
+            raise KeyError(f"slot {slot} is not live")
+        if slot in self._pf_progress:
+            raise KeyError(f"slot {slot} is mid-prefill (cannot swap)")
+        ids = self._alloc.owned_ids(slot)
+        idx = jnp.asarray(ids, jnp.int32)
+        bufs = [np.asarray(jnp.take(l, idx, axis=ax))
+                for l, ax in zip(jax.tree.leaves(self._cache), self._pool_axes)]
+        self._alloc.free_slot(slot)
+        self._live.discard(slot)
+        self.swap_outs += 1
+        self.swapped_blocks += len(ids)
+        return {"bufs": bufs, "n_blocks": len(ids),
+                "pos": int(self._pos[slot]), "tok": int(self._tok[slot])}
+
+    def swap_in(self, slot: int, handle: dict) -> None:
+        """Readmit a swapped stream into ``slot`` (any free slot): claim
+        fresh blocks, scatter the host buffers back, restore pos/token.
+        The restored blocks are private copies — bit-identical content, so
+        the decode trajectory is unchanged by the round trip."""
+        if not self.paged:
+            raise ValueError("swap_in requires a paged KV cache")
+        self._ensure_rows(slot + 1)
+        if slot in self._live:  # engine frees before reuse; be defensive
+            self._alloc.free_slot(slot)
+        n = int(handle["n_blocks"])
+        self._reserve(n)
+        ids = self._alloc.alloc(slot, n)
+        idx = jnp.asarray(ids, jnp.int32)
+        leaves, td = jax.tree.flatten(self._cache)
+        out = []
+        for l, b, ax in zip(leaves, handle["bufs"], self._pool_axes):
+            m = jnp.moveaxis(l, ax, 0).at[idx].set(jnp.moveaxis(jnp.asarray(b), ax, 0))
+            out.append(jnp.moveaxis(m, 0, ax))
+        self._cache = jax.tree.unflatten(td, out)
+        self._live.add(slot)
+        self._pos[slot] = handle["pos"]
+        self._tok[slot] = handle["tok"]
+        self._pf_progress.pop(slot, None)
+        self.swap_ins += 1
+
     # -- engine interface ----------------------------------------------------
 
     def start(self, slot: int, item: int) -> int:
         """Prefill ``item``'s prompt into ``slot``'s cache row (contiguous)
         or its freshly claimed pool blocks (paged); returns the first
-        generated (greedy) token."""
+        generated (greedy) token.
+
+        With a prefix cache, cached blocks are SHARED into the slot's
+        table instead of recomputed: a whole-prompt hit returns the cached
+        first token with ZERO device work; a partial hit runs the same
+        one-shot prefill jit but redirects the cached chunks' scatters to
+        the trash block, so only the uncached tail blocks are written —
+        either way the slot state is bit-identical to a private prefill."""
         self._ensure_rows(slot + 1)
         toks = jnp.asarray(self.prompts[item][None, :])
         if self.paged:
             if slot in self._live:  # engine frees before reuse; be defensive
                 self._alloc.free_slot(slot)
-            nb_pf = -(-self.prompts.shape[1] // self._bs_blk)
-            blks = self._alloc.alloc(slot, nb_pf)
-            self._cache, lab = self._prefill_fn_paged()(
-                self.params, self._cache, toks, jnp.asarray(blks, jnp.int32)
-            )
+            S = self.prompts.shape[1]
+            nb_pf = -(-S // self._bs_blk)
+            shared, covered, first = ([], 0, None)
+            if self._prefix is not None:
+                shared, covered, first = self._prefix.lookup(self.prompts[item])
+                if covered:
+                    self._prefix.hits += 1
+                    self._prefix.tokens_saved += covered
+                    self.saved_blocks += len(shared)
+            if shared:
+                # share BEFORE reserving: the extra reference protects the
+                # cached blocks from the eviction a reserve may trigger
+                self._alloc.share(slot, shared)
+            if first is not None:
+                tok = int(first)  # whole prompt cached: TTFT ~ 0
+            else:
+                n_new = nb_pf - len(shared)
+                try:
+                    if n_new:
+                        self._reserve(n_new)
+                    blks = self._alloc.alloc(slot, n_new) if n_new else []
+                except PoolExhausted:
+                    self._alloc.free_slot(slot)  # unwind the shares: retry-safe
+                    raise
+                ids = [0] * len(shared) + blks
+                self._cache, lab = self._prefill_fn_paged()(
+                    self.params, self._cache, toks, jnp.asarray(ids, jnp.int32)
+                )
+                tok = int(np.asarray(lab).reshape(-1)[0])
+            if self._prefix is not None:
+                self._prefix.register(self.prompts[item], self._alloc.owned_ids(slot), tok)
         else:
             self._cache, lab = self._prefill_fn()(
                 self.params, self._cache, toks, jnp.int32(slot)
             )
-        tok = int(np.asarray(lab).reshape(-1)[0])
+            tok = int(np.asarray(lab).reshape(-1)[0])
         self._live.add(slot)
         self._pos[slot] = self.prompts.shape[1]
         self._tok[slot] = tok
@@ -670,9 +1067,33 @@ class DecodeRunner:
         if self.paged:
             if slot in self._live:  # engine frees before reuse; be defensive
                 self._alloc.free_slot(slot)
-            blks = self._alloc.alloc(slot, -(-n // self._bs_blk))
+            shared, covered = [], 0
+            if self._prefix is not None:
+                # cached FULL chunks inside the first chunk are shared, not
+                # recomputed (tail entries only apply to whole prompts)
+                shared, covered, _ = self._prefix.lookup(self.prompts[item], limit=n)
+                if covered:
+                    self._prefix.hits += 1
+                    self._prefix.tokens_saved += covered
+                    self.saved_blocks += len(shared)
+                if shared:
+                    self._alloc.share(slot, shared)
+                if covered == n:  # chunk fully cached: no device work
+                    self._live.add(slot)
+                    self._pos[slot] = n
+                    self._pf_progress[slot] = item
+                    return None
+            n_new = -(-n // self._bs_blk) - len(shared)
+            try:
+                if self._prefix is not None:
+                    self._reserve(n_new)
+                blks = self._alloc.alloc(slot, n_new)
+            except PoolExhausted:
+                self._alloc.free_slot(slot)  # unwind the shares: retry-safe
+                raise
+            ids = [0] * len(shared) + blks
             self._cache, _ = self._prefill_fn_paged(n)(
-                self.params, self._cache, toks, jnp.asarray(blks, jnp.int32)
+                self.params, self._cache, toks, jnp.asarray(ids, jnp.int32)
             )
         else:
             self._cache, _ = self._prefill_fn()(
@@ -694,6 +1115,11 @@ class DecodeRunner:
         exhausted, else None. A production kernel would run the chunk as
         one (n_tokens)-wide dispatch; the per-token loop is the
         oracle-grade equivalent at the same cache layout."""
+        if int(n_tokens) < 1:
+            # silently feeding nothing would leave the slot stuck
+            # mid-prefill with no progress signal — validate like
+            # prefill_begin does
+            raise ValueError(f"prefill chunk must be >= 1 token, got {n_tokens}")
         item = self._pf_progress[slot]
         S = self.prompts.shape[1]
         lab = None
@@ -703,6 +1129,10 @@ class DecodeRunner:
         if int(self._pos[slot]) >= S:
             del self._pf_progress[slot]
             self._tok[slot] = int(lab)
+            if self._prefix is not None:
+                self._prefix.register(
+                    self.prompts[item], self._alloc.owned_ids(slot), int(lab)
+                )
             return int(lab)
         return None
 
@@ -715,8 +1145,7 @@ class DecodeRunner:
         toks = jnp.asarray([[tok]], jnp.int32)
         pos = jnp.asarray(self._pos[rows], jnp.int32)
         if self.paged:
-            while int(self._alloc.owned[slot]) * self._bs_blk <= int(self._pos[slot]):
-                self._alloc.alloc(slot, 1)
+            self._claim_step_blocks([slot])
             tables = jnp.asarray(self._alloc.table[rows], jnp.int32)
             self._cache, fl = self._decode_fn_paged_noramp()(
                 self.params, self._cache, toks, pos, tables
@@ -760,11 +1189,11 @@ class DecodeRunner:
         k = len(act)
         if self.paged:
             # append a block only when a stepped slot's current block is
-            # full; a pool with no free block raises PoolExhausted here,
-            # BEFORE any device state changes
-            for s in dict.fromkeys(slots):
-                while int(self._alloc.owned[s]) * self._bs_blk <= int(self._pos[s]):
-                    self._alloc.alloc(s, 1)
+            # full (CoW-copying it first if it's shared); the claim totals
+            # every stepped slot's needs and reserves them in ONE pass, so
+            # a pool with no free block raises PoolExhausted here BEFORE
+            # any allocator or device state changes
+            self._claim_step_blocks(slots)
             tables = self._alloc.table[rows].copy()
             # FREE pad rows keep stale table rows that may now reference
             # blocks owned by live slots — zero them so their (discarded)

@@ -18,9 +18,17 @@ numerically equal but only to rounding, and are covered by the kernel
 tests in test_paged_kv.py.
 
 `test_randomized_schedules_fuzz` drives hundreds of seeded random
-admit/step/free/slot-reuse schedules through all three runners — the
+admit/step/free/slot-reuse schedules through all four runners — the
 hand-written schedules above pin the known-tricky corners, the fuzz
 covers the schedule space.
+
+The 'prefix' fuzz runner adds the prefix cache on top of the paged pool:
+repeated items share physical prompt blocks (refcount > 1), whole-prompt
+hits skip prefill entirely (the cached first token), and the first
+decode write into a shared tail block copy-on-writes it. Its block size
+(5) deliberately does NOT divide the prompt length (12), so every prompt
+ends in a partial tail block — the CoW path runs constantly — while
+still dividing cache_len (20) for bit-identity.
 """
 import jax
 import numpy as np
@@ -189,7 +197,7 @@ def test_engine_end_to_end_identical_records(runner_pair):
 
 
 N_SLOTS = 4
-MAX_NEW = 8  # cache_len = 8 + 8 = 16 = 4 blocks of 4 (bs | cache_len)
+MAX_NEW = 8  # cache_len = 12 + 8 = 20: 5 blocks of 4 AND 4 blocks of 5
 N_SCHEDULES = 300
 
 
@@ -199,18 +207,26 @@ def fuzz_trio():
     fresh runner would recompile its jitted programs; reuse keeps the
     whole fuzz inside a handful of compiles). Slot reuse across schedules
     is exactly the production pattern: start() reclaims the row/blocks
-    wholesale, so stale state from the previous schedule is dead."""
+    wholesale, so stale state from the previous schedule is dead. The
+    prefix runner's cache ALSO persists across schedules, so later
+    schedules hit hot prompts constantly and eviction churns (16 items x
+    up to 3 pinned blocks vs a 16-block pool)."""
     cfg = get_tiny("qwen2-1.5b").replace(n_layers=3, vocab_size=128, decode_attn="ref")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(2))
-    prompts = np.random.default_rng(3).integers(0, 128, (16, 8)).astype(np.int32)
+    prompts = np.random.default_rng(3).integers(0, 128, (16, 12)).astype(np.int32)
     kw = dict(max_new_tokens=MAX_NEW, max_slots=3)
+    paged_model = build_model(cfg.replace(decode_attn="paged"))
     return {
         "batched": DecodeRunner(model, params, prompts, **kw),
         "loop": LoopDecodeRunner(model, params, prompts, **kw),
-        "paged": DecodeRunner(
-            build_model(cfg.replace(decode_attn="paged")), params, prompts,
-            kv_block_size=4, **kw
+        "paged": DecodeRunner(paged_model, params, prompts, kv_block_size=4, **kw),
+        # bs=5 divides cache_len=20 (bit-identity) but NOT the prompt
+        # length 12, so every cached prompt has a partial tail block:
+        # full hits seed shared tails, and the first decode append after
+        # one lands inside the shared block -> copy-on-write every time.
+        "prefix": DecodeRunner(
+            paged_model, params, prompts, kv_block_size=5, prefix_cache=True, **kw
         ),
     }
 
@@ -238,7 +254,7 @@ def _run_schedule(rng, runners, n_sites, sched_id):
             subset = [int(s) for s in rng.permutation(steppable)[:k]]
             act = [int(s) for s in np.flatnonzero(rng.random(n_sites) < 0.6)]
             lo, uo, fo = runners["loop"].step(subset, act)
-            for name in ("batched", "paged"):
+            for name in ("batched", "paged", "prefix"):
                 lb, ub, fb = runners[name].step(subset, act)
                 np.testing.assert_array_equal(lb, lo, err_msg=f"{tag}: {name} labels")
                 np.testing.assert_array_equal(ub, uo, err_msg=f"{tag}: {name} unc")
@@ -259,7 +275,7 @@ def test_randomized_schedules_fuzz(fuzz_trio):
     """Hundreds of seeded random schedules: admits into random free slots,
     random step subsets (staggered positions), random active-ramp sets
     (including k=0 no-ramp steps), random retires and slot reuse — every
-    record bit-identical across batched/loop/paged runners."""
+    record bit-identical across batched/loop/paged/prefix runners."""
     rng = np.random.default_rng(0xA11CE)
     n_sites = fuzz_trio["batched"].n_sites
     for sched_id in range(N_SCHEDULES):
@@ -267,3 +283,12 @@ def test_randomized_schedules_fuzz(fuzz_trio):
     # the paged pool must be fully drained after every slot was freed
     alloc = fuzz_trio["paged"]._alloc
     assert alloc.live_blocks == 0 and alloc.n_free == alloc.n_blocks
+    # prefix runner: after freeing every slot, only cache pins keep
+    # blocks alive; clearing the cache must drain the pool completely
+    pr = fuzz_trio["prefix"]
+    assert pr.saved_blocks > 0 and pr.cow_copies > 0, "fuzz never exercised sharing"
+    pa = pr._alloc
+    assert int(pa.refcount.sum()) == pa.pins  # only cache refs remain
+    pr._prefix.clear()
+    assert pa.pins == 0
+    assert pa.live_blocks == 0 and pa.n_free == pa.n_blocks

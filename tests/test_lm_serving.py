@@ -44,6 +44,20 @@ def test_lm_token_runner_records(lm_setup):
     np.testing.assert_array_equal(v1, v2)
 
 
+def test_lm_runner_oversized_active_and_vanilla_n(lm_setup):
+    """Regressions (same contract as ClassifierRunner): an active set
+    larger than `max_slots` must raise instead of silently truncating the
+    record rows, and `vanilla_labels(0)` must return an empty array
+    instead of remapping 0 to the whole dataset."""
+    _, _, runner = lm_setup
+    with pytest.raises(ValueError):
+        runner.infer(np.arange(8), [0, 1, 2, 3])  # 4 sites > max_slots=3
+    assert runner.vanilla_labels(0).shape == (0,)
+    assert runner.vanilla_labels(0).dtype == np.int64
+    v = runner.vanilla_labels(16)
+    np.testing.assert_array_equal(v, runner.vanilla_labels(32)[:16])
+
+
 def test_lm_runner_sorts_unsorted_active(lm_setup):
     """Regression: ``LMTokenRunner.infer`` used to slice/pad the caller's
     active set verbatim, so an unsorted set mis-ordered record rows against

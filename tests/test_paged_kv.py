@@ -66,6 +66,131 @@ def test_allocator_random_schedules(trial):
         assert al.n_free == al.n_blocks and al.live_blocks == 0
 
 
+def _check_share_invariants(al: BlockAllocator, ref, pinned):
+    """The refcount invariants from the BlockAllocator docstring, checked
+    against an independent reference model (ref: slot -> id list in table
+    order, possibly with repeats across slots; pinned: pin-id multiset)."""
+    import collections
+
+    for s, ids in ref.items():
+        assert al.owned_ids(s) == ids, "table diverged from reference model"
+    refc = collections.Counter(b for ids in ref.values() for b in ids)
+    refc.update(pinned)
+    for b, c in refc.items():
+        assert 1 <= b <= al.n_blocks, "reference to invalid block id"
+    np.testing.assert_array_equal(
+        al.refcount[1:], [refc.get(b, 0) for b in range(1, al.n_blocks + 1)]
+    )
+    assert al.pins == len(pinned)
+    assert int(al.refcount.sum()) == int(al.owned.sum()) + al.pins
+    free = set(al._free)
+    assert len(free) == al.n_free, "duplicate id on the free heap"
+    assert all(al.refcount[b] == 0 for b in free), "block both free and referenced"
+    assert al.n_free + int((al.refcount > 0).sum()) == al.n_blocks, "pool leak"
+
+
+@pytest.mark.parametrize("trial", range(8))
+def test_allocator_sharing_random_schedules(trial):
+    """Sharing-era property fuzz (~40 schedules x 8 trials x ~25 ops):
+    random alloc/share/cow/pin/unpin/free schedules against a reference
+    model. After every op: refcounts equal the reference multiset,
+    refcount.sum() == owned.sum() + pins, the free heap is disjoint from
+    referenced blocks, and nothing leaks. Failed ops (exhaustion, cap)
+    must leave all of that untouched — the model is not updated on
+    failure, so any partial mutation trips the next check."""
+    for _ in range(40):
+        n_slots = int(RNG.integers(2, 6))
+        max_blocks = int(RNG.integers(2, 6))
+        n_blocks = int(RNG.integers(2, n_slots * max_blocks + 2))
+        al = BlockAllocator(n_blocks, max_blocks, n_slots)
+        ref = {s: [] for s in range(n_slots)}
+        pinned = []
+        for _ in range(int(RNG.integers(10, 30))):
+            s = int(RNG.integers(n_slots))
+            live = sorted({b for ids in ref.values() for b in ids} | set(pinned))
+            op = RNG.choice(["alloc", "share", "cow", "pin", "unpin", "free"])
+            if op == "alloc":
+                n = int(RNG.integers(1, max_blocks + 1))
+                try:
+                    ids = al.alloc(s, n)
+                except PoolExhausted:
+                    assert al.n_free < n
+                except ValueError:
+                    assert len(ref[s]) + n > max_blocks
+                else:
+                    ref[s].extend(ids)
+            elif op == "share" and live:
+                k = int(RNG.integers(1, min(len(live), max_blocks) + 1))
+                ids = [int(b) for b in RNG.choice(live, k, replace=False)]
+                try:
+                    al.share(s, ids)
+                except ValueError:
+                    assert len(ref[s]) + k > max_blocks
+                else:
+                    ref[s].extend(ids)
+            elif op == "cow" and ref[s]:
+                idx = int(RNG.integers(len(ref[s])))
+                try:
+                    old, new = al.cow(s, idx)
+                except PoolExhausted:
+                    assert al.n_free < 1
+                else:
+                    assert old == ref[s][idx] and new != old
+                    ref[s][idx] = new
+            elif op == "pin" and live:
+                b = int(RNG.choice(live))
+                al.pin(b)
+                pinned.append(b)
+            elif op == "unpin" and pinned:
+                b = pinned.pop(int(RNG.integers(len(pinned))))
+                al.unpin(b)
+            elif op == "free":
+                al.free_slot(s)
+                ref[s] = []
+            _check_share_invariants(al, ref, pinned)
+        for s in range(n_slots):
+            al.free_slot(s)
+        for b in pinned:
+            al.unpin(b)
+        assert al.n_free == al.n_blocks and al.pins == 0
+        assert (al.refcount == 0).all()
+
+
+def test_allocator_share_and_cow_refcounts():
+    """Deterministic walk of the sharing lifecycle: share bumps refcount,
+    cow gives the writer a private block (old keeps its other holders),
+    and a shared block outlives the slot that allocated it."""
+    al = BlockAllocator(6, max_blocks_per_slot=3, n_slots=3)
+    ids = al.alloc(0, 2)  # [1, 2]
+    al.share(1, ids)
+    assert al.owned_ids(1) == ids and al.refcount[1] == al.refcount[2] == 2
+    assert al.live_blocks == 2  # shared, not duplicated
+    old, new = al.cow(1, 0)
+    assert (old, new) == (1, 3)
+    assert al.owned_ids(1) == [3, 2] and al.owned_ids(0) == [1, 2]
+    assert al.refcount[1] == 1 and al.refcount[3] == 1 and al.refcount[2] == 2
+    al.free_slot(0)  # block 2 survives via slot 1's reference
+    assert al.refcount[2] == 1 and al.owned_ids(1) == [3, 2]
+    al.free_slot(1)
+    assert al.n_free == al.n_blocks
+
+
+def test_allocator_pin_keeps_block_alive():
+    al = BlockAllocator(3, max_blocks_per_slot=2, n_slots=2)
+    (b,) = al.alloc(0, 1)
+    al.pin(b)
+    al.free_slot(0)
+    assert al.refcount[b] == 1 and al.live_blocks == 1  # cache ref holds it
+    al.unpin(b)
+    assert al.live_blocks == 0
+    assert al.alloc(1, 1) == [b]  # recycled
+    # dead / reserved / out-of-range blocks cannot be shared or pinned
+    with pytest.raises(ValueError):
+        al.share(0, [3])
+    with pytest.raises(ValueError):
+        al.pin(0)
+
+
 def test_allocator_exhaustion_is_atomic():
     """A failing multi-block alloc must not mutate the table or free list."""
     al = BlockAllocator(4, max_blocks_per_slot=6, n_slots=2)
@@ -224,6 +349,35 @@ def test_runner_pool_exhaustion_raises_cleanly(paged_setup):
     assert r._alloc.n_free >= 2
     r.step([1], [0])
     assert r._pos[1] == 9
+
+
+def test_step_block_claim_is_all_or_nothing(paged_setup):
+    """Regression: a multi-slot step that exhausts the pool on a LATER
+    slot's append must not have claimed blocks for earlier slots. The old
+    per-slot append loop allocated slot 0's block before discovering slot
+    1 couldn't get one — the retried step then double-appended. The claim
+    is now precomputed for the whole batch and reserved atomically."""
+    from repro.serving import DecodeRunner
+
+    _, model, params, prompts = paged_setup
+    # prompt = 8 tokens = 2 blocks of 4; pool of 5: two started slots own
+    # 4 blocks, and the first decode step needs one append PER slot
+    r = DecodeRunner(model, params, prompts, max_new_tokens=8, max_slots=2,
+                     n_slots=4, kv_block_size=4, kv_blocks=5)
+    r.start(0, 0)
+    r.start(1, 1)
+    al = r._alloc
+    before = (al.table.copy(), al.owned.copy(), al.n_free, np.asarray(r._pos).copy())
+    with pytest.raises(PoolExhausted):
+        r.step([0, 1], [0])  # needs 2 appends, 1 free
+    np.testing.assert_array_equal(al.table, before[0])  # slot 0 untouched too
+    np.testing.assert_array_equal(al.owned, before[1])
+    assert al.n_free == before[2]
+    np.testing.assert_array_equal(np.asarray(r._pos), before[3])
+    # after the failed step the survivor path still works untainted
+    r.free(0)
+    r.step([1], [0])
+    assert int(np.asarray(r._pos)[1]) == 9
 
 
 def test_paged_memory_scales_with_live_tokens(paged_setup):

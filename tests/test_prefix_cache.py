@@ -1,0 +1,302 @@
+"""Prefix-sharing paged KV: trie hits, copy-on-write, swap preemption.
+
+The equivalence bar everywhere is BIT-IDENTITY against a private-blocks
+paged runner: shared prefix blocks hold KV produced by the same jit on
+the same inputs, a partial hit runs the SAME one-shot prefill program
+with cached chunks' scatters redirected to the trash block, CoW copies
+whole physical blocks, and a swap round-trip restores identical content
+into private blocks. Geometry note: ``kv_block_size`` must divide
+``prompt_len + max_new_tokens`` for paged-vs-paged bit-identity, while
+``prompt_len % kv_block_size != 0`` keeps a partial tail block in play
+(tail entries in the trie, CoW on the first decode append after a hit).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_tiny
+from repro.core import ApparateController, ControllerConfig, build_profile
+from repro.models import build_model
+from repro.serving import (
+    DecodeRunner,
+    GenerativeConfig,
+    GenerativeEngine,
+    GenRequest,
+    PoolExhausted,
+)
+
+MAX_NEW = 10  # cache_len = 14 + 10 = 24 = 6 blocks of 4 (bs | cache_len)
+KW = dict(max_new_tokens=MAX_NEW, max_slots=3, n_slots=4, kv_block_size=4)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_tiny("qwen2-1.5b").replace(n_layers=2, vocab_size=64, decode_attn="paged")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(9))
+    prompts = np.random.default_rng(10).integers(0, 64, (10, 14)).astype(np.int32)
+    prompts[3, :8] = prompts[2, :8]  # items 2/3 share a 2-block prefix
+    return cfg, model, params, prompts
+
+
+@pytest.fixture(scope="module")
+def pair(setup):
+    """(private, prefix) paged runners over the same model/params — jits
+    are identical, so records must match bit-for-bit. Module-scoped (a
+    fresh runner per test would recompile); tests free their slots and
+    compare counter DELTAS."""
+    _, model, params, prompts = setup
+    return (
+        DecodeRunner(model, params, prompts, **KW),
+        DecodeRunner(model, params, prompts, prefix_cache=True, **KW),
+    )
+
+
+def _steps_equal(pv, pr, sv, sr, n, act=(0,)):
+    for _ in range(n):
+        lv, uv, fv = pv.step(sv, list(act))
+        lr, ur, fr = pr.step(sr, list(act))
+        np.testing.assert_array_equal(lr, lv)
+        np.testing.assert_array_equal(ur, uv)
+        np.testing.assert_array_equal(fr, fv)
+
+
+def test_full_prefix_hit_is_free_and_bit_identical(pair):
+    """A repeated prompt costs ZERO device work (cached first token, no
+    prefill dispatch) and the sharing slot's decode records stay
+    bit-identical — including after copy-on-write moves both slots off
+    the shared tail block."""
+    pv, pr = pair
+    assert pv.start(0, 0) == pr.start(0, 0)  # cold: registers item 0
+    cache_obj = pr._cache
+    assert pv.start(1, 0) == pr.start(1, 0)  # hot: whole-prompt hit
+    assert pr._cache is cache_obj  # the hit touched no device state
+    st = pr.kv_stats()
+    assert st["prefix_hits"] == 1 and st["prefix_tokens_saved"] == 14
+    assert st["saved_blocks"] == 4  # 3 full chunks + the tail block
+    assert st["shared_blocks"] >= 4
+    # first decode append of each slot lands INSIDE the shared tail block
+    # (14 % 4 != 0) -> CoW; steps must stay bit-identical throughout
+    _steps_equal(pv, pr, [0, 1], [0, 1], 4)
+    assert pr.cow_copies >= 2  # both slots were moved off the shared tail
+    # sharing is real dedup: fewer live blocks than private for same state
+    assert pr._alloc.live_blocks < pv._alloc.live_blocks
+    # CoW never mutated the CACHED copy: a third slot still hits the full
+    # prompt and gets the same first token as a private prefill
+    assert pv.start(2, 0) == pr.start(2, 0)
+    assert pr.kv_stats()["prefix_hits"] == 2
+    for r in pair:
+        for s in (0, 1, 2):
+            r.free(s)
+
+
+def test_partial_prefix_hit_bit_identical(pair):
+    """Prompts sharing only a prefix share only those whole blocks: the
+    hit re-runs the one-shot prefill jit with the cached chunks' scatters
+    pointed at the trash block, so the slot state (and every subsequent
+    record) is bit-identical to a private prefill."""
+    pv, pr = pair
+    st0 = pr.kv_stats()
+    assert pv.start(0, 2) == pr.start(0, 2)  # cold
+    assert pv.start(1, 3) == pr.start(1, 3)  # shares blocks 0-1 (8 tokens)
+    st = pr.kv_stats()
+    assert st["prefix_hits"] - st0["prefix_hits"] == 1
+    assert st["prefix_tokens_saved"] - st0["prefix_tokens_saved"] == 8
+    assert st["saved_blocks"] - st0["saved_blocks"] == 2
+    shared2 = set(pr._alloc.owned_ids(0)[:2])
+    assert set(pr._alloc.owned_ids(1)[:2]) == shared2  # same physical ids
+    _steps_equal(pv, pr, [0, 1], [0, 1], 4)
+    for r in pair:
+        r.free(0)
+        r.free(1)
+
+
+def test_swap_round_trip_bit_identical(pair):
+    """swap_out -> swap_in (into a DIFFERENT slot) restores the stream's
+    blocks bit-identically, so the continued trajectory matches a runner
+    that never swapped. Guards: contiguous runners, dead slots, and
+    mid-prefill slots all refuse to swap."""
+    pv, pr = pair
+    assert pv.start(0, 4) == pr.start(0, 4)
+    _steps_equal(pv, pr, [0], [0], 2)
+    live0 = pr._alloc.live_blocks
+    h = pr.swap_out(0)
+    assert h["n_blocks"] == 4 and h["pos"] == 16  # writes 14/15 fit block 3
+    assert pr._alloc.live_blocks < live0  # the pool space is returned
+    with pytest.raises(KeyError):
+        pr.swap_out(0)  # already retired
+    pr.swap_in(3, h)
+    st = pr.kv_stats()
+    assert st["swap_outs"] >= 1 and st["swap_ins"] >= 1
+    assert st["swapped_blocks"] >= 4
+    _steps_equal(pv, pr, [0], [3], 4)  # continued stream is unchanged
+    pv.free(0)
+    pr.free(3)
+    # mid-prefill slots cannot swap (their pool blocks are half-filled)
+    assert pr.prefill_begin(1, 5, 4) is None
+    with pytest.raises(KeyError):
+        pr.swap_out(1)
+    pr.free(1)
+    cont = DecodeRunner(
+        build_model(pv.model.cfg.replace(decode_attn="ref")),
+        pv.params, pv.prompts, max_new_tokens=MAX_NEW,
+    )
+    with pytest.raises(ValueError):
+        cont.swap_out(0)
+
+
+def test_prefill_resume_rejects_nonpositive_chunks(pair):
+    """Regression (satellite): ``prefill_resume`` with a <1-token chunk
+    used to silently no-op — the engine's accounting then believed the
+    chunk was fed and the prefill never finished. It must raise."""
+    _, pr = pair
+    assert pr.prefill_begin(1, 6, 4) is None
+    for bad in (0, -3):
+        with pytest.raises(ValueError):
+            pr.prefill_resume(1, bad)
+    assert isinstance(pr.prefill_resume(1, 20), int)  # finishes cleanly
+    pr.free(1)
+
+
+def test_prefix_eviction_under_pressure(setup):
+    """A pool too small to cache every prompt evicts LRU cache-only
+    entries instead of failing admission: every start succeeds, evictions
+    are counted, and clearing the cache fully drains the pool."""
+    _, model, params, prompts = setup
+    r = DecodeRunner(model, params, prompts, prefix_cache=True,
+                     max_new_tokens=MAX_NEW, max_slots=3, n_slots=2,
+                     kv_block_size=4, kv_blocks=8)
+    first = {}
+    for item in range(6):  # 6 prompts x 4 blocks vs an 8-block pool
+        first[item] = r.start(0, item)
+        r.free(0)
+    st = r.kv_stats()
+    assert st["prefix_evictions"] > 0
+    assert st["pinned_blocks"] <= 8
+    # the most recent prompt survived eviction: still a full (free) hit
+    cache_obj = r._cache
+    assert r.start(0, 5) == first[5]
+    assert r._cache is cache_obj
+    r.free(0)
+    r._prefix.clear()
+    assert r._alloc.pins == 0 and r._alloc.live_blocks == 0
+
+
+def _engine_profile(model):
+    ns = len(model.sites)
+    prof_cfg = get_config("gpt2-medium").replace(n_classes=0, ramp_style="tied")
+    sites = [round((i + 1) * prof_cfg.n_layers / (ns + 1)) - 1 for i in range(ns)]
+    return build_profile(prof_cfg, mode="decode", chips=1, sites=sites, charge_kv=True)
+
+
+def test_engine_chunked_prefill_with_prefix_cache(setup):
+    """The engine's chunked-prefill path composes with prefix sharing:
+    cached whole chunks are skipped (priced via ``pf_skip``), every
+    prefill completes, and token conservation holds on a hot-prefix
+    request stream (each item requested twice)."""
+    _, model, params, prompts = setup
+    prof = _engine_profile(model)
+    runner = DecodeRunner(model, params, prompts, prefix_cache=True,
+                          max_new_tokens=MAX_NEW, max_slots=3, n_slots=4,
+                          kv_block_size=4)
+    ctl = ApparateController(len(model.sites), prof, ControllerConfig(max_slots=3))
+    reqs = [GenRequest(rid=k, arrival_ms=2.0 * k, slo_ms=float("inf"),
+                       item=k % 4, prompt_len=14, n_tokens=5)
+            for k in range(8)]
+    eng = GenerativeEngine(prof, GenerativeConfig(max_batch_size=3, prefill_chunk=6),
+                           runner, ctl)
+    resp = eng.run(reqs)
+    assert sum(len(r.tokens) for r in resp) == sum(q.n_tokens for q in reqs)
+    assert runner._pf_progress == {}  # every chunked prefill completed
+    st = runner.kv_stats()
+    assert st["prefix_hits"] > 0 and st["prefix_tokens_saved"] > 0
+
+
+def test_engine_swap_preemption_completes_what_shed_drops(setup):
+    """Acceptance: on a pool that fits only 2 of 4 admitted streams,
+    'shed' discards victims' work while 'swap' parks them in host memory
+    and finishes ALL streams — with final tokens identical to an
+    uncontended (full-pool) run."""
+    _, model, params, prompts = setup
+    prof = _engine_profile(model)
+    reqs = [GenRequest(rid=k, arrival_ms=0.0, slo_ms=float("inf"), item=k,
+                       prompt_len=14, n_tokens=6) for k in range(10)]
+
+    def run(preempt, kv_blocks):
+        runner = DecodeRunner(model, params, prompts, max_new_tokens=MAX_NEW,
+                              max_slots=3, n_slots=4, kv_block_size=4,
+                              kv_blocks=kv_blocks)
+        ctl = ApparateController(len(model.sites), prof, ControllerConfig(max_slots=3))
+        eng = GenerativeEngine(
+            prof, GenerativeConfig(max_batch_size=4, preempt=preempt), runner, ctl)
+        return eng, eng.run(reqs)
+
+    # a full stream needs ceil((14 + 6) / 4) = 5 blocks; 12 fit only 2
+    es, rs = run("shed", 12)
+    ew, rw = run("swap", 12)
+    eu, ru = run("none", None)
+    done = lambda rr: {r.rid: tuple(r.tokens) for r in rr if len(r.tokens) == 6}
+    assert len(done(ru)) == 10  # uncontended baseline serves everything
+    assert len(done(rs)) < 10 and es.n_preempt_sheds > 0  # shed loses work
+    assert len(done(rw)) == 10  # swap completes every stream
+    assert ew.n_preempt_swaps > 0 and ew.n_swap_ins > 0
+    assert done(rw) == done(ru)  # swapped trajectories are unchanged
+    st = ew.stats()
+    assert st["preempt_swaps"] == ew.n_preempt_swaps
+    assert st["swap_ins"] == ew.n_swap_ins
+
+
+def test_zero_token_shed_keeps_metrics_finite(setup):
+    """A mid-prefill preemption victim is shed with NO released tokens;
+    ``summarize_generative`` must count it under ``shed`` without
+    indexing its empty ``release_ms`` (regression: IndexError when
+    --prefill-chunk, --admission and --preempt met on a tight pool)."""
+    from repro.serving.metrics import summarize_generative
+    from repro.serving.request import GenResponse
+
+    # unit repro: one normal stream + one zero-token shed
+    ok = GenResponse(rid=0, arrival_ms=0.0, release_ms=[1.0, 2.0],
+                     exit_sites=[-1, -1], tokens=[3, 4], final_tokens=[3, 4],
+                     worker=0, slo_ms=float("inf"))
+    cut = GenResponse(rid=1, arrival_ms=0.0, release_ms=[], exit_sites=[],
+                      tokens=[], final_tokens=[], worker=0,
+                      slo_ms=float("inf"), shed=True)
+    mo = summarize_generative([ok, cut])
+    assert mo["n"] == 2.0 and mo["shed"] == 1.0 and mo["tokens"] == 2.0
+    assert np.isfinite(mo["ttft_p50_ms"])
+    only = summarize_generative([cut])  # every voiced stream gone
+    assert only["shed"] == 1.0 and only["tokens"] == 0.0
+
+    # engine repro: chunked prefill + swap preemption on a pool too small
+    # for concurrent prefills forces the prefilling-victim shed path
+    _, model, params, prompts = setup
+    prof = _engine_profile(model)
+    runner = DecodeRunner(model, params, prompts, max_new_tokens=MAX_NEW,
+                          max_slots=3, n_slots=4, kv_block_size=4,
+                          kv_blocks=8)
+    ctl = ApparateController(len(model.sites), prof, ControllerConfig(max_slots=3))
+    eng = GenerativeEngine(
+        prof, GenerativeConfig(max_batch_size=4, preempt="swap",
+                               prefill_chunk=5), runner, ctl)
+    reqs = [GenRequest(rid=k, arrival_ms=0.0, slo_ms=float("inf"), item=k,
+                       prompt_len=14, n_tokens=6) for k in range(8)]
+    resp = eng.run(reqs)
+    mo = summarize_generative(resp, horizon_ms=eng.makespan_ms)
+    assert mo["n"] == 8.0  # every admitted stream is accounted for
+    zero_shed = [r for r in resp if r.shed and not r.release_ms]
+    assert eng.n_preempt_sheds >= len(zero_shed)
+    assert all(np.isfinite(v) for v in mo.values())
+
+
+def test_serve_flags_require_paged():
+    from repro.launch.serve import serve_generative
+
+    with pytest.raises(ValueError):
+        serve_generative(n=2, prefix_cache=True)
+    with pytest.raises(ValueError):
+        serve_generative(n=2, preempt="swap")
+    # runner-level analogue of the same contract
+    ref = build_model(get_tiny("qwen2-1.5b").replace(
+        n_layers=2, vocab_size=64, decode_attn="ref"))
+    with pytest.raises(ValueError):
+        DecodeRunner(ref, None, np.zeros((1, 4), np.int32), prefix_cache=True)

@@ -116,6 +116,34 @@ def test_classifier_runner_no_ramp_compiled_variant():
     assert runner.compiles == 1 and runner.noramp_compiles == 1
 
 
+def test_classifier_runner_oversized_active_and_vanilla_n():
+    """Regressions: (a) `infer` used to silently truncate the active ramp
+    set to `max_slots` — the controller got fewer record rows than sites
+    it activated, landing rows against the wrong sites; it must raise.
+    (b) `vanilla_labels(0)` used to remap to the WHOLE dataset via
+    `n or len(data)` — an explicit 0 must mean an empty array."""
+    import jax
+
+    from repro.configs import get_tiny
+    from repro.models import build_model
+    from repro.serving import ClassifierRunner
+
+    cfg = get_tiny("resnet18")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    data = np.random.default_rng(2).normal(
+        0, 1, (5, cfg.img_size, cfg.img_size, 3)).astype(np.float32)
+    runner = ClassifierRunner(model, params, data, max_slots=1)
+    with pytest.raises(ValueError):
+        runner.infer(np.arange(4), [0, 1])  # 2 sites > max_slots=1
+    assert runner.compiles == 0  # the rejected call compiled nothing
+    assert runner.vanilla_labels(0).shape == (0,)
+    assert runner.vanilla_labels(0).dtype == np.int64
+    full = runner.vanilla_labels()  # None still means the whole stream
+    assert full.shape == (5,)
+    np.testing.assert_array_equal(runner.vanilla_labels(4), full[:4])
+
+
 def test_synthetic_runner_hard_items_cost_accuracy_when_forced_open():
     """Regression: `SyntheticRunner.infer` used to tile the original
     model's label into every ramp row, so "hard" items still AGREED and
