@@ -1,0 +1,34 @@
+"""Static analysis for the repo's documented contracts.
+
+Two passes, both device-free and fast enough for every CI run:
+
+* **AST invariant linter** (``repro.analysis.lint`` + ``repro.analysis.rules``)
+  — pluggable ``ast``-based rules over ``src/`` and ``tests/`` enforcing the
+  contracts ROADMAP.md records but reviewers previously enforced by hand:
+  compat shims only in ``repro/compat.py`` / ``launch/mesh.py``, tier-1 test
+  imports restricted to stdlib+numpy+jax+pytest+repro, seeded RNG only,
+  no wall-clock reads in discrete-event serving code, jit cache hygiene,
+  and kernel/ref pairing. Findings are suppressible per line via
+  ``# repro: allow[rule-id]`` pragmas or per file via the allowlist in
+  ``repro.analysis.lint``.
+
+* **Abstract support audit** (``repro.analysis.abstract``) — traces every
+  registered model config through each serving feature path under
+  ``jax.eval_shape`` (zero device execution) and classifies each
+  config × path cell as ``supported`` / ``rejected`` (explicit
+  ``NotImplementedError``) / ``shape-error`` (a bug). The result is the
+  generated ``SUPPORT_MATRIX.md`` + ``support_matrix.json`` snapshots at the
+  repo root; CI re-derives the matrix and fails on any regression.
+
+Entry point: ``python -m repro.analysis [--lint] [--audit] [--write]``.
+"""
+from __future__ import annotations
+
+from repro.analysis.lint import Finding, LintResult, run_lint  # noqa: F401
+from repro.analysis.abstract import (  # noqa: F401
+    FEATURE_PATHS,
+    audit_config,
+    audit_all,
+    compare_matrices,
+    render_markdown,
+)

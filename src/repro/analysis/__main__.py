@@ -1,0 +1,112 @@
+"""CLI: ``python -m repro.analysis [--lint] [--audit] [--write]``.
+
+With neither ``--lint`` nor ``--audit``, runs both. Exit code 0 iff every
+requested pass is clean:
+
+* lint — zero unsuppressed findings (and zero unparseable files);
+* audit — zero ``shape-error`` cells AND the derived matrix's statuses
+  match the committed ``support_matrix.json`` snapshot. ``--write``
+  regenerates ``SUPPORT_MATRIX.md`` + ``support_matrix.json`` instead of
+  diffing (commit the result).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+MATRIX_MD = "SUPPORT_MATRIX.md"
+MATRIX_JSON = "support_matrix.json"
+
+
+def _default_root() -> Path:
+    # src/repro/analysis/__main__.py -> repo root
+    return Path(__file__).resolve().parents[3]
+
+
+def run_lint_pass(root: Path) -> int:
+    from repro.analysis.lint import run_lint
+
+    res = run_lint(root)
+    for err in res.errors:
+        print(f"lint: ERROR {err}")
+    for f in res.findings:
+        print(f.format())
+    print(
+        f"lint: {len(res.findings)} finding(s), {res.n_suppressed} suppressed, "
+        f"{res.n_files} files"
+    )
+    return 0 if res.clean else 1
+
+
+def run_audit_pass(root: Path, write: bool) -> int:
+    from repro.analysis.abstract import (
+        audit_all,
+        compare_matrices,
+        render_markdown,
+        shape_error_cells,
+        to_json,
+    )
+
+    matrix = audit_all()
+    fresh = to_json(matrix)
+    bugs = shape_error_cells(matrix)
+    for c in bugs:
+        print(f"audit: SHAPE-ERROR {c.config} × {c.path}: {c.detail}")
+
+    md_path, json_path = root / MATRIX_MD, root / MATRIX_JSON
+    if write:
+        md_path.write_text(render_markdown(matrix))
+        json_path.write_text(json.dumps(fresh, indent=2, sort_keys=True) + "\n")
+        print(f"audit: wrote {md_path.name} + {json_path.name}")
+        return 1 if bugs else 0
+
+    if not json_path.is_file():
+        print(f"audit: no committed {MATRIX_JSON} — run with --write and commit it")
+        return 1
+    committed = json.loads(json_path.read_text())
+    problems = compare_matrices(committed, fresh)
+    for p in problems:
+        print(f"audit: {p}")
+    n_cells = sum(len(v) for v in fresh["configs"].values())
+    print(
+        f"audit: {len(fresh['configs'])} configs × {len(fresh['paths'])} paths "
+        f"({n_cells} cells), {len(bugs)} shape-error(s), {len(problems)} drift(s)"
+    )
+    if problems:
+        print("audit: matrix drifted — if intended, regenerate with "
+              "`python -m repro.analysis --audit --write` and commit")
+    return 1 if (bugs or problems) else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--lint", action="store_true", help="run the AST invariant linter")
+    ap.add_argument("--audit", action="store_true", help="run the eval_shape support audit")
+    ap.add_argument("--write", action="store_true",
+                    help="with --audit: regenerate the committed matrix snapshots")
+    ap.add_argument("--list-rules", action="store_true", help="list lint rule ids and exit")
+    ap.add_argument("--root", type=Path, default=None, help="repo root (default: auto)")
+    args = ap.parse_args(argv)
+
+    root = args.root or _default_root()
+    if args.list_rules:
+        from repro.analysis.rules import all_rules
+
+        for r in all_rules():
+            print(f"{r.id}: {r.doc}")
+        return 0
+
+    do_lint = args.lint or not (args.lint or args.audit)
+    do_audit = args.audit or not (args.lint or args.audit)
+    rc = 0
+    if do_lint:
+        rc |= run_lint_pass(root)
+    if do_audit:
+        rc |= run_audit_pass(root, write=args.write)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

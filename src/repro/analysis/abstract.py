@@ -1,0 +1,366 @@
+"""Abstract (``jax.eval_shape``) config × feature-path support audit.
+
+Traces every registered architecture config through each serving feature
+path with **zero device execution**: model parameters and caches enter as
+``jax.ShapeDtypeStruct`` avals (via the schemas' ``abstract_from_schema``)
+and the whole probe runs under ``jax.eval_shape``, so nothing is lowered,
+compiled, or dispatched. Each (config, path) cell is classified:
+
+* ``supported``   — the trace completes; the path exists for this config;
+* ``rejected``    — the model raised an explicit ``NotImplementedError``
+  (a *documented* gap: e.g. paged KV over mamba/MLA/ring slots), or the
+  path is structurally n/a for the family (classifiers have no decode);
+* ``shape-error`` — any *other* exception: a silent support gap or shape
+  bug. These fail the audit unconditionally.
+
+The result is rendered to ``SUPPORT_MATRIX.md`` + ``support_matrix.json``
+at the repo root; CI re-derives the matrix on every run and fails when any
+cell's *status* changed vs the committed snapshot (details/messages are
+excluded from the diff so wording changes don't churn CI). Regenerate with
+``python -m repro.analysis --audit --write``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, PAPER_IDS, get_config
+from repro.models import build_model
+from repro.models.common import abstract_from_schema
+
+# Probe sizes: tiny batch/seq so traced constants (e.g. the zero-filled
+# cache prefill materializes) stay negligible; model *weights* are always
+# abstract, so the full published widths/depths trace for free.
+B = 2  # batch (slots)
+S = 8  # prompt length
+CHUNK = 4  # chunked-prefill first-chunk length (< CACHE_LEN)
+CACHE_LEN = 16  # decode cache length
+N_FRAMES = 8  # enc-dec source frames
+BLOCK_SIZE = 4  # paged KV tokens per block
+N_BLOCKS = 16  # paged KV pool blocks
+MAX_BLOCKS = CACHE_LEN // BLOCK_SIZE  # per-row block-table width
+
+STATUS_SUPPORTED = "supported"
+STATUS_REJECTED = "rejected"
+STATUS_ERROR = "shape-error"
+
+# (path id, one-line description) — column order of the matrix.
+FEATURE_PATHS: Tuple[Tuple[str, str], ...] = (
+    ("prefill", "full-prompt prefill (or single-shot forward for classifier families)"),
+    ("decode_dense", "single-token decode, dense masked-sdpa cache attention"),
+    ("decode_kernel", "single-token decode through kernels/decode_attention (flash-decode)"),
+    ("decode_paged", "single-token decode over the paged block-pool cache"),
+    ("chunked_prefill", "first-chunk prefill into a cache longer than the chunk"),
+    ("paged_block_schema", "paged (block-pool) cache schema construction"),
+    ("ramp_heads", "forward with active early-exit ramp heads"),
+)
+PATH_IDS = tuple(p for p, _ in FEATURE_PATHS)
+
+ALL_CONFIG_IDS = tuple(PAPER_IDS) + tuple(ARCH_IDS)
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    config: str
+    path: str
+    status: str
+    detail: str = ""
+
+
+def _aval(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _tokens(cfg, b, s):
+    return _aval((b, s), jnp.int32)
+
+
+def _image_embeds(cfg, b):
+    return _aval((b, cfg.n_image_tokens, cfg.d_frontend), jnp.float32)
+
+
+def _frames(cfg, b):
+    return _aval((b, N_FRAMES, cfg.d_frontend), jnp.float32)
+
+
+def _routed_attn_slots(model) -> List:
+    """Slots whose single-token decode goes through kernels/decode_attention
+    (transformer._block: local windowed layers keep the dense path)."""
+    cfg = model.cfg
+    return [
+        s
+        for s in model.plan.layer_specs()
+        if s.mixer == "attn" and not (s.is_local and cfg.window)
+    ]
+
+
+def _lm_prefill(model, cfg, *, s, cache_len, active=None):
+    params = abstract_from_schema(model.schema())
+    extra = {}
+    if cfg.cross_attn_every:
+        extra["image_embeds"] = _image_embeds(cfg, B)
+
+    def fn(p, toks, act=None, **kw):
+        return model.prefill(
+            p, toks, cache_len=cache_len, active_sites=act,
+            moe_impl="dense", with_cache=True, **kw,
+        )
+
+    args = [params, _tokens(cfg, B, s)]
+    if active is not None:
+        args.append(jnp.arange(active, dtype=jnp.int32))
+    else:
+        args.append(None)
+    return jax.eval_shape(fn, *args, **extra)
+
+
+def _lm_decode(cfg, *, decode_attn, paged=False, active=None):
+    model = build_model(cfg.replace(decode_attn=decode_attn))
+    params = abstract_from_schema(model.schema())
+    if paged:
+        cache = abstract_from_schema(
+            model.paged_cache_schema(N_BLOCKS, BLOCK_SIZE)
+        )  # raises NotImplementedError for non-pageable slots
+        tables = _aval((B, MAX_BLOCKS), jnp.int32)
+        pos = _aval((B,), jnp.int32)
+
+        def fn(p, c, toks, po, tb, act):
+            return model.decode(
+                p, c, toks, po, active_sites=act, moe_impl="dense", block_tables=tb,
+            )
+
+        args = (params, cache, _tokens(cfg, B, 1), pos, tables)
+    else:
+        cache = abstract_from_schema(model.cache_schema(B, CACHE_LEN))
+        pos = _aval((B,), jnp.int32)
+
+        def fn(p, c, toks, po, act):
+            return model.decode(p, c, toks, po, active_sites=act, moe_impl="dense")
+
+        args = (params, cache, _tokens(cfg, B, 1), pos)
+    act = jnp.arange(active, dtype=jnp.int32) if active else None
+    return jax.eval_shape(fn, *args, act)
+
+
+def _encdec_prefill(model, cfg, *, s, cache_len, active=None):
+    params = abstract_from_schema(model.schema())
+    act = jnp.arange(active, dtype=jnp.int32) if active else None
+
+    def fn(p, fr, toks):
+        return model.prefill(p, fr, toks, cache_len=cache_len, active_sites=act)
+
+    return jax.eval_shape(fn, params, _frames(cfg, B), _tokens(cfg, B, s))
+
+
+def _n_active(model) -> int:
+    sites = getattr(model, "sites", ())
+    if not sites:
+        raise NotImplementedError("config has no feasible ramp sites")
+    return min(2, len(sites))
+
+
+def probe(cfg, path: str) -> None:
+    """Run one (config, path) probe; raises on rejection/bug, returns on
+    success. Everything traces under ``jax.eval_shape`` — no device work."""
+    family = cfg.family
+    model = build_model(cfg)
+
+    if family == "lm":
+        if path == "prefill":
+            _lm_prefill(model, cfg, s=S, cache_len=S)
+        elif path == "decode_dense":
+            _lm_decode(cfg, decode_attn="dense")
+        elif path == "decode_kernel":
+            if not _routed_attn_slots(model):
+                raise NotImplementedError(
+                    "no full-attention layers route through kernels/decode_attention "
+                    "(every slot is MLA, mamba, or local-windowed)"
+                )
+            _lm_decode(cfg, decode_attn="kernel")
+        elif path == "decode_paged":
+            _lm_decode(cfg, decode_attn="paged", paged=True)
+        elif path == "chunked_prefill":
+            _lm_prefill(model, cfg, s=CHUNK, cache_len=CACHE_LEN)
+        elif path == "paged_block_schema":
+            model.paged_cache_schema(N_BLOCKS, BLOCK_SIZE)
+        elif path == "ramp_heads":
+            _lm_prefill(model, cfg, s=S, cache_len=S, active=_n_active(model))
+        return
+
+    if family == "encdec":
+        if path == "prefill":
+            _encdec_prefill(model, cfg, s=S, cache_len=S)
+        elif path == "decode_dense":
+            params = abstract_from_schema(model.schema())
+            cache, _ = _encdec_prefill(model, cfg, s=S, cache_len=CACHE_LEN)
+
+            def fn(p, c, toks, po):
+                return model.decode(p, c, toks, po, active_sites=None)
+
+            jax.eval_shape(fn, params, cache, _tokens(cfg, B, 1), _aval((), jnp.int32))
+        elif path == "decode_kernel":
+            raise NotImplementedError(
+                "enc-dec decoder wires dense cache attention only (no decode_impl)"
+            )
+        elif path in ("decode_paged", "paged_block_schema"):
+            raise NotImplementedError("enc-dec caches are built by prefill; no paged layout")
+        elif path == "chunked_prefill":
+            _encdec_prefill(model, cfg, s=CHUNK, cache_len=CACHE_LEN)
+        elif path == "ramp_heads":
+            _encdec_prefill(model, cfg, s=S, cache_len=S, active=_n_active(model))
+        return
+
+    if family in ("encoder_cls", "resnet"):
+        if family == "encoder_cls":
+            x = _tokens(cfg, B, S)
+        else:
+            x = _aval((B, cfg.img_size, cfg.img_size, 3), jnp.float32)
+        params = abstract_from_schema(model.schema())
+        if path == "prefill":
+            jax.eval_shape(lambda p, xx: model.forward(p, xx), params, x)
+        elif path == "ramp_heads":
+            active = list(model.sites[: _n_active(model)])
+            jax.eval_shape(
+                lambda p, xx: model.forward(p, xx, active_sites=active), params, x
+            )
+        else:
+            raise NotImplementedError(
+                f"{family} family is single-shot (no decode / incremental prefill)"
+            )
+        return
+
+    raise NotImplementedError(f"unknown family {family!r}")
+
+
+_WS = re.compile(r"\s+")
+
+
+def _clip(msg: str, n: int = 200) -> str:
+    msg = _WS.sub(" ", msg).strip()
+    return msg if len(msg) <= n else msg[: n - 1] + "…"
+
+
+def audit_config(name: str, paths: Sequence[str] = PATH_IDS) -> Dict[str, Cell]:
+    cfg = get_config(name)
+    out: Dict[str, Cell] = {}
+    for path in paths:
+        try:
+            probe(cfg, path)
+        except NotImplementedError as e:
+            out[path] = Cell(name, path, STATUS_REJECTED, _clip(str(e) or "not implemented"))
+        except Exception as e:  # noqa: BLE001 — any other failure IS the signal
+            out[path] = Cell(name, path, STATUS_ERROR, _clip(f"{type(e).__name__}: {e}"))
+        else:
+            out[path] = Cell(name, path, STATUS_SUPPORTED)
+    return out
+
+
+def audit_all(configs: Optional[Sequence[str]] = None) -> Dict[str, Dict[str, Cell]]:
+    return {name: audit_config(name) for name in (configs or ALL_CONFIG_IDS)}
+
+
+# -- snapshot (json) ---------------------------------------------------------
+
+
+def to_json(matrix: Dict[str, Dict[str, Cell]]) -> dict:
+    return {
+        "schema_version": 1,
+        "probe": {
+            "B": B, "S": S, "chunk": CHUNK, "cache_len": CACHE_LEN,
+            "n_blocks": N_BLOCKS, "block_size": BLOCK_SIZE,
+        },
+        "paths": list(PATH_IDS),
+        "configs": {
+            name: {
+                p: {"status": c.status, **({"detail": c.detail} if c.detail else {})}
+                for p, c in cells.items()
+            }
+            for name, cells in matrix.items()
+        },
+    }
+
+
+def compare_matrices(committed: dict, fresh: dict) -> List[str]:
+    """Status-only diff. Returns human-readable drift lines; empty == pass.
+    ``supported`` -> anything is a *regression*; other changes are drift
+    (also failing — the snapshot must be regenerated deliberately)."""
+    problems: List[str] = []
+    old_cfgs = committed.get("configs", {})
+    new_cfgs = fresh.get("configs", {})
+    for name in sorted(set(old_cfgs) | set(new_cfgs)):
+        if name not in new_cfgs:
+            problems.append(f"{name}: config disappeared from the audit")
+            continue
+        if name not in old_cfgs:
+            problems.append(f"{name}: new config not in committed snapshot (run --write)")
+            continue
+        old_cells, new_cells = old_cfgs[name], new_cfgs[name]
+        for path in sorted(set(old_cells) | set(new_cells)):
+            old = old_cells.get(path, {}).get("status")
+            new = new_cells.get(path, {}).get("status")
+            if old == new:
+                continue
+            kind = "REGRESSION" if old == STATUS_SUPPORTED else "drift"
+            problems.append(f"{kind}: {name} × {path}: {old} -> {new}")
+    return problems
+
+
+def shape_error_cells(matrix: Dict[str, Dict[str, Cell]]) -> List[Cell]:
+    return [
+        c for cells in matrix.values() for c in cells.values()
+        if c.status == STATUS_ERROR
+    ]
+
+
+# -- markdown ----------------------------------------------------------------
+
+_GLYPH = {STATUS_SUPPORTED: "✓", STATUS_REJECTED: "—", STATUS_ERROR: "✗ BUG"}
+
+
+def render_markdown(matrix: Dict[str, Dict[str, Cell]]) -> str:
+    lines = [
+        "# Config × feature-path support matrix",
+        "",
+        "<!-- GENERATED by `python -m repro.analysis --audit --write` — do not edit. -->",
+        "",
+        "Derived entirely under `jax.eval_shape` (abstract shapes, zero device",
+        "execution). `✓` = path traces for this config; `—` = explicit",
+        "`NotImplementedError` (documented gap); `✗ BUG` = unexpected",
+        "shape/trace error — fails CI.",
+        "",
+        f"Probe sizes: B={B}, S={S}, chunk={CHUNK}, cache_len={CACHE_LEN}, "
+        f"paged pool {N_BLOCKS}×{BLOCK_SIZE} tokens.",
+        "",
+    ]
+    header = ["config"] + [p for p in PATH_IDS]
+    lines.append("| " + " | ".join(header) + " |")
+    lines.append("|" + "---|" * len(header))
+    for name in matrix:
+        cells = matrix[name]
+        row = [name] + [_GLYPH.get(cells[p].status, "?") for p in PATH_IDS]
+        lines.append("| " + " | ".join(row) + " |")
+    lines += ["", "## Feature paths", ""]
+    for pid, desc in FEATURE_PATHS:
+        lines.append(f"- **{pid}** — {desc}")
+    lines += ["", "## Rejected cells (explicit `NotImplementedError`)", ""]
+    any_rej = False
+    for name, cells in matrix.items():
+        for p in PATH_IDS:
+            c = cells[p]
+            if c.status == STATUS_REJECTED:
+                any_rej = True
+                lines.append(f"- `{name}` × `{p}`: {c.detail}")
+    if not any_rej:
+        lines.append("(none)")
+    err = [c for cells in matrix.values() for c in cells.values() if c.status == STATUS_ERROR]
+    if err:
+        lines += ["", "## Shape errors (BUGS)", ""]
+        for c in err:
+            lines.append(f"- `{c.config}` × `{c.path}`: {c.detail}")
+    lines.append("")
+    return "\n".join(lines)

@@ -1,0 +1,46 @@
+"""Rule registry for the AST invariant linter.
+
+A rule is an object with:
+
+* ``id`` — stable kebab-case identifier (used in findings and pragmas);
+* ``doc`` — one-line contract statement (rendered in README / --list);
+* ``scope`` — ``"file"`` (default; ``check(file)`` called per file) or
+  ``"project"`` (``check_project(files, root)`` called once with every
+  parsed file — for cross-file contracts like kernel/ref pairing);
+* ``check`` / ``check_project`` — generators of ``Finding``s.
+
+Register with the ``@register`` decorator; ``all_rules()`` returns one
+instance of each in registration order.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Type
+
+_REGISTRY: Dict[str, Type] = {}
+
+
+def register(cls: Type) -> Type:
+    rid = cls.id
+    if rid in _REGISTRY:
+        raise ValueError(f"duplicate rule id {rid!r}")
+    _REGISTRY[rid] = cls
+    return cls
+
+
+def all_rules() -> List:
+    # import for side effect: each module registers its rule class
+    from repro.analysis.rules import (  # noqa: F401
+        compat_shim,
+        jit_cache,
+        kernel_pairing,
+        no_wallclock,
+        seeded_rng,
+        tier1_deps,
+    )
+
+    return [cls() for cls in _REGISTRY.values()]
+
+
+def rule_ids() -> List[str]:
+    all_rules()
+    return list(_REGISTRY)

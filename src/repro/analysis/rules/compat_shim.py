@@ -1,0 +1,80 @@
+"""``compat-shim``: JAX version sniffing belongs in ``repro.compat``.
+
+ROADMAP test-suite policy: "JAX-version differences ... are absorbed in
+``repro.compat`` / ``repro.launch.mesh.make_mesh`` — never inline
+``hasattr`` checks at call sites." This rule flags, everywhere else:
+
+* ``hasattr``/``getattr`` probes whose object is rooted at ``jax`` /
+  ``jaxlib`` (``hasattr(jax, "shard_map")``, ``hasattr(jax.sharding, ...)``);
+* ``jax.__version__`` / ``jaxlib.__version__`` reads;
+* ``hasattr(<obj>, "<sentinel>")`` where the probed attribute is a known
+  cross-version API sentinel (``shard_map``, ``AxisType``, ``check_vma``,
+  ``check_rep``, and ``get`` — the old-vs-new ``Mesh.shape`` mapping probe
+  that ``moe.py`` once inlined).
+
+Duck-typing probes like ``hasattr(x, "shape")`` or capability checks on
+repo objects (``hasattr(runner, "swap_out")``) are NOT flagged.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import SourceFile, dotted_name
+from repro.analysis.rules import register
+
+# Attribute names whose presence differs across the JAX versions the repo
+# supports; probing for them outside repro.compat is version sniffing even
+# when the probed object isn't literally the `jax` module (e.g. Mesh.shape).
+VERSION_SENTINELS = frozenset({"shard_map", "AxisType", "check_vma", "check_rep", "get"})
+
+
+def _root(node: ast.AST) -> str:
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else ""
+
+
+@register
+class CompatShimRule:
+    id = "compat-shim"
+    doc = (
+        "JAX version probes (hasattr(jax, ...), jax.__version__, Mesh.shape "
+        "API sniffing) only in repro/compat.py and launch/mesh.py"
+    )
+    scope = "file"
+
+    def check(self, file: SourceFile):
+        for node in ast.walk(file.tree):
+            if isinstance(node, ast.Call):
+                name = dotted_name(node.func)
+                if name in ("hasattr", "getattr") and node.args:
+                    obj = node.args[0]
+                    root = _root(obj)
+                    probe = (
+                        node.args[1].value
+                        if len(node.args) > 1
+                        and isinstance(node.args[1], ast.Constant)
+                        and isinstance(node.args[1].value, str)
+                        else None
+                    )
+                    if root in ("jax", "jaxlib"):
+                        yield file.finding(
+                            self.id,
+                            node,
+                            f"{name}() probe on {dotted_name(obj) or root!s} — "
+                            "route JAX version differences through repro.compat",
+                        )
+                    elif name == "hasattr" and probe in VERSION_SENTINELS:
+                        yield file.finding(
+                            self.id,
+                            node,
+                            f"hasattr(..., {probe!r}) sniffs a cross-version JAX "
+                            "API — add a helper to repro.compat instead",
+                        )
+            elif isinstance(node, ast.Attribute) and node.attr == "__version__":
+                if _root(node.value) in ("jax", "jaxlib"):
+                    yield file.finding(
+                        self.id,
+                        node,
+                        "jax.__version__ read — version branches live in repro.compat",
+                    )

@@ -1,0 +1,174 @@
+"""``jit-cache-hygiene``: jit call-sites that defeat or poison the trace cache.
+
+``jax.jit``'s cache is keyed on the *function object* plus abstract
+argument signatures. Patterns that silently recompile every call:
+
+* ``jax.jit(lambda ...)`` — a fresh lambda object per evaluation of the
+  enclosing expression, so the cache never hits;
+* ``jax.jit(f)(x)`` / ``jax.jit(f).lower(...)`` — a fresh jitted wrapper
+  built and immediately invoked, same effect;
+* ``@jax.jit`` on a *nested* ``def`` — a new function object (and cache)
+  per call of the enclosing function. Legitimate when the enclosing code
+  memoizes the wrapper (the serving runners key them per cache-layout in
+  ``self._fns``-style dicts) — annotate those sites with
+  ``# repro: allow[jit-cache-hygiene]`` and a why-note.
+
+Also flagged, because it raises ``TracerBoolConversionError`` at trace
+time (or worse, silently bakes in a branch if the arg is weakly typed):
+
+* ``if x:`` / ``while x:`` truthiness tests on a bare parameter of a
+  jitted function when that parameter is not in ``static_argnames`` /
+  ``static_argnums``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import FrozenSet, Optional, Set, Tuple
+
+from repro.analysis.lint import SourceFile, dotted_name
+from repro.analysis.rules import register
+
+_JIT_NAMES = ("jax.jit", "jit")
+_PARTIAL_NAMES = ("partial", "functools.partial")
+
+
+def _is_jit(node: ast.AST) -> bool:
+    return dotted_name(node) in _JIT_NAMES
+
+
+def _str_values(node: ast.AST) -> Set[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        out: Set[str] = set()
+        for elt in node.elts:
+            out |= _str_values(elt)
+        return out
+    return set()
+
+
+def _int_values(node: ast.AST) -> Set[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        out: Set[int] = set()
+        for elt in node.elts:
+            out |= _int_values(elt)
+        return out
+    return set()
+
+
+def _jit_decorator(dec: ast.AST) -> Tuple[bool, Optional[ast.Call]]:
+    """(is_jit, the Call carrying static_arg* kwargs if any)."""
+    if _is_jit(dec):
+        return True, None
+    if isinstance(dec, ast.Call):
+        if _is_jit(dec.func):
+            return True, dec
+        if dotted_name(dec.func) in _PARTIAL_NAMES and dec.args and _is_jit(dec.args[0]):
+            return True, dec
+    return False, None
+
+
+def _static_params(call: Optional[ast.Call], fndef: ast.FunctionDef) -> FrozenSet[str]:
+    names: Set[str] = set()
+    nums: Set[int] = set()
+    if call is not None:
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                names |= _str_values(kw.value)
+            elif kw.arg == "static_argnums":
+                nums |= _int_values(kw.value)
+    params = [a.arg for a in fndef.args.posonlyargs + fndef.args.args]
+    for i in nums:
+        if 0 <= i < len(params):
+            names.add(params[i])
+    return frozenset(names)
+
+
+@register
+class JitCacheRule:
+    id = "jit-cache-hygiene"
+    doc = (
+        "no jax.jit(lambda)/jax.jit(f)(x) fresh-wrapper call-sites, no @jax.jit "
+        "on nested defs (unless memoized + pragma'd), no truthiness branches on "
+        "traced params"
+    )
+    scope = "file"
+
+    def check(self, file: SourceFile):
+        for node in ast.walk(file.tree):
+            if isinstance(node, ast.Call):
+                fn = dotted_name(node.func)
+                if fn in _JIT_NAMES and node.args and isinstance(node.args[0], ast.Lambda):
+                    yield file.finding(
+                        self.id,
+                        node,
+                        "jax.jit(lambda ...) builds a fresh function object each "
+                        "evaluation — the trace cache never hits; def + decorate "
+                        "at module scope instead",
+                    )
+                elif isinstance(node.func, ast.Call) and _is_jit(node.func.func):
+                    yield file.finding(
+                        self.id,
+                        node,
+                        "jax.jit(f)(...) creates and invokes a throwaway jitted "
+                        "wrapper — recompiles every call; bind the wrapper once",
+                    )
+            elif isinstance(node, ast.Attribute):
+                if isinstance(node.value, ast.Call) and _is_jit(node.value.func):
+                    yield file.finding(
+                        self.id,
+                        node,
+                        f"jax.jit(f).{node.attr}(...) on a throwaway wrapper — "
+                        "retraces from scratch; bind the jitted function once",
+                    )
+
+        # nested jitted defs + truthiness branches on traced params
+        for outer in ast.walk(file.tree):
+            if not isinstance(outer, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for inner in ast.walk(outer):
+                if inner is outer or not isinstance(
+                    inner, (ast.FunctionDef, ast.AsyncFunctionDef)
+                ):
+                    continue
+                for dec in inner.decorator_list:
+                    is_jit, _ = _jit_decorator(dec)
+                    if is_jit:
+                        yield file.finding(
+                            self.id,
+                            dec,
+                            f"@jax.jit on nested def {inner.name!r} makes a new "
+                            "function object (and jit cache) per enclosing call — "
+                            "hoist to module scope, or memoize the wrapper and "
+                            "annotate with # repro: allow[jit-cache-hygiene]",
+                        )
+
+        for fndef in ast.walk(file.tree):
+            if not isinstance(fndef, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            jit_call = None
+            jitted = False
+            for dec in fndef.decorator_list:
+                is_jit, call = _jit_decorator(dec)
+                if is_jit:
+                    jitted, jit_call = True, call
+                    break
+            if not jitted:
+                continue
+            traced = (
+                frozenset(a.arg for a in fndef.args.posonlyargs + fndef.args.args)
+                - _static_params(jit_call, fndef)
+            )
+            for node in ast.walk(fndef):
+                if isinstance(node, (ast.If, ast.While)):
+                    test = node.test
+                    if isinstance(test, ast.Name) and test.id in traced:
+                        yield file.finding(
+                            self.id,
+                            test,
+                            f"truthiness branch on traced argument {test.id!r} inside "
+                            f"jitted {fndef.name!r} — raises TracerBoolConversionError; "
+                            "mark it static or branch with jnp.where/lax.cond",
+                        )

@@ -1,0 +1,111 @@
+"""``kernel-pairing``: every Pallas kernel ships with a reference + a test.
+
+The numerics workflow (ROADMAP: "kernel-vs-ref equivalence") requires each
+``src/repro/kernels/<name>/kernel.py`` to have:
+
+* a ``ref.py`` sibling — the pure-jnp oracle the kernel is checked against;
+* at least one ``tests/`` file whose imports reach **both** modules
+  (directly, or through the kernel package's ``__init__`` when that
+  ``__init__`` re-exports them).
+
+This is a project-scope rule: it sees every parsed file at once.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Iterable, List, Set
+
+from repro.analysis.lint import Finding, SourceFile
+from repro.analysis.rules import register
+
+KERNELS_REL = "src/repro/kernels"
+
+
+def _imported_modules(file: SourceFile) -> Set[str]:
+    """Absolute module names a file imports (best-effort, for reachability)."""
+    mods: Set[str] = set()
+    for node in ast.walk(file.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                mods.add(alias.name)
+        elif isinstance(node, ast.ImportFrom) and not node.level and node.module:
+            mods.add(node.module)
+            for alias in node.names:
+                mods.add(f"{node.module}.{alias.name}")
+    return mods
+
+
+def _init_reexports(init: SourceFile, leaf: str) -> bool:
+    """Does the package __init__ import its ``.<leaf>`` submodule?"""
+    pkg = Path(init.rel).parent.as_posix().replace("src/", "", 1).replace("/", ".")
+    for node in ast.walk(init.tree):
+        if isinstance(node, ast.ImportFrom):
+            if node.level == 1 and (node.module or "").split(".")[0] in ("", leaf):
+                if node.module and node.module.split(".")[0] == leaf:
+                    return True
+                if not node.module and any(a.name == leaf for a in node.names):
+                    return True
+            elif not node.level and node.module:
+                if node.module == f"{pkg}.{leaf}" or (
+                    node.module == pkg and any(a.name == leaf for a in node.names)
+                ):
+                    return True
+        elif isinstance(node, ast.Import):
+            if any(a.name == f"{pkg}.{leaf}" for a in node.names):
+                return True
+    return False
+
+
+@register
+class KernelPairingRule:
+    id = "kernel-pairing"
+    doc = (
+        "every kernels/<name>/kernel.py has a ref.py sibling and a test "
+        "importing both"
+    )
+    scope = "project"
+
+    def check_project(self, files: List[SourceFile], root: Path) -> Iterable[Finding]:
+        by_rel = {f.rel: f for f in files}
+        kernel_files = [f for f in files if f.rel.startswith(KERNELS_REL + "/") and f.rel.endswith("/kernel.py")]
+        test_imports = {f.rel: _imported_modules(f) for f in files if f.in_tests}
+
+        for kf in kernel_files:
+            pkg_rel = Path(kf.rel).parent.as_posix()  # src/repro/kernels/<name>
+            name = Path(pkg_rel).name
+            pkg_mod = f"repro.kernels.{name}"
+
+            ref_rel = f"{pkg_rel}/ref.py"
+            if ref_rel not in by_rel and not (root / ref_rel).is_file():
+                yield Finding(
+                    self.id,
+                    kf.rel,
+                    1,
+                    0,
+                    f"kernel package {name!r} has no ref.py oracle sibling",
+                )
+                continue
+
+            init = by_rel.get(f"{pkg_rel}/__init__.py")
+            reach: dict = {}
+            for leaf in ("kernel", "ref"):
+                mods = {f"{pkg_mod}.{leaf}"}
+                if init is not None and _init_reexports(init, leaf):
+                    mods.add(pkg_mod)
+                reach[leaf] = mods
+
+            paired = any(
+                (imps & reach["kernel"]) and (imps & reach["ref"])
+                for imps in test_imports.values()
+            )
+            if not paired:
+                yield Finding(
+                    self.id,
+                    kf.rel,
+                    1,
+                    0,
+                    f"no tests/ file imports both {pkg_mod}.kernel and "
+                    f"{pkg_mod}.ref (directly or via the package __init__) — "
+                    "add an equivalence test",
+                )

@@ -1,0 +1,77 @@
+"""``no-wallclock``: discrete-event code never reads the host clock.
+
+The serving simulator and schedulers advance a single logical clock; a
+``time.time()`` buried in a queue-depth heuristic silently couples results
+to host load and breaks replayability (ROADMAP: "single-clock invariant").
+The trace-driven harness replays identically only if every timestamp comes
+from the event loop.
+
+Flagged everywhere under ``src/`` and ``tests/``:
+
+* ``time.time`` / ``time.time_ns`` / ``time.monotonic`` / ``time.monotonic_ns``
+  (call or bare reference, including ``from time import time``);
+
+additionally, under ``src/repro/serving/`` only:
+
+* ``time.perf_counter`` / ``perf_counter_ns`` — legal for wall-clock
+  *measurement* in training/launch utilities, but never as an input to
+  serving decisions.
+
+Genuine profiling call-sites outside serving (e.g. ``launch/dryrun.py``
+compile-time measurement) carry ``# repro: allow[no-wallclock]`` pragmas.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import SourceFile, dotted_name
+from repro.analysis.rules import register
+
+_BANNED = frozenset({"time", "time_ns", "monotonic", "monotonic_ns"})
+_SERVING_ONLY = frozenset({"perf_counter", "perf_counter_ns"})
+
+
+@register
+class NoWallclockRule:
+    id = "no-wallclock"
+    doc = (
+        "no time.time/monotonic anywhere (single logical clock); "
+        "perf_counter additionally banned under serving/"
+    )
+    scope = "file"
+
+    def check(self, file: SourceFile):
+        in_serving = file.rel.startswith("src/repro/serving/")
+        banned = _BANNED | _SERVING_ONLY if in_serving else _BANNED
+
+        imported = {}  # local name -> time.<fn> it aliases
+        for node in ast.walk(file.tree):
+            if isinstance(node, ast.ImportFrom) and node.module == "time":
+                for alias in node.names:
+                    if alias.name in banned:
+                        imported[alias.asname or alias.name] = alias.name
+                        yield file.finding(
+                            self.id,
+                            node,
+                            f"from time import {alias.name} — wall-clock reads break "
+                            "the single-logical-clock invariant",
+                        )
+
+        for node in ast.walk(file.tree):
+            if isinstance(node, ast.Attribute):
+                name = dotted_name(node) or ""
+                if name.startswith("time.") and name[len("time.") :] in banned:
+                    yield file.finding(
+                        self.id,
+                        node,
+                        f"{name} reads the host clock — use the event-loop clock "
+                        "(sim time) instead",
+                    )
+            elif isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+                if node.func.id in imported:
+                    yield file.finding(
+                        self.id,
+                        node,
+                        f"{node.func.id}() aliases time.{imported[node.func.id]} — "
+                        "wall-clock read in discrete-event code",
+                    )

@@ -1,0 +1,102 @@
+"""``seeded-rng``: all randomness flows through explicitly-seeded generators.
+
+The repo's tests and data pipelines must be reproducible run-to-run, so:
+
+* ``np.random.seed(...)`` is banned — it mutates the legacy *global*
+  generator, and ordering between tests then changes results;
+* legacy global draws (``np.random.randn``, ``np.random.uniform``,
+  ``np.random.permutation``, ...) are banned for the same reason;
+* ``default_rng()`` with no seed argument is banned — it seeds from OS
+  entropy, which is exactly the nondeterminism the policy exists to stop.
+
+The sanctioned idiom is ``np.random.default_rng(<seed>)`` (or an explicit
+``Generator``/``SeedSequence``/``Philox`` etc. construction with a seed)
+threaded through the code, and ``jax.random.key``/``PRNGKey`` on the JAX
+side (always seeded by construction, so never flagged).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import SourceFile, dotted_name
+from repro.analysis.rules import register
+
+# np.random attributes that are NOT legacy-global-state draws.
+_SANCTIONED_ATTRS = frozenset(
+    {
+        "default_rng",
+        "Generator",
+        "SeedSequence",
+        "BitGenerator",
+        "PCG64",
+        "PCG64DXSM",
+        "Philox",
+        "SFC64",
+        "MT19937",
+        "RandomState",  # explicit instance construction carries its own seed arg
+    }
+)
+
+_NP_ROOTS = ("np.random", "numpy.random")
+
+
+def _np_random_attr(name: str):
+    """('np.random', attr) if name is a np.random.<attr> chain, else None."""
+    for root in _NP_ROOTS:
+        prefix = root + "."
+        if name.startswith(prefix):
+            rest = name[len(prefix) :]
+            if rest and "." not in rest:
+                return rest
+    return None
+
+
+@register
+class SeededRngRule:
+    id = "seeded-rng"
+    doc = (
+        "no np.random.seed / legacy global np.random draws / unseeded "
+        "default_rng() — thread explicitly-seeded generators"
+    )
+    scope = "file"
+
+    def check(self, file: SourceFile):
+        # Track names bound by `from numpy.random import default_rng [as d]`.
+        local_default_rng = set()
+        for node in ast.walk(file.tree):
+            if isinstance(node, ast.ImportFrom) and (node.module or "") in (
+                "numpy.random",
+                "numpy.random._generator",
+            ):
+                for alias in node.names:
+                    if alias.name == "default_rng":
+                        local_default_rng.add(alias.asname or alias.name)
+
+        for node in ast.walk(file.tree):
+            if not isinstance(node, (ast.Call, ast.Attribute)):
+                continue
+            if isinstance(node, ast.Call):
+                name = dotted_name(node.func) or ""
+                attr = _np_random_attr(name)
+                bare = name in local_default_rng
+                if attr == "seed":
+                    yield file.finding(
+                        self.id,
+                        node,
+                        "np.random.seed mutates the legacy global generator — "
+                        "use np.random.default_rng(seed) and thread it through",
+                    )
+                elif (attr == "default_rng" or bare) and not node.args and not node.keywords:
+                    yield file.finding(
+                        self.id,
+                        node,
+                        "default_rng() without a seed draws OS entropy — pass an "
+                        "explicit seed",
+                    )
+                elif attr is not None and attr not in _SANCTIONED_ATTRS and attr != "seed":
+                    yield file.finding(
+                        self.id,
+                        node,
+                        f"np.random.{attr} draws from the legacy global generator — "
+                        "use a seeded np.random.default_rng(...) instance",
+                    )

@@ -1,0 +1,59 @@
+"""``tier1-deps``: tier-1 tests import stdlib + numpy + jax + pytest + repro.
+
+ROADMAP test-suite policy: the tier-1 suite must stay green with
+"stdlib + numpy + jax + pytest only — no ``hypothesis``, no pytest
+plugins". This rule applies to files under ``tests/`` and flags:
+
+* imports whose top-level module is outside the allowed set;
+* ``pytest_plugins = ...`` assignments (plugin loading by another name).
+"""
+from __future__ import annotations
+
+import ast
+import sys
+
+from repro.analysis.lint import SourceFile
+from repro.analysis.rules import register
+
+ALLOWED_ROOTS = frozenset(sys.stdlib_module_names) | {"numpy", "jax", "pytest", "repro"}
+
+
+@register
+class Tier1DepsRule:
+    id = "tier1-deps"
+    doc = "tests/ imports restricted to stdlib+numpy+jax+pytest+repro (no hypothesis, no pytest plugins)"
+    scope = "file"
+
+    def check(self, file: SourceFile):
+        if not file.in_tests:
+            return
+        for node in ast.walk(file.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    root = alias.name.split(".")[0]
+                    if root not in ALLOWED_ROOTS:
+                        yield file.finding(
+                            self.id,
+                            node,
+                            f"tier-1 test imports {alias.name!r} — suite policy is "
+                            "stdlib+numpy+jax+pytest+repro only",
+                        )
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:  # relative import stays inside tests/
+                    continue
+                root = (node.module or "").split(".")[0]
+                if root and root not in ALLOWED_ROOTS:
+                    yield file.finding(
+                        self.id,
+                        node,
+                        f"tier-1 test imports from {node.module!r} — suite policy is "
+                        "stdlib+numpy+jax+pytest+repro only",
+                    )
+            elif isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name) and tgt.id == "pytest_plugins":
+                        yield file.finding(
+                            self.id,
+                            node,
+                            "pytest_plugins loads a plugin — tier-1 forbids pytest plugins",
+                        )

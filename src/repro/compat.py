@@ -26,6 +26,21 @@ else:
         )
 
 
+def mesh_axis_size(mesh, axis: str, default: int = 1) -> int:
+    """Size of a named mesh axis, ``default`` if absent (or ``mesh`` is None).
+
+    Current JAX exposes ``Mesh.shape`` as a Mapping (``.get`` works); older
+    versions return a plain tuple-like, where sizes must be rebuilt from
+    ``axis_names``/``devices.shape``. All call sites go through here instead
+    of probing ``mesh.shape`` inline."""
+    if mesh is None:
+        return default
+    shape = mesh.shape
+    if hasattr(shape, "get"):
+        return int(shape.get(axis, default))
+    return int(dict(zip(mesh.axis_names, mesh.devices.shape)).get(axis, default))
+
+
 def cost_analysis(compiled) -> dict:
     """Normalized ``Compiled.cost_analysis()``: old JAX returns a one-element
     list of dicts (one per program), current JAX returns the dict itself."""

@@ -280,12 +280,14 @@ def prefill_vlm(model, axes, mesh, moe_impl, params, tokens, active, image_embed
 
 def _compile_and_measure(arch, shape_name, mesh, overrides):
     fn, args, donate = build_cell(arch, shape_name, mesh, overrides=overrides)
-    t0 = time.time()
-    lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
-    t_lower = time.time() - t0
-    t1 = time.time()
+    # wall-clock is legitimate here: we are *measuring* lower/compile time
+    # of a one-shot lowering, not feeding a discrete-event simulation
+    t0 = time.time()  # repro: allow[no-wallclock]
+    lowered = jax.jit(fn, donate_argnums=donate).lower(*args)  # repro: allow[jit-cache-hygiene]
+    t_lower = time.time() - t0  # repro: allow[no-wallclock]
+    t1 = time.time()  # repro: allow[no-wallclock]
     compiled = lowered.compile()
-    t_compile = time.time() - t1
+    t_compile = time.time() - t1  # repro: allow[no-wallclock]
     from repro.compat import cost_analysis
 
     ca = cost_analysis(compiled)
@@ -329,7 +331,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, overrides=None,
         "kind": info["kind"], "seq_len": info["seq_len"],
         "global_batch": info["global_batch"], "tag": tag, "ok": False,
     }
-    t0 = time.time()
+    t0 = time.time()  # repro: allow[no-wallclock] — measuring compile wall time
     try:
         full = _compile_and_measure(arch, shape_name, mesh, overrides)
         rec.update({f"full_{k}": v for k, v in full.items()})
@@ -371,7 +373,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, overrides=None,
     except Exception as e:
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-4000:]
-    rec["total_s"] = time.time() - t0
+    rec["total_s"] = time.time() - t0  # repro: allow[no-wallclock]
     os.makedirs(ART_DIR, exist_ok=True)
     sfx = f"__{tag}" if tag else ""
     path = os.path.join(ART_DIR, f"{arch}__{shape_name}__{mesh_kind}{sfx}.json")

@@ -20,7 +20,7 @@ from typing import Optional
 
 import jax
 
-from repro.compat import shard_map
+from repro.compat import mesh_axis_size, shard_map
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
@@ -137,7 +137,7 @@ def moe_apply_ep(cfg, p, x, axes: MeshAxes, mesh):
     and returned. Output replicated over model (all-gather)."""
     B, S, d = x.shape
     E = cfg.n_experts
-    m = mesh.shape[axes.model] if (mesh is not None and axes.model in mesh.shape) else 1
+    m = mesh_axis_size(mesh, axes.model)
 
     x2 = x.reshape(-1, d)
     gates, idx, probs = _router(cfg, p, x2)
@@ -156,7 +156,7 @@ def moe_apply_ep(cfg, p, x, axes: MeshAxes, mesh):
     else:
         dsz = 1
         for a in axes.data:
-            dsz *= mesh.shape.get(a, 1) if hasattr(mesh.shape, "get") else dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+            dsz *= mesh_axis_size(mesh, a)
         T = x2.shape[0]
         # batch-1 decode: tokens can't shard over data -> replicate there
         # (model-axis token slicing still parallelizes the expert compute)

@@ -769,8 +769,10 @@ def _cache_len(cache) -> int:
                 found.append(c["k"].shape[-3])
             if "c" in c and hasattr(c["c"], "shape"):
                 found.append(c["c"].shape[-2])
+            # skip cross-attn memory ("xkv"): its M tokens are attended
+            # unmasked and must not define the self-attn decode mask length
             for key, v in c.items():
-                if key not in ("k", "v", "c", "k_pe"):
+                if key not in ("k", "v", "c", "k_pe", "xkv"):
                     _find(v)
         elif isinstance(c, (list, tuple)):
             for v in c:

@@ -34,7 +34,8 @@ def pytest_collection_modifyitems(config, items):
 def _seed_global_rng():
     """Session-wide seed for legacy ``np.random`` consumers; tests needing
     local randomness should build their own ``np.random.default_rng``."""
-    np.random.seed(0)
+    # deliberate: this fixture IS the sanctioned global seed point
+    np.random.seed(0)  # repro: allow[seeded-rng]
 
 
 @pytest.fixture

@@ -1,0 +1,406 @@
+"""Linter engine + per-rule fixture tests (repro.analysis pass 1).
+
+Each rule gets a bad/good fixture pair written to a synthetic repo under
+``tmp_path`` (so rule paths like ``src/...`` vs ``tests/...`` resolve the
+same way they do in the real tree), asserting exact rule ids AND line
+numbers; plus pragma/allowlist suppression tests and a repo-wide
+cleanliness gate.
+"""
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.lint import parse_pragmas, run_lint
+from repro.analysis.rules import all_rules, rule_ids
+
+EXPECTED_RULES = {
+    "compat-shim",
+    "tier1-deps",
+    "seeded-rng",
+    "no-wallclock",
+    "jit-cache-hygiene",
+    "kernel-pairing",
+}
+
+
+def _mini_repo(tmp_path: Path, files: dict) -> Path:
+    """files: repo-relative path -> dedented source."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return tmp_path
+
+
+def _lint(tmp_path, files, rules=None):
+    root = _mini_repo(tmp_path, files)
+    if rules is not None:
+        rules = [r for r in all_rules() if r.id in rules]
+    return run_lint(root, rules=rules)
+
+
+def _hits(res, rule):
+    return [(f.path, f.line) for f in res.findings if f.rule == rule]
+
+
+def test_rule_registry_complete():
+    assert set(rule_ids()) == EXPECTED_RULES
+
+
+# -- compat-shim -------------------------------------------------------------
+
+
+def test_compat_shim_flags_jax_probes_and_version_reads(tmp_path):
+    res = _lint(tmp_path, {
+        "src/repro/x.py": """\
+            import jax
+
+            if hasattr(jax, "shard_map"):       # line 3: jax-module probe
+                pass
+            f = getattr(jax.sharding, "Mesh", None)  # line 5: getattr probe
+            v = jax.__version__                  # line 6: version read
+        """,
+    }, rules={"compat-shim"})
+    assert _hits(res, "compat-shim") == [
+        ("src/repro/x.py", 3),
+        ("src/repro/x.py", 5),
+        ("src/repro/x.py", 6),
+    ]
+
+
+def test_compat_shim_flags_old_moe_mesh_shape_sniff(tmp_path):
+    # the exact shim shape moe.py:159 carried before mesh_axis_size existed:
+    # reintroducing it must fail lint (ISSUE acceptance criterion)
+    res = _lint(tmp_path, {
+        "src/repro/models/m.py": """\
+            def dsz_of(mesh, axes):
+                dsz = 1
+                for a in axes:
+                    dsz *= mesh.shape.get(a, 1) if hasattr(mesh.shape, "get") else dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+                return dsz
+        """,
+    }, rules={"compat-shim"})
+    assert _hits(res, "compat-shim") == [("src/repro/models/m.py", 4)]
+
+
+def test_compat_shim_allows_duck_typing_and_shim_sites(tmp_path):
+    res = _lint(tmp_path, {
+        # duck typing on non-jax objects is NOT version sniffing
+        "src/repro/ok.py": """\
+            def f(tree, runner):
+                if hasattr(tree, "shape"):
+                    pass
+                return hasattr(runner, "swap_out")
+        """,
+        # the sanctioned shim sites are allowlisted wholesale
+        "src/repro/compat.py": """\
+            import jax
+
+            HAS = hasattr(jax, "shard_map")
+        """,
+        "src/repro/launch/mesh.py": """\
+            import jax
+
+            NEW = hasattr(jax.sharding, "AxisType")
+        """,
+    }, rules={"compat-shim"})
+    assert _hits(res, "compat-shim") == []
+    assert res.n_suppressed == 2  # the two allowlisted shim-site probes
+
+
+# -- tier1-deps --------------------------------------------------------------
+
+
+def test_tier1_deps_flags_non_allowed_imports_only_in_tests(tmp_path):
+    res = _lint(tmp_path, {
+        "tests/test_x.py": """\
+            import json
+            import numpy as np
+            import hypothesis              # line 3: banned
+            from scipy import stats       # line 4: banned
+            import repro.models
+            import pytest
+        """,
+        # src/ files may import whatever the runtime has
+        "src/repro/y.py": """\
+            import hypothesis
+        """,
+    }, rules={"tier1-deps"})
+    assert _hits(res, "tier1-deps") == [
+        ("tests/test_x.py", 3),
+        ("tests/test_x.py", 4),
+    ]
+
+
+def test_tier1_deps_flags_pytest_plugins_assignment(tmp_path):
+    res = _lint(tmp_path, {
+        "tests/conftest.py": """\
+            pytest_plugins = ("hypothesis",)
+        """,
+    }, rules={"tier1-deps"})
+    assert _hits(res, "tier1-deps") == [("tests/conftest.py", 1)]
+
+
+# -- seeded-rng --------------------------------------------------------------
+
+
+def test_seeded_rng_flags_global_seed_legacy_draws_and_argless_rng(tmp_path):
+    res = _lint(tmp_path, {
+        "src/repro/r.py": """\
+            import numpy as np
+            from numpy.random import default_rng
+
+            np.random.seed(0)              # line 4: global seed
+            x = np.random.randn(3)         # line 5: legacy global draw
+            g1 = np.random.default_rng()   # line 6: unseeded
+            g2 = default_rng()             # line 7: unseeded (bare import)
+        """,
+    }, rules={"seeded-rng"})
+    assert _hits(res, "seeded-rng") == [
+        ("src/repro/r.py", 4),
+        ("src/repro/r.py", 5),
+        ("src/repro/r.py", 6),
+        ("src/repro/r.py", 7),
+    ]
+
+
+def test_seeded_rng_allows_seeded_generators(tmp_path):
+    res = _lint(tmp_path, {
+        "src/repro/ok.py": """\
+            import numpy as np
+
+            g = np.random.default_rng(0)
+            h = np.random.Generator(np.random.PCG64(7))
+            x = g.normal(size=3)
+        """,
+    }, rules={"seeded-rng"})
+    assert _hits(res, "seeded-rng") == []
+
+
+# -- no-wallclock ------------------------------------------------------------
+
+
+def test_no_wallclock_flags_time_reads(tmp_path):
+    res = _lint(tmp_path, {
+        "src/repro/serving/sched.py": """\
+            import time
+            from time import monotonic     # line 2: aliased import
+
+            def now():
+                return time.time()         # line 5
+        """,
+    }, rules={"no-wallclock"})
+    assert _hits(res, "no-wallclock") == [
+        ("src/repro/serving/sched.py", 2),
+        ("src/repro/serving/sched.py", 5),
+    ]
+
+
+def test_no_wallclock_perf_counter_banned_only_under_serving(tmp_path):
+    res = _lint(tmp_path, {
+        "src/repro/serving/engine.py": """\
+            import time
+
+            t = time.perf_counter()        # line 3: banned in serving/
+        """,
+        "src/repro/training/bench.py": """\
+            import time
+
+            t = time.perf_counter()        # fine outside serving/
+        """,
+    }, rules={"no-wallclock"})
+    assert _hits(res, "no-wallclock") == [("src/repro/serving/engine.py", 3)]
+
+
+# -- jit-cache-hygiene -------------------------------------------------------
+
+
+def test_jit_cache_flags_fresh_wrapper_callsites(tmp_path):
+    res = _lint(tmp_path, {
+        "src/repro/j.py": """\
+            import jax
+
+            f = jax.jit(lambda x: x + 1)       # line 3: lambda
+            y = jax.jit(abs)(-2)               # line 4: IIFE
+            low = jax.jit(abs).lower(3)        # line 5: throwaway .lower
+        """,
+    }, rules={"jit-cache-hygiene"})
+    assert _hits(res, "jit-cache-hygiene") == [
+        ("src/repro/j.py", 3),
+        ("src/repro/j.py", 4),
+        ("src/repro/j.py", 5),
+    ]
+
+
+def test_jit_cache_flags_nested_jitted_def(tmp_path):
+    res = _lint(tmp_path, {
+        "src/repro/j.py": """\
+            import jax
+
+            def outer(m):
+                @jax.jit                       # line 4: fresh cache per call
+                def step(x):
+                    return m * x
+                return step
+        """,
+    }, rules={"jit-cache-hygiene"})
+    assert _hits(res, "jit-cache-hygiene") == [("src/repro/j.py", 4)]
+
+
+def test_jit_cache_flags_truthiness_branch_on_traced_param(tmp_path):
+    res = _lint(tmp_path, {
+        "src/repro/j.py": """\
+            import jax
+            from functools import partial
+
+            @jax.jit
+            def f(x, flag):
+                if flag:                       # line 6: traced truthiness
+                    return x
+                return -x
+
+            @partial(jax.jit, static_argnames=("flag",))
+            def g(x, flag):
+                if flag:                       # static: fine
+                    return x
+                return -x
+        """,
+    }, rules={"jit-cache-hygiene"})
+    assert _hits(res, "jit-cache-hygiene") == [("src/repro/j.py", 6)]
+
+
+def test_jit_cache_allows_module_scope_bindings(tmp_path):
+    res = _lint(tmp_path, {
+        "src/repro/ok.py": """\
+            import jax
+            from functools import partial
+
+            def step(x):
+                return x + 1
+
+            jstep = jax.jit(step)              # bound once: fine
+
+            @partial(jax.jit, static_argnames=("n",))
+            def top(x, n):
+                return x * n
+        """,
+    }, rules={"jit-cache-hygiene"})
+    assert _hits(res, "jit-cache-hygiene") == []
+
+
+# -- kernel-pairing ----------------------------------------------------------
+
+_KERNEL = """\
+    def kernel(x):
+        return x
+"""
+_REF = """\
+    def ref(x):
+        return x
+"""
+
+
+def test_kernel_pairing_missing_ref(tmp_path):
+    res = _lint(tmp_path, {
+        "src/repro/kernels/fuzz/kernel.py": _KERNEL,
+        "src/repro/kernels/fuzz/__init__.py": "",
+    }, rules={"kernel-pairing"})
+    assert _hits(res, "kernel-pairing") == [("src/repro/kernels/fuzz/kernel.py", 1)]
+    assert "no ref.py" in res.findings[0].message
+
+
+def test_kernel_pairing_missing_test(tmp_path):
+    res = _lint(tmp_path, {
+        "src/repro/kernels/fuzz/kernel.py": _KERNEL,
+        "src/repro/kernels/fuzz/ref.py": _REF,
+        "src/repro/kernels/fuzz/__init__.py": "",
+        "tests/test_other.py": "import repro.kernels.fuzz.kernel\n",  # ref missing
+    }, rules={"kernel-pairing"})
+    assert _hits(res, "kernel-pairing") == [("src/repro/kernels/fuzz/kernel.py", 1)]
+    assert "imports both" in res.findings[0].message
+
+
+def test_kernel_pairing_satisfied_directly_and_via_init(tmp_path):
+    res = _lint(tmp_path, {
+        # direct imports of both modules
+        "src/repro/kernels/a/kernel.py": _KERNEL,
+        "src/repro/kernels/a/ref.py": _REF,
+        "src/repro/kernels/a/__init__.py": "",
+        "tests/test_a.py": """\
+            from repro.kernels.a.kernel import kernel
+            from repro.kernels.a.ref import ref
+        """,
+        # via a package __init__ that re-exports both
+        "src/repro/kernels/b/kernel.py": _KERNEL,
+        "src/repro/kernels/b/ref.py": _REF,
+        "src/repro/kernels/b/__init__.py": """\
+            from repro.kernels.b.kernel import kernel
+            from repro.kernels.b.ref import ref
+        """,
+        "tests/test_b.py": "from repro.kernels.b import kernel, ref\n",
+    }, rules={"kernel-pairing"})
+    assert _hits(res, "kernel-pairing") == []
+
+
+# -- pragmas / allowlist -----------------------------------------------------
+
+
+def test_parse_pragmas_multi_rule():
+    src = "x = 1  # repro: allow[seeded-rng, no-wallclock]\n# repro: allow[compat-shim]\n"
+    assert parse_pragmas(src) == {
+        1: {"seeded-rng", "no-wallclock"},
+        2: {"compat-shim"},
+    }
+
+
+def test_pragma_suppresses_same_line(tmp_path):
+    res = _lint(tmp_path, {
+        "src/repro/r.py": """\
+            import numpy as np
+
+            np.random.seed(0)  # repro: allow[seeded-rng]
+        """,
+    }, rules={"seeded-rng"})
+    assert res.findings == []
+    assert res.n_suppressed == 1
+
+
+def test_pragma_suppresses_line_above(tmp_path):
+    res = _lint(tmp_path, {
+        "src/repro/r.py": """\
+            import numpy as np
+
+            # repro: allow[seeded-rng]
+            np.random.seed(0)
+        """,
+    }, rules={"seeded-rng"})
+    assert res.findings == []
+    assert res.n_suppressed == 1
+
+
+def test_pragma_wrong_rule_does_not_suppress(tmp_path):
+    res = _lint(tmp_path, {
+        "src/repro/r.py": """\
+            import numpy as np
+
+            np.random.seed(0)  # repro: allow[no-wallclock]
+        """,
+    }, rules={"seeded-rng"})
+    assert _hits(res, "seeded-rng") == [("src/repro/r.py", 3)]
+
+
+def test_unparseable_file_is_an_error_not_a_crash(tmp_path):
+    res = _lint(tmp_path, {"src/repro/bad.py": "def f(:\n"})
+    assert not res.clean
+    assert res.errors and "bad.py" in res.errors[0]
+
+
+# -- the real repo is clean --------------------------------------------------
+
+
+def test_repo_lint_clean():
+    root = Path(__file__).resolve().parents[1]
+    res = run_lint(root)
+    assert res.errors == []
+    assert res.findings == [], "\n".join(f.format() for f in res.findings)

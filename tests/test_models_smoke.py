@@ -116,7 +116,8 @@ def test_ramp_gather_no_recompile_semantics():
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
     traces = {"n": 0}
 
-    @jax.jit
+    # nested jit is the point here: the test counts retraces of this fn
+    @jax.jit  # repro: allow[jit-cache-hygiene]
     def f(p, t, active):
         traces["n"] += 1
         _, outs = m.prefill(p, t, active_sites=active, with_cache=False, moe_impl="dense")

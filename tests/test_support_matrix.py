@@ -1,0 +1,110 @@
+"""eval_shape support-audit snapshot tests (repro.analysis pass 2).
+
+Pins the expected support cells for three representative configs — a plain
+full-attention LM (every path supported), a pure-SSM model (no KV paths),
+and an all-MLA model (dense decode only) — and checks the committed
+``support_matrix.json`` snapshot agrees with a freshly-derived audit for
+those configs. Everything runs under ``jax.eval_shape``: no device math.
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.abstract import (
+    PATH_IDS,
+    STATUS_REJECTED,
+    STATUS_SUPPORTED,
+    audit_config,
+    compare_matrices,
+    shape_error_cells,
+)
+
+REPO = Path(__file__).resolve().parents[1]
+
+# config -> {path: expected status}; any drift here is a deliberate API
+# change and must update this table AND the committed snapshot together.
+EXPECTED = {
+    "gpt2-medium": {p: STATUS_SUPPORTED for p in PATH_IDS},
+    "mamba2-2.7b": {
+        "prefill": STATUS_SUPPORTED,
+        "decode_dense": STATUS_SUPPORTED,
+        "decode_kernel": STATUS_REJECTED,  # no attention layers at all
+        "decode_paged": STATUS_REJECTED,  # recurrent state doesn't page
+        "chunked_prefill": STATUS_SUPPORTED,
+        "paged_block_schema": STATUS_REJECTED,
+        "ramp_heads": STATUS_SUPPORTED,
+    },
+    "deepseek-v2-lite-16b": {
+        "prefill": STATUS_SUPPORTED,
+        "decode_dense": STATUS_SUPPORTED,
+        "decode_kernel": STATUS_REJECTED,  # all slots are MLA
+        "decode_paged": STATUS_REJECTED,  # paged pool is full-attn only
+        "chunked_prefill": STATUS_SUPPORTED,
+        "paged_block_schema": STATUS_REJECTED,
+        "ramp_heads": STATUS_SUPPORTED,
+    },
+}
+
+_CACHE = {}
+
+
+def _audit(name):
+    if name not in _CACHE:
+        _CACHE[name] = audit_config(name)
+    return _CACHE[name]
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+def test_audit_matches_expected_cells(name):
+    cells = _audit(name)
+    got = {p: c.status for p, c in cells.items()}
+    assert got == EXPECTED[name], {
+        p: (c.status, c.detail) for p, c in cells.items()
+    }
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+def test_audit_has_no_shape_errors(name):
+    bugs = shape_error_cells({name: _audit(name)})
+    assert bugs == [], [(c.path, c.detail) for c in bugs]
+
+
+def test_committed_snapshot_agrees_with_fresh_audit():
+    snap_path = REPO / "support_matrix.json"
+    assert snap_path.is_file(), "run `python -m repro.analysis --audit --write`"
+    committed = json.loads(snap_path.read_text())
+    fresh = {
+        "paths": list(PATH_IDS),
+        "configs": {
+            name: {p: {"status": c.status} for p, c in _audit(name).items()}
+            for name in EXPECTED
+        },
+    }
+    committed_subset = {
+        "paths": committed["paths"],
+        "configs": {k: v for k, v in committed["configs"].items() if k in EXPECTED},
+    }
+    problems = compare_matrices(committed_subset, fresh)
+    assert problems == [], problems
+
+
+def test_snapshot_covers_all_configs_and_paths():
+    from repro.analysis.abstract import ALL_CONFIG_IDS
+
+    committed = json.loads((REPO / "support_matrix.json").read_text())
+    assert set(committed["configs"]) == set(ALL_CONFIG_IDS)
+    assert committed["paths"] == list(PATH_IDS)
+    for name, cells in committed["configs"].items():
+        assert set(cells) == set(PATH_IDS), name
+        for p, cell in cells.items():
+            assert cell["status"] != "shape-error", (name, p, cell)
+
+
+def test_compare_matrices_flags_regression_and_drift():
+    old = {"configs": {"m": {"a": {"status": "supported"}, "b": {"status": "rejected"}}}}
+    new = {"configs": {"m": {"a": {"status": "rejected"}, "b": {"status": "supported"}}}}
+    probs = compare_matrices(old, new)
+    assert any(p.startswith("REGRESSION") and "m × a" in p for p in probs)
+    assert any(p.startswith("drift") and "m × b" in p for p in probs)
+    assert compare_matrices(new, new) == []

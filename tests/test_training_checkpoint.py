@@ -120,12 +120,15 @@ def test_grad_accum_matches_full_batch():
     batch = TokenPipeline(cfg.vocab_size, 16, 8, seed=1).batch_at(0)
     tc1 = TrainConfig(steps=1, lr=1e-3, grad_accum=1)
     tc2 = TrainConfig(steps=1, lr=1e-3, grad_accum=2)
-    s1, _ = jax.jit(make_train_step(m, tc1)[0])(
-        init_state(m, jax.random.PRNGKey(0), make_train_step(m, tc1)[1]),
+    step1, sched1 = make_train_step(m, tc1)
+    step2, sched2 = make_train_step(m, tc2)
+    jstep1, jstep2 = jax.jit(step1), jax.jit(step2)
+    s1, _ = jstep1(
+        init_state(m, jax.random.PRNGKey(0), sched1),
         {k: jnp.asarray(v) for k, v in batch.items()},
     )
-    s2, _ = jax.jit(make_train_step(m, tc2)[0])(
-        init_state(m, jax.random.PRNGKey(0), make_train_step(m, tc2)[1]),
+    s2, _ = jstep2(
+        init_state(m, jax.random.PRNGKey(0), sched2),
         {k: jnp.asarray(v) for k, v in batch.items()},
     )
     # same data, microbatched: params should land close (mean-of-means CE)
