@@ -1,0 +1,106 @@
+"""Sync-window decode benchmark (gate rows for CI).
+
+Measures what the multi-step window actually buys: with
+``steps_per_sync=N`` the host dispatches ONE ``lax.while_loop`` program
+per window and reads back one packed record block, so the host↔device
+sync count per decode step drops from 1 to 1/N — while every record the
+window streams back stays bit-identical to the per-step path (the
+windows use never-firing thresholds so each runs its full length, giving
+an exact 1/N sync ratio AND a maximal identity check).
+
+Gate row (CI greps it): ``steps_per_sync_gate`` must carry
+``identical_at_sync=True;syncs_reduced=True``. The us/token trend across
+N is recorded in BENCH_decode.json (dispatch overhead amortizes with N;
+the win is hardware-dependent, so it is snapshotted, not gated).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+WINDOWS = (1, 2, 4, 8)
+N_STEPS = 32  # decode steps per pass; divisible by every window size
+N_ROWS = 3  # concurrent slots
+
+
+def bench_steps_per_sync():
+    import jax
+
+    from benchmarks.run import emit, snapshot
+    from repro.configs import get_tiny
+    from repro.models import build_model
+    from repro.serving import DecodeRunner
+
+    cfg = get_tiny("qwen2-1.5b").replace(n_layers=2, vocab_size=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(5))
+    prompts = np.random.default_rng(6).integers(0, 64, (8, 12)).astype(np.int32)
+    kw = dict(max_new_tokens=N_STEPS, max_slots=3, n_slots=4)
+
+    act = list(range(min(2, len(model.sites))))
+    thr = np.zeros(len(act), np.float32)  # strict <: threshold 0 never exits
+
+    # per-step reference records, one pass (the identity oracle)
+    oracle = DecodeRunner(model, params, prompts, **kw)
+    for s in range(N_ROWS):
+        oracle.start(s, s)
+    ref = [oracle.step(list(range(N_ROWS)), act) for _ in range(N_STEPS)]
+    for s in range(N_ROWS):
+        oracle.free(s)
+
+    runner = DecodeRunner(model, params, prompts, **kw)
+    ident_all = True
+    rows = {}
+    for n in WINDOWS:
+        for timed in (False, True):  # pass 1 compiles + checks, pass 2 times
+            for s in range(N_ROWS):
+                runner.start(s, s)
+            d0 = runner.dispatches
+            idx = 0
+            t0 = time.perf_counter()
+            while idx < N_STEPS:
+                labels, unc, finals, _ = runner.step_multi(
+                    list(range(N_ROWS)), act, n, thr
+                )
+                nd = finals.shape[0]
+                if not timed:
+                    for j in range(nd):
+                        lo, uo, fo = ref[idx + j]
+                        ident_all &= (
+                            np.array_equal(labels[j], lo)
+                            and np.array_equal(unc[j], uo)
+                            and np.array_equal(finals[j], fo)
+                        )
+                idx += nd
+            wall = time.perf_counter() - t0
+            syncs = runner.dispatches - d0
+            for s in range(N_ROWS):
+                runner.free(s)
+        us_tok = wall / (N_STEPS * N_ROWS) * 1e6
+        rows[n] = {"us_per_token": us_tok, "syncs_per_step": syncs / N_STEPS}
+        emit(f"steps_per_sync_n{n}", us_tok,
+             f"syncs_per_step={syncs / N_STEPS:.4f}")
+
+    # full windows at never-firing thresholds: the sync count must drop by
+    # EXACTLY the window factor, at bit-identical records
+    reduced = all(
+        abs(rows[n]["syncs_per_step"] - 1.0 / n) < 1e-9 for n in WINDOWS
+    )
+    speedup4 = rows[1]["us_per_token"] / rows[4]["us_per_token"]
+    emit("steps_per_sync_gate", rows[4]["us_per_token"],
+         f"identical_at_sync={ident_all};syncs_reduced={reduced};"
+         f"speedup_n4={speedup4:.2f}")
+
+    snapshot("steps_per_sync", {
+        "identical_at_sync": bool(ident_all),
+        "syncs_reduced": bool(reduced),
+        "speedup_n4": float(speedup4),
+        "windows": {
+            str(n): {
+                "us_per_token": float(rows[n]["us_per_token"]),
+                "syncs_per_step": float(rows[n]["syncs_per_step"]),
+            }
+            for n in WINDOWS
+        },
+    })

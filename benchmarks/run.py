@@ -669,6 +669,7 @@ def bench_kernels():
 
 
 from benchmarks.bench_prefix_cache import bench_prefix_cache  # noqa: E402
+from benchmarks.bench_steps_per_sync import bench_steps_per_sync  # noqa: E402
 
 ALL = [
     bench_fig3_knobs,
@@ -690,6 +691,7 @@ ALL = [
     bench_paged_kv,
     bench_chunked_prefill,
     bench_prefix_cache,
+    bench_steps_per_sync,
     bench_kernels,
 ]
 

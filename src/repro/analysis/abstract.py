@@ -58,6 +58,7 @@ FEATURE_PATHS: Tuple[Tuple[str, str], ...] = (
     ("chunked_prefill", "first-chunk prefill into a cache longer than the chunk"),
     ("paged_block_schema", "paged (block-pool) cache schema construction"),
     ("ramp_heads", "forward with active early-exit ramp heads"),
+    ("decode_fused_exit", "multi-step fused-exit decode window (lax.while_loop + on-device thresholds)"),
 )
 PATH_IDS = tuple(p for p, _ in FEATURE_PATHS)
 
@@ -147,6 +148,32 @@ def _lm_decode(cfg, *, decode_attn, paged=False, active=None):
     return jax.eval_shape(fn, *args, act)
 
 
+def _lm_decode_fused(cfg):
+    """Multi-step fused-exit decode window: ``decode_multi`` traces a
+    2-step ``lax.while_loop`` with a device-resident (K,) threshold vector
+    and bucket-padding row mask. ``_check_multi_step_support`` rejects
+    mamba/MLA/local-windowed slots with an explicit NotImplementedError
+    (the window pre-claims KV write positions, which only append-only
+    full-attention caches support)."""
+    model = build_model(cfg)
+    params = abstract_from_schema(model.schema())
+    cache = abstract_from_schema(model.cache_schema(B, CACHE_LEN))
+    k = _n_active(model)
+
+    def fn(p, c, toks, po, act, thr, valid, n):
+        return model.decode_multi(
+            p, c, toks, po, n, n_max=2,
+            active_sites=act, thresholds=thr, row_valid=valid,
+            moe_impl="dense",
+        )
+
+    return jax.eval_shape(
+        fn, params, cache, _tokens(cfg, B, 1), _aval((B,), jnp.int32),
+        jnp.arange(k, dtype=jnp.int32), _aval((k,), jnp.float32),
+        _aval((B,), jnp.bool_), _aval((), jnp.int32),
+    )
+
+
 def _encdec_prefill(model, cfg, *, s, cache_len, active=None):
     params = abstract_from_schema(model.schema())
     act = jnp.arange(active, dtype=jnp.int32) if active else None
@@ -190,6 +217,8 @@ def probe(cfg, path: str) -> None:
             model.paged_cache_schema(N_BLOCKS, BLOCK_SIZE)
         elif path == "ramp_heads":
             _lm_prefill(model, cfg, s=S, cache_len=S, active=_n_active(model))
+        elif path == "decode_fused_exit":
+            _lm_decode_fused(cfg)
         return
 
     if family == "encdec":
@@ -213,6 +242,11 @@ def probe(cfg, path: str) -> None:
             _encdec_prefill(model, cfg, s=CHUNK, cache_len=CACHE_LEN)
         elif path == "ramp_heads":
             _encdec_prefill(model, cfg, s=S, cache_len=S, active=_n_active(model))
+        elif path == "decode_fused_exit":
+            raise NotImplementedError(
+                "enc-dec decoder wires dense cache attention only; no "
+                "multi-step fused-exit window (no decode_multi)"
+            )
         return
 
     if family in ("encoder_cls", "resnet"):

@@ -31,6 +31,7 @@ def all_rules() -> List:
     # import for side effect: each module registers its rule class
     from repro.analysis.rules import (  # noqa: F401
         compat_shim,
+        host_sync,
         jit_cache,
         kernel_pairing,
         no_wallclock,

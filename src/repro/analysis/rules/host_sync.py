@@ -1,0 +1,99 @@
+"""``host-sync``: no implicit device→host syncs in serving hot paths.
+
+Every ``np.asarray(jax_array)`` / ``float(...)`` / ``int(...)`` /
+``.item()`` / ``.block_until_ready()`` on a device value blocks the host
+on the accelerator — exactly the per-token round-trip the sync-window
+decode path (``DecodeRunner.step_multi``) exists to eliminate. A stray
+conversion buried in a hot method silently reintroduces one sync per
+step and the latency win evaporates without any test failing.
+
+Scope: the serving hot-path methods (``step`` / ``step_multi`` /
+``infer`` / ``start`` / ``prefill_begin`` / ``prefill_resume`` /
+``_feed_prompt_token`` / ``swap_out`` / ``swap_in`` / ``_step``) in
+files under ``src/repro/serving/``. Flagged:
+
+* ``np.asarray(...)`` / ``numpy.asarray`` / ``np.array(...)`` /
+  ``jax.device_get(...)`` — device buffers cross to host;
+* ``int(f(...))`` / ``float(f(...))`` where the argument is itself a
+  call (the classic ``int(lab[0])``-style scalar pull; ``int(x)`` on a
+  plain host variable is not flagged);
+* ``.item()`` / ``.block_until_ready()`` calls.
+
+SANCTIONED syncs — the per-window record drain at the sync boundary,
+prefill first-token reads, swap buffer gathers — carry
+``# repro: allow[host-sync]`` pragmas with why-notes; everything else is
+a bug. The rule is a tripwire for future edits, not a claim that zero
+syncs exist.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import SourceFile, dotted_name
+from repro.analysis.rules import register
+
+HOT_METHODS = frozenset({
+    "step", "step_multi", "infer", "start", "prefill_begin",
+    "prefill_resume", "_feed_prompt_token", "swap_out", "swap_in", "_step",
+})
+
+_SYNC_CALLS = frozenset({
+    "np.asarray", "numpy.asarray", "np.array", "numpy.array",
+    "jax.device_get",
+})
+_SYNC_METHODS = frozenset({"item", "block_until_ready"})
+_SCALAR_PULLS = frozenset({"int", "float"})
+
+
+@register
+class HostSyncRule:
+    id = "host-sync"
+    doc = (
+        "no implicit device->host syncs (np.asarray/int()/float()/.item()/"
+        ".block_until_ready()) in serving hot-path methods; sanctioned "
+        "sync points carry pragmas"
+    )
+    scope = "file"
+
+    def check(self, file: SourceFile):
+        if not file.rel.startswith("src/repro/serving/"):
+            return
+        for fndef in ast.walk(file.tree):
+            if not isinstance(fndef, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if fndef.name not in HOT_METHODS:
+                continue
+            for node in ast.walk(fndef):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted_name(node.func)
+                if name in _SYNC_CALLS:
+                    yield file.finding(
+                        self.id,
+                        node,
+                        f"{name}(...) in hot-path {fndef.name!r} blocks on the "
+                        "device — batch the transfer at the sync boundary (or "
+                        "pragma a sanctioned sync point)",
+                    )
+                elif (
+                    name in _SCALAR_PULLS
+                    and node.args
+                    and isinstance(node.args[0], ast.Call)
+                ):
+                    yield file.finding(
+                        self.id,
+                        node,
+                        f"{name}(...) on a computed value in hot-path "
+                        f"{fndef.name!r} — a scalar pull is one full device "
+                        "round-trip per call",
+                    )
+                elif (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _SYNC_METHODS
+                ):
+                    yield file.finding(
+                        self.id,
+                        node,
+                        f".{node.func.attr}() in hot-path {fndef.name!r} "
+                        "synchronizes with the device",
+                    )

@@ -98,9 +98,22 @@ class ApparateController:
         ramp_labels: np.ndarray,  # (K, B)
         ramp_unc: np.ndarray,  # (K, B) uncertainty (already metric-mapped)
         final_labels: np.ndarray,  # (B,)
+        *,
+        forced_exits: Optional[np.ndarray] = None,  # (B,) device-decided sites
+        act: Optional[Sequence[int]] = None,  # pin the record's active set
     ) -> BatchDecisions:
-        """Ingest one batch of records; return exit decisions for it."""
-        act = list(self.active)
+        """Ingest one batch of records; return exit decisions for it.
+
+        ``forced_exits`` replays exit sites already decided ON DEVICE (the
+        sync-window runner's fused kernel): the records still enter the
+        adaptation window — replay-completeness — but the serving
+        decision honors what the device did under its (possibly stale)
+        threshold copy instead of re-simulating under thresholds that may
+        have just been retuned. ``act`` pins the active-site set the
+        records were GATHERED under: a mid-window ``_adjust`` can change
+        ``self.active``, and later replayed steps of that window must
+        still land their rows against the sites that produced them."""
+        act = list(self.active) if act is None else list(act)
         B = final_labels.shape[0]
         K = len(act)
         correct = ramp_labels[:K] == final_labels[None, :]
@@ -116,7 +129,10 @@ class ApparateController:
             unc_m[:, s] = ramp_unc[j]
             val_m[:, s] = True
             cor_m[:, s] = correct[j]
-        ex = simulate_exits(unc_m, val_m, self.thresholds, act)
+        if forced_exits is None:
+            ex = simulate_exits(unc_m, val_m, self.thresholds, act)
+        else:
+            ex = np.asarray(forced_exits, np.int64).copy()
         released = np.asarray(final_labels).copy()
         for j, s in enumerate(act):
             m = ex == s

@@ -1,3 +1,7 @@
-from repro.kernels.ramp_head.kernel import ramp_head_stats
-from repro.kernels.ramp_head.ops import ramp_confidence
-from repro.kernels.ramp_head.ref import ramp_head_stats_ref, stats_to_confidence
+from repro.kernels.ramp_head.kernel import ramp_head_exit, ramp_head_stats
+from repro.kernels.ramp_head.ops import ramp_confidence, ramp_exit_decision
+from repro.kernels.ramp_head.ref import (
+    ramp_head_exit_ref,
+    ramp_head_stats_ref,
+    stats_to_confidence,
+)

@@ -58,6 +58,24 @@ def _kernel(h_ref, w_ref, m_ref, s_ref, t_ref, idx_ref, *, bv: int, v_limit: int
         m_ref[...] = new_m
 
 
+def _exit_kernel(h_ref, w_ref, thr_ref, m_ref, s_ref, t_ref, idx_ref, exit_ref,
+                 *, bv: int, v_limit: int):
+    """Fused ramp-head + uncertainty + threshold compare: the streaming
+    stats kernel plus, once the last vocab tile has merged, an in-VMEM
+    exit decision ``(1 − maxprob) < threshold`` per row (strict ``<``, so
+    a zero threshold can never trigger — matching ``simulate_exits``).
+    The per-row EXIT MASK is all that leaves the kernel beyond the stats;
+    the host never has to compare uncertainties to decide an exit."""
+    _kernel(h_ref, w_ref, m_ref, s_ref, t_ref, idx_ref, bv=bv, v_limit=v_limit)
+
+    @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
+    def _decide():
+        # after the final merge s_ref holds the full softmax normalizer:
+        # maxprob = 1/s, so uncertainty = 1 − 1/s — never materializes (B,V)
+        unc = 1.0 - 1.0 / s_ref[...]
+        exit_ref[...] = (unc < thr_ref[...]).astype(jnp.int32)
+
+
 def ramp_head_stats(
     h: jax.Array,
     w: jax.Array,
@@ -99,3 +117,53 @@ def ramp_head_stats(
         interpret=interpret,
     )(h, w)
     return m, s, t, idx
+
+
+def ramp_head_exit(
+    h: jax.Array,
+    w: jax.Array,
+    thresholds: jax.Array,
+    *,
+    block_b: int = 8,
+    block_v: int = 1024,
+    interpret: bool = False,
+    v_limit: int | None = None,
+):
+    """Fused exit variant: h (B, d), w (d, V), thresholds (B,) f32.
+    Returns (m, s, t, argmax, exit_mask) — exit_mask (B,) int32 is 1 where
+    ``(1 − maxprob) < threshold`` (strict: threshold 0 precludes exiting).
+    One extra (B,)-sized output vs ``ramp_head_stats``; no extra HBM."""
+    B, d = h.shape
+    V = w.shape[1]
+    bb = min(block_b, B)
+    bv = min(block_v, V)
+    assert B % bb == 0 and V % bv == 0, (B, V, bb, bv)
+    grid = (B // bb, V // bv)
+    kernel = functools.partial(
+        _exit_kernel, bv=bv, v_limit=v_limit if v_limit is not None else V
+    )
+    m, s, t, idx, mask = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bv), lambda i, j: (0, j)),
+            pl.BlockSpec((bb,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb,), lambda i, j: (i,)),
+            pl.BlockSpec((bb,), lambda i, j: (i,)),
+            pl.BlockSpec((bb,), lambda i, j: (i,)),
+            pl.BlockSpec((bb,), lambda i, j: (i,)),
+            pl.BlockSpec((bb,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(h, w, thresholds.astype(jnp.float32))
+    return m, s, t, idx, mask

@@ -6,8 +6,12 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ramp_head.kernel import ramp_head_stats
-from repro.kernels.ramp_head.ref import ramp_head_stats_ref, stats_to_confidence
+from repro.kernels.ramp_head.kernel import ramp_head_exit, ramp_head_stats
+from repro.kernels.ramp_head.ref import (
+    ramp_head_exit_ref,
+    ramp_head_stats_ref,
+    stats_to_confidence,
+)
 
 
 @partial(jax.jit, static_argnames=("use_kernel", "interpret", "block_v"))
@@ -27,3 +31,27 @@ def ramp_confidence(
         m, s, t, idx = ramp_head_stats_ref(h, w)
     label, maxprob, entropy, lse = stats_to_confidence(m, s, t, idx)
     return {"label": label, "maxprob": maxprob, "entropy": entropy, "lse": lse}
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "interpret", "block_v"))
+def ramp_exit_decision(
+    h: jax.Array,
+    w: jax.Array,
+    thresholds: jax.Array,
+    *,
+    use_kernel: bool = True,
+    interpret: bool = False,
+    block_v: int = 1024,
+):
+    """Fused on-device exit decision: the per-ramp record PLUS a per-row
+    exit mask ``(1 − maxprob) < threshold`` — the host receives a bit per
+    row instead of comparing uncertainties itself."""
+    if use_kernel:
+        m, s, t, idx, mask = ramp_head_exit(
+            h, w, thresholds, block_v=block_v, interpret=interpret
+        )
+    else:
+        m, s, t, idx, mask = ramp_head_exit_ref(h, w, thresholds)
+    label, maxprob, entropy, lse = stats_to_confidence(m, s, t, idx)
+    return {"label": label, "maxprob": maxprob, "entropy": entropy, "lse": lse,
+            "exit": mask}

@@ -18,6 +18,16 @@ def ramp_head_stats_ref(h: jax.Array, w: jax.Array):
     return m, s, t, idx
 
 
+def ramp_head_exit_ref(h: jax.Array, w: jax.Array, thresholds: jax.Array):
+    """Oracle for the fused exit kernel: stats plus the per-row exit mask
+    ``(1 − maxprob) < threshold``. Strict ``<`` — a zero threshold can
+    never trigger an exit (``simulate_exits`` semantics)."""
+    m, s, t, idx = ramp_head_stats_ref(h, w)
+    unc = 1.0 - 1.0 / s  # maxprob = 1/s on the streaming accumulators
+    mask = (unc < thresholds.astype(jnp.float32)).astype(jnp.int32)
+    return m, s, t, idx, mask
+
+
 def stats_to_confidence(m, s, t, idx):
     """(label, maxprob, entropy, lse) from the streaming accumulators."""
     lse = m + jnp.log(s)

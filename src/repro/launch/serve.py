@@ -20,6 +20,7 @@ import numpy as np
 from repro.configs import get_bench, get_config, get_tiny
 from repro.core import ApparateController, ControllerConfig, build_profile
 from repro.data import make_decode_stream, make_image_stream, make_token_stream
+from repro.launch.tuning import PRESETS, apply_preset
 from repro.models import build_model
 from repro.serving import (
     AdmissionConfig,
@@ -130,7 +131,8 @@ def serve(domain: str, n: int, *, policy="tfserve", budget=0.02, acc=0.99,
 def serve_generative(n=48, *, decode_tokens=16, budget=0.02, acc=0.99, load=0.5,
                      seed=2, slots=4, layers=6, kv_block_size=0, kv_blocks=None,
                      prefill_chunk=0, admission=False, admission_slack=1.0,
-                     prefix_cache=False, preempt="none", verbose=True):
+                     prefix_cache=False, preempt="none", steps_per_sync=1,
+                     verbose=True):
     """End-to-end generative decode serving on a trained tiny LM: vanilla
     (no-EE) vs Apparate per-token exits, KV catch-up charged, at the same
     accuracy constraint. The latency profile uses the full qwen2-1.5b
@@ -153,7 +155,12 @@ def serve_generative(n=48, *, decode_tokens=16, budget=0.02, acc=0.99, load=0.5,
     their prefill entirely. ``preempt`` picks the pool-exhaustion
     reaction: 'swap' moves a victim's blocks to a host buffer and
     readmits it later; 'shed' discards the victim; 'none' propagates
-    ``PoolExhausted`` (legacy)."""
+    ``PoolExhausted`` (legacy).
+
+    ``steps_per_sync > 1`` dispatches decode SYNC WINDOWS: up to that
+    many decode steps per jitted while_loop with on-device exit decisions
+    against a stale threshold copy, one controller round-trip per window
+    (``GenerativeConfig.steps_per_sync``)."""
     if prefix_cache and not kv_block_size:
         raise ValueError("--prefix-cache requires --kv-block-size > 0 (paged KV)")
     if preempt != "none" and not kv_block_size:
@@ -195,7 +202,7 @@ def serve_generative(n=48, *, decode_tokens=16, budget=0.02, acc=0.99, load=0.5,
     reqs = make_gen_requests(arr, n_tokens=decode_tokens, prompt_len=seq_len,
                              slo_ms=3 * prof.vanilla_time(1))
     gcfg = GenerativeConfig(max_batch_size=mbs, prefill_chunk=prefill_chunk,
-                            preempt=preempt)
+                            preempt=preempt, steps_per_sync=steps_per_sync)
 
     def adm():
         return (AdmissionPolicy(AdmissionConfig(slack=admission_slack))
@@ -229,6 +236,8 @@ def serve_generative(n=48, *, decode_tokens=16, budget=0.02, acc=0.99, load=0.5,
     }
     if prefill_chunk:
         out["prefill_chunk"] = prefill_chunk
+    if steps_per_sync > 1:
+        out["steps_per_sync"] = steps_per_sync
     if preempt != "none":
         out["preempt"] = preempt
     if admission:
@@ -263,6 +272,17 @@ def main(argv=None):
                     help="generative + paged: pool-exhaustion reaction — "
                          "swap a victim's KV to host and readmit it later, "
                          "shed it outright, or propagate the error")
+    ap.add_argument("--steps-per-sync", type=int, default=1,
+                    help="generative: decode steps per controller sync; "
+                         ">1 fuses them into one on-device while_loop "
+                         "window with device-side exit decisions (stale "
+                         "thresholds between syncs, records replayed at "
+                         "the boundary)")
+    ap.add_argument("--runtime-preset", default="none",
+                    choices=["none"] + sorted(PRESETS),
+                    help="apply an XLA/allocator env preset before the "
+                         "run (see repro.launch.tuning; flags already "
+                         "exported in the environment win)")
     ap.add_argument("--admission", action="store_true",
                     help="enable the SLO-aware admission policy: drop "
                          "hopeless requests at admission; generative mode "
@@ -277,6 +297,8 @@ def main(argv=None):
     ap.add_argument("--dispatch", default="jsq",
                     choices=["round_robin", "jsq", "slo_aware"])
     args = ap.parse_args(argv)
+    # env presets must land before any jax backend work in the run
+    apply_preset(args.runtime_preset)
     if args.mode == "generative":
         serve_generative(args.n if args.n is not None else 48,
                          decode_tokens=args.decode_tokens,
@@ -286,7 +308,8 @@ def main(argv=None):
                          admission=args.admission,
                          admission_slack=args.admission_slack,
                          prefix_cache=args.prefix_cache,
-                         preempt=args.preempt)
+                         preempt=args.preempt,
+                         steps_per_sync=args.steps_per_sync)
     else:
         serve(args.domain, args.n if args.n is not None else 3000,
               policy=args.policy, budget=args.budget,

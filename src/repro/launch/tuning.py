@@ -1,0 +1,112 @@
+"""Runtime tuning presets: XLA flags + allocator env for serving runs.
+
+The multi-step decode window (``DecodeRunner.step_multi``) moves the
+decode hot loop into a single on-device ``lax.while_loop``; the env knobs
+that matter for it are process-level and must be set BEFORE jax
+initializes its backends. This module centralizes them as named presets
+(``--runtime-preset`` on the serve launcher) instead of ad-hoc shell
+exports:
+
+  * ``serve``  — production serving: step markers at the outermost while
+    loop (the sync window IS the step), preallocated device arena so the
+    donated cache buffers never bounce through the allocator mid-run,
+    quiet logs, tcmalloc large-alloc reports off.
+  * ``bench``  — benchmarking: same step markers but the ``platform``
+    allocator with preallocation OFF, so per-dispatch allocation cost is
+    visible instead of hidden in a warm arena.
+  * ``host-sim`` — CPU event-loop simulation (CI, laptops): pin jax to
+    the host platform with a single device.
+
+``XLA_FLAGS`` is MERGED, never clobbered: flags already present in the
+environment win over the preset's (an operator override outranks a
+default). All other vars are set only if absent unless ``force=True``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import warnings
+from typing import Dict, MutableMapping, Optional
+
+PRESETS: Dict[str, Dict[str, str]] = {
+    "serve": {
+        # 1 = mark steps at the outermost while loop — with multi-step
+        # decode that loop IS the sync window, so profilers/step counters
+        # see one step per window, not per fused token
+        "XLA_FLAGS": "--xla_step_marker_location=1",
+        "XLA_PYTHON_CLIENT_PREALLOCATE": "true",
+        "XLA_PYTHON_CLIENT_MEM_FRACTION": "0.9",
+        "TF_CPP_MIN_LOG_LEVEL": "4",
+        "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD": "60000000000",
+    },
+    "bench": {
+        "XLA_FLAGS": "--xla_step_marker_location=1",
+        "XLA_PYTHON_CLIENT_PREALLOCATE": "false",
+        "XLA_PYTHON_CLIENT_ALLOCATOR": "platform",
+        "TF_CPP_MIN_LOG_LEVEL": "4",
+    },
+    "host-sim": {
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=1",
+        "JAX_PLATFORMS": "cpu",
+        "TF_CPP_MIN_LOG_LEVEL": "4",
+    },
+}
+
+
+def _flag_name(tok: str) -> str:
+    return tok.split("=", 1)[0]
+
+
+def merge_xla_flags(preset_flags: str, existing: Optional[str]) -> str:
+    """Merge preset XLA flags under any already-exported ones. A flag
+    set in the environment shadows the preset's value for the same flag
+    name; order is existing-first (XLA honors the LAST occurrence, but we
+    drop shadowed preset tokens entirely so the result reads cleanly)."""
+    have = [t for t in (existing or "").split() if t]
+    names = {_flag_name(t) for t in have}
+    add = [t for t in preset_flags.split() if _flag_name(t) not in names]
+    return " ".join(have + add)
+
+
+def _backend_live() -> bool:
+    """True once jax has initialized a backend — merely importing jax is
+    fine (XLA parses these vars lazily at backend init), so the check
+    peeks at the bridge's backend registry, failing safe to False."""
+    jx = sys.modules.get("jax")
+    if jx is None:
+        return False
+    bridge = getattr(getattr(jx, "_src", None), "xla_bridge", None)
+    return bool(getattr(bridge, "_backends", None))
+
+
+def apply_preset(
+    name: str,
+    env: Optional[MutableMapping[str, str]] = None,
+    *,
+    force: bool = False,
+) -> Dict[str, str]:
+    """Apply preset ``name`` to ``env`` (default ``os.environ``); returns
+    the vars actually written. Warns (but still writes, for any forked
+    workers) when jax is already imported — backend-level vars set after
+    initialization are silently ignored by XLA."""
+    if name in (None, "", "none"):
+        return {}
+    if name not in PRESETS:
+        raise ValueError(f"unknown runtime preset {name!r}; have {sorted(PRESETS)}")
+    env = os.environ if env is None else env
+    if env is os.environ and _backend_live():
+        warnings.warn(
+            "runtime preset applied after a jax backend initialized: "
+            "XLA_FLAGS/allocator vars will not affect this process",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+    written: Dict[str, str] = {}
+    for k, v in PRESETS[name].items():
+        if k == "XLA_FLAGS":
+            merged = merge_xla_flags(v, env.get(k))
+            if env.get(k) != merged:
+                env[k] = written[k] = merged
+        elif force or k not in env:
+            env[k] = written[k] = v
+    return written

@@ -600,7 +600,8 @@ class LM:
         return caches, outs
 
     def decode(self, params, cache, tokens, pos, *, active_sites=None,
-               axes=LY.TEST_AXES, mesh=None, moe_impl="ep", block_tables=None):
+               axes=LY.TEST_AXES, mesh=None, moe_impl="ep", block_tables=None,
+               exit_thresholds=None):
         """One decode step. tokens: (B,1); pos: int32 scalar (shared write
         index) or int32[B] per-row write indices — batched slot caches where
         continuous batching leaves every row at its own position (each row
@@ -631,7 +632,8 @@ class LM:
                 block_tables=jnp.asarray(block_tables, jnp.int32),
             )
             outs = self._head_stats(params, h, pooled, active_sites,
-                                    axes=axes, mesh=mesh)
+                                    axes=axes, mesh=mesh,
+                                    exit_thresholds=exit_thresholds)
             return new_cache, outs
         # cache length from any attn cache leaf (mamba-only models have none)
         try:
@@ -656,19 +658,150 @@ class LM:
             moe_impl=moe_impl, pool_idx=pool_idx,
         )
         outs = self._head_stats(params, h, pooled, active_sites,
-                                axes=axes, mesh=mesh)
+                                axes=axes, mesh=mesh,
+                                exit_thresholds=exit_thresholds)
         return new_cache, outs
 
+    def _check_multi_step_support(self):
+        """Guard for the multi-step (fused-exit) decode window. The window
+        pre-claims every KV write position up front and may terminate
+        early, which relies on append-only, positionally-addressable
+        full-attention cache writes — the same contract the paged block
+        schema enforces. Recurrent (mamba) state advances aren't
+        positionally addressable (an early-terminated window couldn't be
+        unwound), ring (windowed-local) caches wrap mid-window, and
+        MLA/cross layers follow the paged rejection for the same reason:
+        the fused-exit path is defined on the production serving stack."""
+        cfg = self.cfg
+        for slot in self.plan.layer_specs():
+            if slot.mixer != "attn" or slot.cross or (slot.is_local and cfg.window):
+                raise NotImplementedError(
+                    f"multi-step fused-exit decode supports full-attention "
+                    f"layers only (mixer={slot.mixer!r}, cross={slot.cross}, "
+                    f"local={slot.is_local})"
+                )
+
+    def decode_multi(self, params, cache, tokens, pos, n_steps, *, n_max,
+                     active_sites=None, thresholds=None, row_valid=None,
+                     axes=LY.TEST_AXES, mesh=None, moe_impl="ep",
+                     block_tables=None):
+        """Up to ``n_steps`` greedy decode steps under ONE dispatch
+        (`lax.while_loop`), with the exit decision taken ON DEVICE from a
+        resident threshold vector — the host syncs once per window, not
+        once per token.
+
+        tokens: (B, 1) int32; pos: int32[B] per-row write indices (per-row
+        is REQUIRED: every window row sits at its own offset). ``n_steps``
+        is a traced scalar <= the static unroll bound ``n_max`` (callers
+        bucket it so compile count stays bounded). ``thresholds`` is the
+        (K,) f32 device-resident exit-threshold vector aligned with
+        ``active_sites`` (strict ``<``; pad slots carry 0.0, which can
+        never trigger). ``row_valid`` (B,) bool masks bucket-padding rows
+        out of the all-exited test.
+
+        Semantics (the staleness/accuracy contract, README "On-device
+        exits & sync windows"):
+
+        * every step runs the FULL model for every row — exits are
+          *decisions*, not compute cuts, because the controller's
+          agreement records need the final head's label for every token
+          (replay-completeness). What the on-device mask gates is the
+          WINDOW: once every valid row has exited, later steps are skipped
+          and control returns to the host early.
+        * thresholds are frozen across the window — deliberately stale
+          between syncs. Records for every executed step are packed and
+          streamed back at the sync boundary, so adaptation still sees
+          every token; only the *decision* lag is traded for dispatch
+          count. At ``n_steps == 1`` the decision uses the exact current
+          thresholds: bit-identical to the per-step path.
+
+        Returns ``(new_cache, (ramp_label (n_max,K,B), ramp_maxprob
+        (n_max,K,B), final_label (n_max,B), exit_site (n_max,B), n_done))``
+        — entries past ``n_done`` are garbage the caller must slice off.
+        """
+        self._check_multi_step_support()
+        B = tokens.shape[0]
+        pos = jnp.asarray(pos, jnp.int32)
+        if pos.ndim < 1:
+            raise ValueError("decode_multi requires per-row pos: int32[B]")
+        K = 0 if active_sites is None else int(jnp.shape(active_sites)[0])
+        if K and thresholds is None:
+            raise ValueError("decode_multi with active ramps needs thresholds")
+        if row_valid is None:
+            row_valid = jnp.ones((B,), bool)
+        sites_arr = (jnp.asarray(active_sites, jnp.int32)
+                     if K else jnp.zeros((0,), jnp.int32))
+        thr = (jnp.asarray(thresholds, jnp.float32)
+               if K else jnp.zeros((0,), jnp.float32))
+
+        def body(carry):
+            i, all_ex, cache, tok, p, rl, rm, fl, ex = carry
+            cache, outs = self.decode(
+                params, cache, tok, p, active_sites=active_sites, axes=axes,
+                mesh=mesh, moe_impl=moe_impl, block_tables=block_tables,
+                exit_thresholds=(thr if K else None),
+            )
+            f = outs["final"]["label"].reshape(-1).astype(jnp.int32)  # (B,)
+            if K:
+                lab = outs["ramps"]["label"].astype(jnp.int32)  # (K, B)
+                mp = outs["ramps"]["maxprob"].astype(jnp.float32)
+                # per-ramp on-device mask (fused into the pallas head when
+                # enabled); argmax returns the FIRST true row = the
+                # shallowest exiting site (active_sites ascending)
+                mask = outs["ramps"]["exit"].astype(bool)
+                anyx = jnp.any(mask, axis=0)
+                site = jnp.where(
+                    anyx, sites_arr[jnp.argmax(mask, axis=0)], -1
+                ).astype(jnp.int32)
+            else:
+                lab = jnp.zeros((0, B), jnp.int32)
+                mp = jnp.zeros((0, B), jnp.float32)
+                site = jnp.full((B,), -1, jnp.int32)
+            rl = jax.lax.dynamic_update_slice(rl, lab[None], (i, 0, 0))
+            rm = jax.lax.dynamic_update_slice(rm, mp[None], (i, 0, 0))
+            fl = jax.lax.dynamic_update_slice(fl, f[None], (i, 0))
+            ex = jax.lax.dynamic_update_slice(ex, site[None], (i, 0))
+            all_ex = jnp.all(jnp.logical_or(~row_valid, site >= 0))
+            return (i + 1, all_ex, cache, f.reshape(-1, 1), p + 1,
+                    rl, rm, fl, ex)
+
+        def cond(carry):
+            i, all_ex = carry[0], carry[1]
+            return jnp.logical_and(i < jnp.int32(n_steps),
+                                   jnp.logical_not(all_ex))
+
+        init = (
+            jnp.int32(0), jnp.asarray(False), cache, tokens, pos,
+            jnp.zeros((n_max, K, B), jnp.int32),
+            jnp.zeros((n_max, K, B), jnp.float32),
+            jnp.zeros((n_max, B), jnp.int32),
+            jnp.full((n_max, B), -1, jnp.int32),
+        )
+        n_done, _, cache, _, _, rl, rm, fl, ex = jax.lax.while_loop(
+            cond, body, init
+        )
+        return cache, (rl, rm, fl, ex, n_done)
+
     def _head_stats(self, params, h_last, pooled, active_sites,
-                    axes=None, mesh=None):
+                    axes=None, mesh=None, exit_thresholds=None):
         """Final + ramp confidence stats for serving. h_last: (B,1,d).
 
         With cfg.pallas_head != 'off', stats stream through the fused
-        ramp_head kernel — (B,V) logits are never materialized in HBM."""
+        ramp_head kernel — (B,V) logits are never materialized in HBM.
+
+        With ``exit_thresholds`` (K,) f32 (the device-resident threshold
+        vector, aligned with ``active_sites``), the ramps output also
+        carries ``exit`` (K,B) int32 — the per-ramp on-device exit
+        decision ``(1 − maxprob) < threshold`` (strict, so 0.0 precludes
+        exiting). On the pallas path the compare happens INSIDE the fused
+        kernel (``ramp_head_exit``); the dense path applies the identical
+        f32 formula, so the two agree bit-for-bit with the host's
+        ``simulate_exits``."""
         cfg = self.cfg
         h = LY.apply_norm(cfg, params["final_norm"], h_last)
         if cfg.pallas_head != "off":
-            return self._head_stats_pallas(params, h, pooled, active_sites)
+            return self._head_stats_pallas(params, h, pooled, active_sites,
+                                           exit_thresholds=exit_thresholds)
         logits = LY.unembed(cfg, params["tok"], h)[:, 0].astype(jnp.float32)
         if axes is not None:
             logits = LY.constrain(logits, axes.aspec("data", "model"), mesh)
@@ -679,22 +812,37 @@ class LM:
                                    axes=axes, mesh=mesh)
             rl = _mask_pad_vocab(cfg, rl[:, :, 0])  # (K,B,V)
             outs["ramps"] = _stats(rl)
+            if exit_thresholds is not None:
+                thr = jnp.asarray(exit_thresholds, jnp.float32)
+                unc = 1.0 - outs["ramps"]["maxprob"].astype(jnp.float32)
+                outs["ramps"]["exit"] = (unc < thr[:, None]).astype(jnp.int32)
         return outs
 
-    def _head_stats_pallas(self, params, h_normed, pooled, active_sites):
-        from repro.kernels.ramp_head import ramp_head_stats, stats_to_confidence
+    def _head_stats_pallas(self, params, h_normed, pooled, active_sites,
+                           exit_thresholds=None):
+        from repro.kernels.ramp_head import (
+            ramp_head_exit,
+            ramp_head_stats,
+            stats_to_confidence,
+        )
 
         cfg = self.cfg
         interp = cfg.pallas_head == "interpret"
         wf = params["tok"]["embed"].T if cfg.tie_embeddings else params["tok"]["lm_head"]
 
-        def stats_of(hb, w):
-            m, s, t, idx = ramp_head_stats(
-                hb, w, interpret=interp, v_limit=cfg.vocab_size,
-                block_b=min(8, hb.shape[0]), block_v=min(1024, w.shape[1]),
-            )
+        def stats_of(hb, w, thr=None):
+            kw = dict(interpret=interp, v_limit=cfg.vocab_size,
+                      block_b=min(8, hb.shape[0]), block_v=min(1024, w.shape[1]))
+            if thr is None:
+                m, s, t, idx = ramp_head_stats(hb, w, **kw)
+                mask = None
+            else:
+                m, s, t, idx, mask = ramp_head_exit(hb, w, thr, **kw)
             label, maxprob, entropy, _ = stats_to_confidence(m, s, t, idx)
-            return {"label": label, "maxprob": maxprob, "entropy": entropy}
+            out = {"label": label, "maxprob": maxprob, "entropy": entropy}
+            if mask is not None:
+                out["exit"] = mask
+            return out
 
         outs = {"final": stats_of(h_normed[:, 0], wf)}
         if active_sites is not None:
@@ -704,12 +852,16 @@ class LM:
             nw = jnp.take(params["ramps"]["norm_w"], site_idx, axis=0)
             hs = LY.rms_norm(hs, nw[:, None, :])
             K = hs.shape[0]
+            B = hs.shape[1]
             per = []
             for kk in range(K):  # K is small & static (ramp budget slots)
                 w = wf if cfg.ramp_style == "tied" else jnp.take(
                     params["ramps"]["head"], site_idx[kk], axis=0
                 )
-                per.append(stats_of(hs[kk], w))
+                thr = (jnp.broadcast_to(
+                    jnp.asarray(exit_thresholds, jnp.float32)[kk], (B,))
+                    if exit_thresholds is not None else None)
+                per.append(stats_of(hs[kk], w, thr))
             outs["ramps"] = {
                 key: jnp.stack([p[key] for p in per]) for key in per[0]
             }

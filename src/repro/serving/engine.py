@@ -502,20 +502,51 @@ class GenerativeAdapter:
             return
 
     def _step(self, core: EngineCore) -> None:
-        """One engine step: chunked prefills co-scheduled with one decode
-        step over the decoding slots (the legacy path is the special case
-        of zero prefilling slots)."""
+        """One engine step — or one SYNC WINDOW when the runner exposes
+        ``step_multi``: up to ``steps_per_sync`` decode steps run in ONE
+        dispatch with exit decisions made on-device against the
+        controller's (stale-between-syncs) threshold copy, and the packed
+        per-step records are REPLAYED here through the exact per-step
+        accounting (observe → releases → KV deferral → shed), so the
+        controller still sees every token and timing/SLO semantics are
+        per-step. Chunked prefills are co-scheduled with the first decode
+        step; windows shrink to 1 while any slot is prefilling (chunks
+        must interleave every step) and never extend past the earliest
+        finishing stream. The legacy per-step path is the special case of
+        a runner without ``step_multi`` (and the equivalence tests pin
+        ``steps_per_sync=1`` bit-identical across both)."""
         eng = self.eng
         chunk_ms = self._prefill_chunks(core) if eng.cfg.prefill_chunk > 0 else 0.0
         ctl = eng.controller
         act = sorted(ctl.active) if ctl is not None else []
+        multi = eng.runner is not None and ctl is not None and hasattr(
+            eng.runner, "step_multi"
+        )
+        exits_d = None
         while True:
             sids = [s for s in sorted(self.slots) if self.slots[s]["resp"] is not None]
             B = len(sids)
             if not (B and eng.runner is not None and ctl is not None):
                 break
             try:
-                labels, unc, finals = eng.runner.step(sids, act)
+                if multi:
+                    prefilling = any(v["resp"] is None for v in self.slots.values())
+                    n_window = 1 if prefilling else max(1, min(
+                        eng.cfg.steps_per_sync,
+                        min(self.slots[s]["req"].n_tokens
+                            - len(self.slots[s]["resp"].tokens) for s in sids),
+                    ))
+                    # per-active-site thresholds as of DISPATCH time — the
+                    # device copy the window's exits are decided against
+                    thr = (ctl.thresholds[np.asarray(act, np.int64)].astype(np.float32)  # repro: allow[host-sync] — host index build from a python list — no device operand
+                           if act else np.zeros(0, np.float32))
+                    labels, unc, finals, exits_d = eng.runner.step_multi(
+                        sids, act, n_window, thr
+                    )
+                    eng.n_windows += 1
+                else:
+                    l1, u1, f1 = eng.runner.step(sids, act)
+                    labels, unc, finals = l1[None], u1[None], f1[None]
                 break
             except PoolExhausted:
                 # a stepped slot needs a block the pool can't give: preempt
@@ -523,48 +554,72 @@ class GenerativeAdapter:
                 if eng.cfg.preempt == "none" or not self._preempt_one(core):
                     raise
         eng.peak_slots = max(eng.peak_slots, B)
-        eng.slot_history.append(B)
-        if B and eng.runner is not None and ctl is not None:
-            dec = ctl.observe(labels, unc, finals)
-            ex = np.asarray(dec.exit_sites, np.int64)
-            released = np.asarray(dec.released_labels)
-        else:
-            finals = np.zeros(B, np.int64)
-            ex = np.full(B, -1, np.int64)
-            released = finals
-        kv_now = self._pending_kv
-        step_ms = eng.profile.decode_step_time(ex, act) + chunk_ms
-        start = self._now
-        end = start + kv_now + step_ms
-        self._pending_kv = 0.0
-        eng.kv_ms += kv_now
-        # releases + next-step KV deferral, grouped by exit site so the
-        # catch-up's weight traffic amortizes across this step's exits
-        kv_by_site: Dict[int, int] = {}
-        for j, sid in enumerate(sids):
-            sl = self.slots[sid]
-            site = int(ex[j])
-            if site >= 0:
-                off = release_offset(eng.profile, site, B, act)
-                rel = min(start + kv_now + off, end)
+        live = bool(B and eng.runner is not None and ctl is not None)
+        nd = finals.shape[0] if live else 1
+        for t in range(nd):
+            if live:
+                # replay one window step: the device-decided exits are
+                # honored (forced), the records still feed adaptation, and
+                # ``act`` pins the gather set even if a mid-window _adjust
+                # changes the controller's active ramps. The per-step path
+                # keeps the bare legacy signature (stub controllers in the
+                # tests implement exactly that protocol).
+                if exits_d is None:
+                    dec = ctl.observe(labels[t], unc[t], finals[t])
+                else:
+                    dec = ctl.observe(labels[t], unc[t], finals[t],
+                                      forced_exits=exits_d[t], act=act)
+                fin = finals[t]
+                ex = np.asarray(dec.exit_sites, np.int64)  # repro: allow[host-sync] — controller decisions are already host numpy
+                released = np.asarray(dec.released_labels)  # repro: allow[host-sync] — controller decisions are already host numpy
             else:
-                rel = end
-            resp = sl["resp"]
-            resp.release_ms.append(rel)
-            resp.exit_sites.append(site)
-            resp.tokens.append(int(released[j]))
-            resp.final_tokens.append(int(finals[j]))
-            eng.n_tokens += 1
-            core.emit(rel, self.pool, (sl["req"].rid, len(resp.tokens) - 1))
-            done = len(resp.tokens)
-            if done >= sl["req"].n_tokens:
-                self._finish(sid, core)  # slot reusable at the next step boundary
-            elif eng.admission is not None and eng.admission.note_token(
-                (eng.wid, sid, sl["req"].rid), rel - resp.release_ms[-2], sl["req"].slo_ms
-            ):
-                self._finish(sid, core, shed=True)  # doomed mid-stream: shed
-            elif site >= 0:
-                kv_by_site[site] = kv_by_site.get(site, 0) + 1
+                fin = np.zeros(B, np.int64)
+                ex = np.full(B, -1, np.int64)
+                released = fin
+            eng.slot_history.append(B)
+            kv_now = self._pending_kv
+            step_ms = eng.profile.decode_step_time(ex, act) + (
+                chunk_ms if t == 0 else 0.0
+            )
+            start = self._now
+            end = start + kv_now + step_ms
+            self._pending_kv = 0.0
+            eng.kv_ms += kv_now
+            # releases + next-step KV deferral, grouped by exit site so the
+            # catch-up's weight traffic amortizes across this step's exits
+            kv_by_site: Dict[int, int] = {}
+            for j, sid in enumerate(sids):
+                sl = self.slots.get(sid)
+                if sl is None or sl["resp"] is None:
+                    continue  # shed at an earlier replayed step of this window
+                site = int(ex[j])
+                if site >= 0:
+                    off = release_offset(eng.profile, site, B, act)
+                    rel = min(start + kv_now + off, end)
+                else:
+                    rel = end
+                resp = sl["resp"]
+                resp.release_ms.append(rel)
+                resp.exit_sites.append(site)
+                resp.tokens.append(int(released[j]))
+                resp.final_tokens.append(int(fin[j]))
+                eng.n_tokens += 1
+                core.emit(rel, self.pool, (sl["req"].rid, len(resp.tokens) - 1))
+                done = len(resp.tokens)
+                if done >= sl["req"].n_tokens:
+                    self._finish(sid, core)  # slot reusable at the next step boundary
+                elif eng.admission is not None and eng.admission.note_token(
+                    (eng.wid, sid, sl["req"].rid), rel - resp.release_ms[-2],
+                    sl["req"].slo_ms,
+                ):
+                    self._finish(sid, core, shed=True)  # doomed mid-stream: shed
+                elif site >= 0:
+                    kv_by_site[site] = kv_by_site.get(site, 0) + 1
+            for site, cnt in kv_by_site.items():
+                self._pending_kv += eng.profile.kv_fill_cost(site, cnt)
+            eng.busy_ms += kv_now + step_ms
+            eng.n_steps += 1
+            self._now = end
         # completed prefills release their first token at step end
         for sid in sorted(self.slots):
             sl = self.slots[sid]
@@ -582,11 +637,6 @@ class GenerativeAdapter:
             core.emit(end, self.pool, (r.rid, 0))
             if r.n_tokens <= 1:
                 self._finish(sid, core)
-        for site, cnt in kv_by_site.items():
-            self._pending_kv += eng.profile.kv_fill_cost(site, cnt)
-        eng.busy_ms += kv_now + step_ms
-        eng.n_steps += 1
-        self._now = end
 
     def finalize(self) -> List[GenResponse]:
         self.eng.makespan_ms = self._now

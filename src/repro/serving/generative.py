@@ -69,6 +69,16 @@ class GenerativeConfig:
     #            it when the pool drains; an AdmissionPolicy (if present)
     #            refines the choice per victim by SLO slack
     preempt: str = "none"
+    # decode steps per controller sync (host round-trip). > 1 dispatches a
+    # SYNC WINDOW: up to this many decode steps in one jitted while_loop
+    # with exit decisions made on-device against a deliberately STALE
+    # threshold copy; the window's packed records stream back at the sync
+    # boundary and the controller replays every one of them, so
+    # adaptation sees every token at most one window late. 1 = classic
+    # per-step sync (bit-identical records either way — the equivalence
+    # oracle the tests pin). Needs a runner exposing ``step_multi``;
+    # others fall back to per-step.
+    steps_per_sync: int = 1
 
 
 def offered_decode_qps(profile, *, max_batch_size: int, tokens_per_request: int,
@@ -112,6 +122,10 @@ class GenerativeEngine:
             raise ValueError(
                 f"preempt must be 'none'|'swap'|'shed', got {self.cfg.preempt!r}"
             )
+        if self.cfg.steps_per_sync < 1:
+            raise ValueError(
+                f"steps_per_sync must be >= 1, got {self.cfg.steps_per_sync}"
+            )
         if (runner is None) != (controller is None):
             raise ValueError("runner and controller must be supplied together (or neither)")
         self.runner = runner
@@ -128,6 +142,7 @@ class GenerativeEngine:
         self.chunk_ms = 0.0  # co-scheduled chunked-prefill time
         self.n_steps = 0
         self.n_tokens = 0
+        self.n_windows = 0  # sync windows dispatched (step_multi runners)
         self.n_chunks = 0  # prefill chunks co-scheduled into steps
         self.n_shed = 0  # slots shed mid-stream by the admission policy
         self.n_preempt_swaps = 0  # pool-exhaustion victims swapped to host
@@ -174,6 +189,10 @@ class GenerativeEngine:
         if self.controller is not None:
             out["ramp_overhead_ms"] = self.controller.total_ramp_overhead(1)
             out["active_ramps"] = float(len(self.controller.active))
+        if self.n_windows:
+            # host round-trips: one controller sync per window instead of
+            # one per decode step (host_syncs / tokens is the bench metric)
+            out["sync_windows"] = float(self.n_windows)
         if self.runner is not None and hasattr(self.runner, "dispatches"):
             # accelerator dispatches issued by the runner across the run:
             # 1/step for the batched DecodeRunner, B/step for the per-slot

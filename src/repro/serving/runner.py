@@ -170,6 +170,20 @@ class BlockAllocator:
         if self.refcount[b] == 0:
             heapq.heappush(self._free, b)
 
+    def release_tail(self, slot: int, keep: int) -> None:
+        """Drop ``slot``'s table entries beyond the first ``keep`` — a sync
+        window that terminated early unwinds its over-claimed appends here,
+        restoring the exact allocator state the per-step path would hold.
+        ``peak_blocks`` is deliberately NOT rewound: it records the
+        transient high-water mark the window really reached."""
+        k = int(self.owned[slot])
+        if keep >= k:
+            return
+        for b in self.table[slot, keep:k]:
+            self._deref(int(b))
+        self.table[slot, keep:k] = 0
+        self.owned[slot] = keep
+
     def free_slot(self, slot: int) -> None:
         """Drop every reference ``slot`` holds (blocks free at refcount 0)."""
         k = int(self.owned[slot])
@@ -329,7 +343,7 @@ class SyntheticRunner:
         self.n_classes = n_classes
 
     def infer(self, items: np.ndarray, active: Sequence[int]):
-        items = np.asarray(items)
+        items = np.asarray(items)  # repro: allow[host-sync] — host input normalization — items never lives on device
         k = len(active)
         B = len(items)
         final = (items % self.n_classes).astype(np.int64)
@@ -411,12 +425,12 @@ class ClassifierRunner:
             )
         k = len(act)
         if k == 0:
-            final = np.asarray(self._fn(bs, None)(self.params, x))[: len(items)]
+            final = np.asarray(self._fn(bs, None)(self.params, x))[: len(items)]  # repro: allow[host-sync] — sanctioned record drain: one stats pull per dispatch
             return np.zeros((0, len(items)), np.int64), np.zeros((0, len(items)), np.float32), final
         labels, unc, final = self._fn(bs, act)(self.params, x)
-        labels = np.asarray(labels)[:, : len(items)]
-        unc = np.asarray(unc)[:, : len(items)]
-        final = np.asarray(final)[: len(items)]
+        labels = np.asarray(labels)[:, : len(items)]  # repro: allow[host-sync] — sanctioned record drain: one stats pull per dispatch
+        unc = np.asarray(unc)[:, : len(items)]  # repro: allow[host-sync] — sanctioned record drain: one stats pull per dispatch
+        final = np.asarray(final)[: len(items)]  # repro: allow[host-sync] — sanctioned record drain: one stats pull per dispatch
         return labels[:k], unc[:k].astype(np.float32), final
 
     def vanilla_labels(self, n: Optional[int] = None) -> np.ndarray:
@@ -493,16 +507,16 @@ class LMTokenRunner:
             )
         k = len(act)
         if k == 0:
-            final = np.asarray(self._fn_noramp(bs)(self.params, toks))[: len(items)]
+            final = np.asarray(self._fn_noramp(bs)(self.params, toks))[: len(items)]  # repro: allow[host-sync] — sanctioned record drain: one stats pull per dispatch
             return np.zeros((0, len(items)), np.int64), np.zeros((0, len(items)), np.float32), final
         pad_act = act + [act[-1]] * (self.max_slots - len(act))
         labels, unc, final = self._fn(bs)(
             self.params, toks, jnp.asarray(pad_act, jnp.int32)
         )
-        final = np.asarray(final)[: len(items)]
+        final = np.asarray(final)[: len(items)]  # repro: allow[host-sync] — sanctioned record drain: one stats pull per dispatch
         return (
-            np.asarray(labels)[:k, : len(items)],
-            np.asarray(unc)[:k, : len(items)].astype(np.float32),
+            np.asarray(labels)[:k, : len(items)],  # repro: allow[host-sync] — sanctioned record drain: one stats pull per dispatch
+            np.asarray(unc)[:k, : len(items)].astype(np.float32),  # repro: allow[host-sync] — sanctioned record drain: one stats pull per dispatch
             final,
         )
 
@@ -582,6 +596,13 @@ class DecodeRunner:
         self._pf_progress = {}  # slot -> item for in-flight chunked prefills
         self._dec = None
         self._dec0 = None  # no-ramp (vanilla) decode variant
+        self._decm = {}  # multi-step (sync window) programs, keyed by n_max
+        self._decm0 = {}  # no-ramp multi-step variant, keyed by n_max
+        # device-resident exit thresholds: pushed once per sync window and
+        # ONLY when the controller actually changed them — between syncs
+        # the device decides exits from this (deliberately stale) copy
+        self._thr_host = None
+        self._thr_dev = None
         # -- paged-KV state (decode_attn='paged'|'paged-kernel'|'paged-interpret')
         self.paged = str(getattr(model.cfg, "decode_attn", "")).startswith("paged")
         self._bs_blk = int(kv_block_size)
@@ -866,6 +887,80 @@ class DecodeRunner:
             self._dec0 = dec0
         return self._dec0
 
+    def _donate_cache(self):
+        """Donate the cache/pool operand to the multi-step program so the
+        while_loop reuses its buffers in place (the runner always rebinds
+        ``self._cache`` from the result). CPU XLA does not implement
+        donation and would warn per dispatch — skip it there."""
+        return (1,) if jax.default_backend() != "cpu" else ()
+
+    def _decode_multi_fn(self, n_max: int):
+        if n_max not in self._decm:
+            m = self.model
+
+            @partial(jax.jit, donate_argnums=self._donate_cache())  # repro: allow[jit-cache-hygiene] — wrapper memoized by the enclosing runner
+            def decm(params, big, toks, pos, rows, active, thr, n, valid):
+                sub = self._tree_take(big, rows)
+                sub, outs = m.decode_multi(
+                    params, sub, toks, pos, n, n_max=n_max,
+                    active_sites=active, thresholds=thr, row_valid=valid,
+                    moe_impl="dense",
+                )
+                big = self._tree_put(big, sub, rows)
+                return big, outs
+
+            self._decm[n_max] = decm
+        return self._decm[n_max]
+
+    def _decode_multi_fn_noramp(self, n_max: int):
+        if n_max not in self._decm0:
+            m = self.model
+
+            @partial(jax.jit, donate_argnums=self._donate_cache())  # repro: allow[jit-cache-hygiene] — wrapper memoized by the enclosing runner
+            def decm0(params, big, toks, pos, rows, n, valid):
+                sub = self._tree_take(big, rows)
+                sub, outs = m.decode_multi(
+                    params, sub, toks, pos, n, n_max=n_max,
+                    active_sites=None, row_valid=valid, moe_impl="dense",
+                )
+                big = self._tree_put(big, sub, rows)
+                return big, outs
+
+            self._decm0[n_max] = decm0
+        return self._decm0[n_max]
+
+    def _decode_multi_fn_paged(self, n_max: int):
+        if n_max not in self._decm:
+            m = self.model
+
+            @partial(jax.jit, donate_argnums=self._donate_cache())  # repro: allow[jit-cache-hygiene] — wrapper memoized by the enclosing runner
+            def decm(params, pools, toks, pos, tables, active, thr, n, valid):
+                pools, outs = m.decode_multi(
+                    params, pools, toks, pos, n, n_max=n_max,
+                    active_sites=active, thresholds=thr, row_valid=valid,
+                    moe_impl="dense", block_tables=tables,
+                )
+                return pools, outs
+
+            self._decm[n_max] = decm
+        return self._decm[n_max]
+
+    def _decode_multi_fn_paged_noramp(self, n_max: int):
+        if n_max not in self._decm0:
+            m = self.model
+
+            @partial(jax.jit, donate_argnums=self._donate_cache())  # repro: allow[jit-cache-hygiene] — wrapper memoized by the enclosing runner
+            def decm0(params, pools, toks, pos, tables, n, valid):
+                pools, outs = m.decode_multi(
+                    params, pools, toks, pos, n, n_max=n_max,
+                    active_sites=None, row_valid=valid,
+                    moe_impl="dense", block_tables=tables,
+                )
+                return pools, outs
+
+            self._decm0[n_max] = decm0
+        return self._decm0[n_max]
+
     def _copy_block_fn(self):
         """Whole-block pool copy (CoW): duplicate physical block ``src``
         into ``dst`` across every cache leaf — src/dst are traced scalars,
@@ -896,17 +991,23 @@ class DecodeRunner:
             self._prefix.evict_for(n)
         self._alloc.require(n)
 
-    def _claim_step_blocks(self, slots: Sequence[int]) -> None:
+    def _claim_step_blocks(self, slots: Sequence[int], offset: int = 0) -> None:
         """All-or-nothing block claim for one decode-token write per slot:
         totals the appends (slot's current block full) and CoW copies
         (append lands in a block another slot or the prefix cache still
         references) across ALL stepped slots, reserves them in one pass,
         THEN mutates — a mid-loop ``PoolExhausted`` can no longer leave
-        earlier slots holding freshly appended blocks."""
+        earlier slots holding freshly appended blocks.
+
+        ``offset`` claims for the write at ``pos + offset`` instead of
+        ``pos``: a sync window pre-claims its N steps as N sequential
+        calls with offsets 0..N-1, which replicates the per-step claim
+        (and prefix-eviction) order EXACTLY — block-id assignment off the
+        min-heap stays bit-identical to N separate ``step`` calls."""
         al, bs = self._alloc, self._bs_blk
         need_app, need_cow, total = [], [], 0
         for s in dict.fromkeys(slots):
-            k, p = int(al.owned[s]), int(self._pos[s])
+            k, p = int(al.owned[s]), int(self._pos[s]) + offset
             na = max(0, p // bs + 1 - k)
             if k + na > al.max_blocks:
                 raise ValueError(
@@ -952,7 +1053,7 @@ class DecodeRunner:
             raise KeyError(f"slot {slot} is mid-prefill (cannot swap)")
         ids = self._alloc.owned_ids(slot)
         idx = jnp.asarray(ids, jnp.int32)
-        bufs = [np.asarray(jnp.take(l, idx, axis=ax))
+        bufs = [np.asarray(jnp.take(l, idx, axis=ax))  # repro: allow[host-sync] — swap-out IS the host transfer — gathering KV blocks is its job
                 for l, ax in zip(jax.tree.leaves(self._cache), self._pool_axes)]
         self._alloc.free_slot(slot)
         self._live.discard(slot)
@@ -1033,14 +1134,14 @@ class DecodeRunner:
                 self._cache, lab = self._prefill_fn_paged()(
                     self.params, self._cache, toks, jnp.asarray(ids, jnp.int32)
                 )
-                tok = int(np.asarray(lab).reshape(-1)[0])
+                tok = int(np.asarray(lab).reshape(-1)[0])  # repro: allow[host-sync] — sanctioned first-token read: admission needs the prefill label
             if self._prefix is not None:
                 self._prefix.register(self.prompts[item], self._alloc.owned_ids(slot), tok)
         else:
             self._cache, lab = self._prefill_fn()(
                 self.params, self._cache, toks, jnp.int32(slot)
             )
-            tok = int(np.asarray(lab).reshape(-1)[0])
+            tok = int(np.asarray(lab).reshape(-1)[0])  # repro: allow[host-sync] — sanctioned first-token read: admission needs the prefill label
         self._live.add(slot)
         self._pos[slot] = self.prompts.shape[1]
         self._tok[slot] = tok
@@ -1141,7 +1242,7 @@ class DecodeRunner:
         B=1 gather/scatter on the batched cache, per-row position — the
         same compiled path a decode step uses, so the cache layout cannot
         diverge between chunked and one-shot prefill."""
-        rows = np.asarray([slot], np.int64)
+        rows = np.asarray([slot], np.int64)  # repro: allow[host-sync] — host row-index build — no device operand
         toks = jnp.asarray([[tok]], jnp.int32)
         pos = jnp.asarray(self._pos[rows], jnp.int32)
         if self.paged:
@@ -1156,21 +1257,38 @@ class DecodeRunner:
             )
         self.dispatches += 1
         self._pos[slot] += 1
-        return int(np.asarray(fl).reshape(-1)[0])
+        return int(np.asarray(fl).reshape(-1)[0])  # repro: allow[host-sync] — sanctioned token read: resumed prefill feeds it to the next chunk
 
-    def step(self, slots: Sequence[int], active: Sequence[int]):
-        """ONE decode step — one jitted dispatch — for every slot in
-        ``slots``. Returns (ramp_labels (K,B), ramp_unc (K,B), final (B,))
-        with rows in sorted(active) order and columns in ``slots`` order."""
+    def _validate_active(self, active: Sequence[int]) -> List[int]:
+        """Sorted active set, refusing (not silently truncating) oversize
+        sets: truncation would return fewer record rows than the controller
+        asked for and land rows against the wrong sites — the same fix
+        ``ClassifierRunner.infer``/``LMTokenRunner.infer`` carry."""
+        act = sorted(active)
+        if len(act) > self.max_slots:
+            raise ValueError(
+                f"active ramp set has {len(act)} sites, max_slots={self.max_slots}"
+            )
+        return act
+
+    def _validate_slots(self, slots: Sequence[int]) -> List[int]:
         slots = list(slots)
         for s in slots:
             if s not in self._live:
                 raise KeyError(f"slot {s} is not live (freed or never started)")
             if s in self._pf_progress:
                 raise KeyError(f"slot {s} is mid-prefill (resume its chunks first)")
+        return slots
+
+    def step(self, slots: Sequence[int], active: Sequence[int]):
+        """ONE decode step — one jitted dispatch — for every slot in
+        ``slots``. Returns (ramp_labels (K,B), ramp_unc (K,B), final (B,))
+        with rows in sorted(active) order and columns in ``slots`` order."""
+        slots = self._validate_slots(slots)
+        act = self._validate_active(active)
         B = len(slots)
         if B == 0:  # nothing in flight: no dispatch (mirrors the loop runner)
-            k = len(sorted(active)[: self.max_slots])
+            k = len(act)
             return (np.zeros((k, 0), np.int64), np.zeros((k, 0), np.float32),
                     np.zeros(0, np.int64))
         bucket = min(_bucket(B), self._rows)
@@ -1182,10 +1300,9 @@ class DecodeRunner:
         # advance that slot's recurrent state off-schedule.
         free = [r for r in range(self._rows) if r not in self._live][: bucket - B]
         dup = [slots[i % B] for i in range(bucket - B - len(free))] if B else []
-        rows = np.asarray(slots + free + dup, np.int64)
+        rows = np.asarray(slots + free + dup, np.int64)  # repro: allow[host-sync] — host row-index build — no device operand
         toks = jnp.asarray(self._tok[rows].reshape(-1, 1), jnp.int32)
         pos = jnp.asarray(self._pos[rows], jnp.int32)
-        act = sorted(active)[: self.max_slots]
         k = len(act)
         if self.paged:
             # append a block only when a stepped slot's current block is
@@ -1214,8 +1331,8 @@ class DecodeRunner:
                     self.params, self._cache, toks, pos, rows_j, pad_act
                 )
         if k:
-            labels = np.asarray(rl).reshape(self.max_slots, -1)[:k, :B].astype(np.int64)
-            unc = np.asarray(ru).reshape(self.max_slots, -1)[:k, :B].astype(np.float32)
+            labels = np.asarray(rl).reshape(self.max_slots, -1)[:k, :B].astype(np.int64)  # repro: allow[host-sync] — sanctioned per-step record drain (the sync step_multi amortizes)
+            unc = np.asarray(ru).reshape(self.max_slots, -1)[:k, :B].astype(np.float32)  # repro: allow[host-sync] — sanctioned per-step record drain (the sync step_multi amortizes)
         else:
             if self.paged:
                 self._cache, fl = self._decode_fn_paged_noramp()(
@@ -1228,10 +1345,149 @@ class DecodeRunner:
             labels = np.zeros((0, B), np.int64)
             unc = np.zeros((0, B), np.float32)
         self.dispatches += 1
-        final = np.asarray(fl).reshape(-1)[:B].astype(np.int64)
+        final = np.asarray(fl).reshape(-1)[:B].astype(np.int64)  # repro: allow[host-sync] — sanctioned per-step final-token drain (the sync step_multi amortizes)
         self._pos[rows[:B]] += 1
         self._tok[rows[:B]] = final  # vanilla greedy trajectory (agreement baseline)
         return labels, unc, final
+
+    def _thr_device(self, thr: np.ndarray):
+        """Device-resident per-site exit thresholds, padded to
+        ``max_slots`` with 0.0 (strict ``<`` means the pad sites can never
+        fire). Re-pushed ONLY when the controller's values actually
+        changed — unchanged windows reuse the device copy with zero
+        host→device traffic."""
+        pad = np.zeros(self.max_slots, np.float32)
+        pad[: len(thr)] = thr
+        if self._thr_host is None or not np.array_equal(pad, self._thr_host):
+            self._thr_host = pad
+            self._thr_dev = jnp.asarray(pad)
+        return self._thr_dev
+
+    def step_multi(self, slots: Sequence[int], active: Sequence[int],
+                   n_steps: int, thresholds: np.ndarray):
+        """A SYNC WINDOW: up to ``n_steps`` decode steps in ONE jitted
+        dispatch (a ``lax.while_loop`` on device), with per-row exit
+        decisions made ON DEVICE against ``thresholds`` — the device copy
+        of the controller's per-active-site thresholds, deliberately
+        STALE between syncs (the controller only retunes at window
+        boundaries).
+
+        Returns ``(labels, unc, finals, exits)`` with a leading
+        executed-step axis ``nd <= n_steps``: ``labels``/``unc`` are
+        ``(nd, K, B)`` in sorted(active) x ``slots`` order, ``finals``/
+        ``exits`` are ``(nd, B)``. ``exits[t, b]`` is the FIRST active
+        site whose on-device mask fired for slot ``b`` at window step
+        ``t`` (−1 = none), bit-identical to ``simulate_exits`` over the
+        returned records. The window terminates early after the first
+        step where every live row exits — the remaining steps would be
+        tokens the serving layer has already cut.
+
+        Staleness/accuracy contract: exit decisions inside the window use
+        the thresholds as of dispatch time, but the packed records stream
+        back at the sync boundary and the controller REPLAYS every one of
+        them — adaptation sees every token, delayed by at most one
+        window, never lossy. ``n_steps=1`` is bit-identical to ``step``
+        (the equivalence oracle the tests pin)."""
+        slots = self._validate_slots(slots)
+        act = self._validate_active(active)
+        k = len(act)
+        if int(n_steps) < 1:
+            raise ValueError(f"sync window needs n_steps >= 1, got {n_steps}")
+        thr = np.asarray(thresholds, np.float32).reshape(-1)  # repro: allow[host-sync] — host threshold normalization — controller thresholds are host numpy
+        if thr.shape[0] != k:
+            raise ValueError(
+                f"thresholds has {thr.shape[0]} entries for {k} active sites"
+            )
+        B = len(slots)
+        if B == 0:  # nothing in flight: no dispatch (mirrors ``step``)
+            return (np.zeros((0, k, 0), np.int64), np.zeros((0, k, 0), np.float32),
+                    np.zeros((0, 0), np.int64), np.zeros((0, 0), np.int64))
+        headroom = min(self._cache_len - int(self._pos[s]) for s in slots)
+        n = min(int(n_steps), max(1, headroom))
+        n_max = _bucket(n)
+        bucket = min(_bucket(B), self._rows)
+        free = [r for r in range(self._rows) if r not in self._live][: bucket - B]
+        dup = [slots[i % B] for i in range(bucket - B - len(free))]
+        rows = np.asarray(slots + free + dup, np.int64)  # repro: allow[host-sync] — host row-index build — no device operand
+        toks = jnp.asarray(self._tok[rows].reshape(-1, 1), jnp.int32)
+        pos = jnp.asarray(self._pos[rows], jnp.int32)
+        # FREE pad rows hold garbage — mask them out of the all-exited
+        # early-termination vote (dup rows mirror a stepped slot, so
+        # their vote is redundant either way)
+        valid = np.zeros(bucket, bool)
+        valid[:B] = True
+        valid_j = jnp.asarray(valid)
+        if self.paged:
+            # pre-claim the whole window as n sequential per-step claims:
+            # identical claim/eviction order to n ``step`` calls, so
+            # block-id assignment off the min-heap stays bit-identical.
+            # On PoolExhausted the appended tail is unwound to the
+            # pre-window watermark (CoW copies stay — they are private,
+            # content-identical replacements), leaving the claim
+            # retry-safe for the engine's preempt-and-retry loop.
+            al = self._alloc
+            base_owned = {s: int(al.owned[s]) for s in slots}
+            try:
+                for i in range(n):
+                    self._claim_step_blocks(slots, offset=i)
+            except PoolExhausted:
+                for s in slots:
+                    al.release_tail(s, base_owned[s])
+                raise
+            tables = al.table[rows].copy()
+            if free:
+                tables[B : B + len(free)] = 0
+            tables_j = jnp.asarray(tables, jnp.int32)
+            if k:
+                pad_act = jnp.asarray(act + [act[-1]] * (self.max_slots - k), jnp.int32)
+                self._cache, (rl, rm, fl, ex, ndv) = self._decode_multi_fn_paged(n_max)(
+                    self.params, self._cache, toks, pos, tables_j, pad_act,
+                    self._thr_device(thr), jnp.int32(n), valid_j
+                )
+            else:
+                self._cache, (rl, rm, fl, ex, ndv) = self._decode_multi_fn_paged_noramp(
+                    n_max
+                )(self.params, self._cache, toks, pos, tables_j, jnp.int32(n), valid_j)
+        else:
+            rows_j = jnp.asarray(rows, jnp.int32)
+            if k:
+                pad_act = jnp.asarray(act + [act[-1]] * (self.max_slots - k), jnp.int32)
+                self._cache, (rl, rm, fl, ex, ndv) = self._decode_multi_fn(n_max)(
+                    self.params, self._cache, toks, pos, rows_j, pad_act,
+                    self._thr_device(thr), jnp.int32(n), valid_j
+                )
+            else:
+                self._cache, (rl, rm, fl, ex, ndv) = self._decode_multi_fn_noramp(
+                    n_max
+                )(self.params, self._cache, toks, pos, rows_j, jnp.int32(n), valid_j)
+        self.dispatches += 1  # ONE dispatch per window, however many steps ran
+        # the executed-step count is the ONE scalar the host must learn
+        # before slicing the packed outputs — the single sync per window
+        # is the whole point of the design
+        nd = int(ndv)  # repro: allow[host-sync] — the one sanctioned sync per window
+        # repro: allow[host-sync] — sync-boundary record drain (replay-completeness)
+        labels = np.asarray(rl)[:nd, :k, :B].astype(np.int64)
+        # host 1.0 − maxprob in f32 is the same IEEE op the per-step
+        # program runs on device — unc stays bit-identical to ``step``
+        # repro: allow[host-sync] — sync-boundary record drain (replay-completeness)
+        unc = (np.float32(1.0) - np.asarray(rm)[:nd, :k, :B]).astype(np.float32)
+        # repro: allow[host-sync] — sync-boundary record drain (replay-completeness)
+        finals = np.asarray(fl)[:nd, :B].astype(np.int64)
+        # repro: allow[host-sync] — sync-boundary exit-mask drain
+        exits = np.asarray(ex)[:nd, :B].astype(np.int64)
+        self._pos[rows[:B]] += nd
+        self._tok[rows[:B]] = finals[nd - 1]
+        if self.paged and nd < n:
+            # early termination: return the blocks pre-claimed for steps
+            # that never ran. They were never written (executed-step
+            # writes all land within ``keep``), so releasing them cannot
+            # leak state; ``peak_blocks`` keeps the transient high-water
+            # mark by design.
+            bs = self._bs_blk
+            for s in slots:
+                keep = max(base_owned[s], (int(self._pos[s]) - 1) // bs + 1)
+                self._alloc.release_tail(s, keep)
+        return labels, unc, finals, exits
 
     def free(self, slot: int) -> None:
         if self.paged and self._alloc is not None and slot in self._live:
@@ -1313,14 +1569,19 @@ class LoopDecodeRunner:
     def start(self, slot: int, item: int) -> int:
         toks = jnp.asarray(self.prompts[item][None, :])
         cache, lab = self._prefill_fn()(self.params, toks)
-        tok = int(np.asarray(lab).reshape(-1)[0])
+        tok = int(np.asarray(lab).reshape(-1)[0])  # repro: allow[host-sync] — sanctioned first-token read (per-slot loop oracle)
         self._slots[slot] = {"cache": cache, "pos": self.prompts.shape[1], "tok": tok}
         return tok
 
     def step(self, slots: Sequence[int], active: Sequence[int]):
         """One decode step for every slot in ``slots`` — one jitted B=1
         dispatch per slot. Row/column order matches ``DecodeRunner.step``."""
-        act = sorted(active)[: self.max_slots]
+        act = sorted(active)
+        if len(act) > self.max_slots:
+            # refuse, never silently truncate (matches DecodeRunner.step)
+            raise ValueError(
+                f"active ramp set has {len(act)} sites, max_slots={self.max_slots}"
+            )
         k = len(act)
         labels = np.zeros((max(k, 1), len(slots)), np.int64)
         unc = np.full((max(k, 1), len(slots)), 1.0, np.float32)
@@ -1337,12 +1598,12 @@ class LoopDecodeRunner:
                 st["cache"], (rl, ru, fl) = dec(
                     self.params, st["cache"], tok, jnp.int32(st["pos"]), pad_act
                 )
-                labels[:, b] = np.asarray(rl).reshape(self.max_slots, -1)[:k, 0]
-                unc[:, b] = np.asarray(ru).reshape(self.max_slots, -1)[:k, 0]
+                labels[:, b] = np.asarray(rl).reshape(self.max_slots, -1)[:k, 0]  # repro: allow[host-sync] — sanctioned record drain (per-slot loop oracle)
+                unc[:, b] = np.asarray(ru).reshape(self.max_slots, -1)[:k, 0]  # repro: allow[host-sync] — sanctioned record drain (per-slot loop oracle)
             else:
                 st["cache"], fl = dec0(self.params, st["cache"], tok, jnp.int32(st["pos"]))
             self.dispatches += 1
-            fl = int(np.asarray(fl).reshape(-1)[0])
+            fl = int(np.asarray(fl).reshape(-1)[0])  # repro: allow[host-sync] — sanctioned token read (per-slot loop oracle)
             final[b] = fl
             st["pos"] += 1
             st["tok"] = fl  # vanilla greedy trajectory (agreement baseline)

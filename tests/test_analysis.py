@@ -21,6 +21,7 @@ EXPECTED_RULES = {
     "no-wallclock",
     "jit-cache-hygiene",
     "kernel-pairing",
+    "host-sync",
 }
 
 
@@ -341,6 +342,70 @@ def test_kernel_pairing_satisfied_directly_and_via_init(tmp_path):
         "tests/test_b.py": "from repro.kernels.b import kernel, ref\n",
     }, rules={"kernel-pairing"})
     assert _hits(res, "kernel-pairing") == []
+
+
+# -- host-sync ---------------------------------------------------------------
+
+
+def test_host_sync_flags_syncs_in_hot_methods(tmp_path):
+    res = _lint(tmp_path, {
+        "src/repro/serving/r.py": """\
+            import numpy as np
+
+            class R:
+                def step(self, slots, active):
+                    labels = np.asarray(self._run())   # line 5: transfer
+                    tok = int(self._run())             # line 6: scalar pull
+                    labels.block_until_ready()         # line 7: barrier
+                    return labels, tok
+        """,
+    }, rules={"host-sync"})
+    assert _hits(res, "host-sync") == [
+        ("src/repro/serving/r.py", 5),
+        ("src/repro/serving/r.py", 6),
+        ("src/repro/serving/r.py", 7),
+    ]
+
+
+def test_host_sync_scoped_to_hot_methods_and_serving_tree(tmp_path):
+    res = _lint(tmp_path, {
+        # same calls in a non-hot method: fine (cold path)
+        "src/repro/serving/r.py": """\
+            import numpy as np
+
+            class R:
+                def snapshot(self):
+                    return np.asarray(self._run()).item()
+
+                def step(self, slots):
+                    n = int(self._pos[0])   # int() on a Subscript: host numpy
+                    return n
+        """,
+        # hot method name outside src/repro/serving/: out of scope
+        "src/repro/core/c.py": """\
+            import numpy as np
+
+            def step(x):
+                return np.asarray(x)
+        """,
+    }, rules={"host-sync"})
+    assert _hits(res, "host-sync") == []
+
+
+def test_host_sync_pragma_marks_sanctioned_sync(tmp_path):
+    res = _lint(tmp_path, {
+        "src/repro/serving/r.py": """\
+            import numpy as np
+
+            class R:
+                def step_multi(self, slots, active, n_steps):
+                    # repro: allow[host-sync] — the one sync per window
+                    nd = int(self._dispatch())
+                    return nd
+        """,
+    }, rules={"host-sync"})
+    assert res.findings == []
+    assert res.n_suppressed == 1
 
 
 # -- pragmas / allowlist -----------------------------------------------------

@@ -292,3 +292,190 @@ def test_randomized_schedules_fuzz(fuzz_trio):
     pr._prefix.clear()
     assert pa.pins == 0
     assert pa.live_blocks == 0 and pa.n_free == pa.n_blocks
+
+
+# ---------------------------------------------------------------------------
+# multi-step sync windows: step_multi vs the per-step path, bit for bit
+
+STEPS_PER_SYNC = (1, 2, 4, 7)
+N_WINDOW_SCHEDULES = 40
+
+
+@pytest.fixture(scope="module")
+def window_pairs():
+    """(multi, oracle) `DecodeRunner` pairs — contiguous and paged —
+    sharing one model/params/prompts. The multi runner takes whole sync
+    windows (`step_multi`); the oracle is driven one `step` at a time
+    (itself pinned bit-identical to `LoopDecodeRunner` by the fuzz above).
+    The paged pool is generous (`kv_blocks=64`) so the window's up-front
+    claim (blocks pre-claimed for steps an early exit then skips) never
+    forces an eviction the per-step path wouldn't take."""
+    cfg = get_tiny("qwen2-1.5b").replace(n_layers=3, vocab_size=128, decode_attn="ref")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(4))
+    prompts = np.random.default_rng(5).integers(0, 128, (16, 12)).astype(np.int32)
+    kw = dict(max_new_tokens=MAX_NEW, max_slots=3)
+    paged_model = build_model(cfg.replace(decode_attn="paged"))
+    pkw = dict(kv_block_size=4, kv_blocks=64, **kw)
+    return {
+        "contig": (DecodeRunner(model, params, prompts, **kw),
+                   DecodeRunner(model, params, prompts, **kw)),
+        "paged": (DecodeRunner(paged_model, params, prompts, **pkw),
+                  DecodeRunner(paged_model, params, prompts, **pkw)),
+    }
+
+
+def _assert_alloc_equal(a, b, tag):
+    """Full allocator-state equality (peak_blocks excluded: the window's
+    transient over-claim legitimately raises the high-water mark)."""
+    np.testing.assert_array_equal(a.table, b.table, err_msg=f"{tag}: block table")
+    np.testing.assert_array_equal(a.owned, b.owned, err_msg=f"{tag}: owned")
+    np.testing.assert_array_equal(a.refcount, b.refcount, err_msg=f"{tag}: refcount")
+    assert (a.n_free, a.live_blocks) == (b.n_free, b.live_blocks), tag
+    assert sorted(a._free) == sorted(b._free), f"{tag}: free set"
+
+
+def _run_window_schedule(rng, pair, n_sites, tag0, allocs=None):
+    from repro.core.exits import simulate_exits
+
+    multi, oracle = pair
+    live = {}  # slot -> decode steps taken
+    for op_i in range(int(rng.integers(6, 14))):
+        free_slots = [s for s in range(3) if s not in live]
+        steppable = [s for s in sorted(live) if live[s] < MAX_NEW - 1]
+        ops = (["admit"] if free_slots else []) + (["win", "win"] if steppable else [])
+        ops += ["free"] if live else []
+        op = ops[int(rng.integers(len(ops)))]
+        tag = f"{tag0} op {op_i} ({op})"
+        if op == "admit":
+            slot = int(free_slots[int(rng.integers(len(free_slots)))])
+            item = int(rng.integers(16))
+            assert multi.start(slot, item) == oracle.start(slot, item), tag
+            live[slot] = 0
+        elif op == "win":
+            nsub = int(rng.integers(1, len(steppable) + 1))
+            subset = [int(s) for s in rng.permutation(steppable)[:nsub]]
+            # ascending active set (engine passes sorted(ctl.active));
+            # sometimes empty -> the no-ramp window variant
+            act = [int(s) for s in np.flatnonzero(rng.random(n_sites) < 0.6)]
+            # mix never-fires (0), rarely-fires, and often-fires thresholds
+            # so windows run full length AND terminate early
+            thr = rng.choice(
+                [0.0, 0.3, 0.9, 0.999, 0.9999], size=len(act)
+            ).astype(np.float32)
+            n_req = int(rng.choice(STEPS_PER_SYNC))
+            labels, unc, finals, exits = multi.step_multi(subset, act, n_req, thr)
+            nd = finals.shape[0]
+            # cache headroom: pos sits at prompt_len + live[s], cache_len =
+            # prompt_len + MAX_NEW, so MAX_NEW - live[s] writes remain
+            n_clamped = min(n_req, min(MAX_NEW - live[s] for s in subset))
+            assert 1 <= nd <= n_clamped, tag
+            thr_full = np.zeros(n_sites, np.float32)
+            if act:
+                thr_full[np.asarray(act)] = thr
+            for t in range(nd):
+                lo, uo, fo = oracle.step(subset, act)
+                np.testing.assert_array_equal(labels[t], lo, err_msg=f"{tag} t={t}: labels")
+                np.testing.assert_array_equal(unc[t], uo, err_msg=f"{tag} t={t}: unc")
+                np.testing.assert_array_equal(finals[t], fo, err_msg=f"{tag} t={t}: final")
+                # device exit decisions == host simulate_exits on the very
+                # records the window streamed back (the replay contract)
+                unc_m = np.zeros((len(subset), n_sites), np.float32)
+                val_m = np.zeros((len(subset), n_sites), bool)
+                for j, site in enumerate(act):
+                    unc_m[:, site] = unc[t, j]
+                    val_m[:, site] = True
+                ex_host = simulate_exits(unc_m, val_m, thr_full, act)
+                np.testing.assert_array_equal(exits[t], ex_host, err_msg=f"{tag} t={t}: exits")
+            # a short window is EXACTLY "every row exited at its last step"
+            if nd < n_clamped:
+                assert (exits[nd - 1] >= 0).all(), tag
+            for s in subset:
+                live[s] += nd
+            if allocs is not None:
+                _assert_alloc_equal(*allocs, tag)
+        else:
+            slot = sorted(live)[int(rng.integers(len(live)))]
+            multi.free(slot)
+            oracle.free(slot)
+            del live[slot]
+    for s in list(live):
+        multi.free(s)
+        oracle.free(s)
+
+
+@pytest.mark.parametrize("kind", ["contig", "paged"])
+def test_sync_window_schedules_fuzz(window_pairs, kind):
+    """Seeded random schedules: every executed window step bit-identical
+    to the per-step path (labels/unc/finals), device exit sites identical
+    to `simulate_exits` over the streamed records, early termination only
+    when every row exited, and (paged) allocator state — block tables,
+    refcounts, free SET — indistinguishable after every window."""
+    pair = window_pairs[kind]
+    allocs = None
+    if kind == "paged":
+        # allocators materialize on first start(); prime them
+        for r in pair:
+            r.start(0, 0)
+            r.free(0)
+        allocs = (pair[0]._alloc, pair[1]._alloc)
+    rng = np.random.default_rng(0xF00D if kind == "contig" else 0xBEEF)
+    n_sites = pair[0].n_sites
+    for sched_id in range(N_WINDOW_SCHEDULES):
+        _run_window_schedule(rng, pair, n_sites, f"{kind} schedule {sched_id}", allocs)
+    if allocs is not None:
+        for a in allocs:
+            assert a.live_blocks == 0 and a.n_free == a.n_blocks
+    # one dispatch per window: strictly fewer than the per-step oracle's
+    assert pair[0].dispatches < pair[1].dispatches
+
+
+def test_sync_window_single_step_bit_identical(window_pairs):
+    """The pinned degenerate case: steps_per_sync=1 windows for a whole
+    request are bit-identical to `step` — same records, same trajectory."""
+    multi, oracle = window_pairs["contig"]
+    assert multi.start(0, 3) == oracle.start(0, 3)
+    assert multi.start(1, 5) == oracle.start(1, 5)
+    thr = np.asarray([0.5, 0.5], np.float32)[: multi.n_sites]
+    act = list(range(len(thr)))
+    for i in range(MAX_NEW - 1):
+        labels, unc, finals, exits = multi.step_multi([0, 1], act, 1, thr)
+        assert finals.shape[0] == 1
+        lo, uo, fo = oracle.step([0, 1], act)
+        np.testing.assert_array_equal(labels[0], lo, err_msg=f"round {i}: labels")
+        np.testing.assert_array_equal(unc[0], uo, err_msg=f"round {i}: unc")
+        np.testing.assert_array_equal(finals[0], fo, err_msg=f"round {i}: final")
+    for s in (0, 1):
+        multi.free(s)
+        oracle.free(s)
+
+
+def test_step_validators_reject_bad_inputs(window_pairs):
+    """Regression for the silent-truncation bug: an active set larger than
+    max_slots used to be clipped by the record reshape (rows landing
+    against the wrong sites); every runner now refuses. Plus the window's
+    own argument contracts."""
+    multi, oracle = window_pairs["contig"]
+    multi.start(0, 1)
+    oversize = [0] * (multi.max_slots + 1)
+    with pytest.raises(ValueError, match="active ramp set"):
+        multi.step([0], oversize)
+    with pytest.raises(ValueError, match="active ramp set"):
+        multi.step_multi([0], oversize, 2, np.zeros(len(oversize), np.float32))
+    with pytest.raises(ValueError, match="n_steps >= 1"):
+        multi.step_multi([0], [0], 0, np.zeros(1, np.float32))
+    with pytest.raises(ValueError, match="thresholds"):
+        multi.step_multi([0], [0], 2, np.zeros(2, np.float32))
+    # stepping a non-live slot still refuses before any dispatch
+    with pytest.raises(KeyError):
+        multi.step_multi([2], [0], 2, np.zeros(1, np.float32))
+    multi.free(0)
+
+    cfg = get_tiny("qwen2-1.5b").replace(n_layers=3, vocab_size=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(6))
+    prompts = np.random.default_rng(7).integers(0, 128, (4, 12)).astype(np.int32)
+    loop = LoopDecodeRunner(model, params, prompts, max_new_tokens=4, max_slots=2)
+    loop.start(0, 0)
+    with pytest.raises(ValueError, match="active ramp set"):
+        loop.step([0], [0, 0, 0])

@@ -12,6 +12,8 @@ import pytest
 from repro.kernels.decode_attention import decode_attention, decode_attention_ref
 from repro.kernels.flash_attention import flash_attention, attention_ref
 from repro.kernels.ramp_head import (
+    ramp_head_exit,
+    ramp_head_exit_ref,
     ramp_head_stats,
     ramp_head_stats_ref,
     stats_to_confidence,
@@ -26,6 +28,14 @@ def test_kernels_smoke_interpret():
     out_k = ramp_head_stats(h, w, interpret=True, block_v=256)
     out_r = ramp_head_stats_ref(h, w)
     assert (np.asarray(out_k[3]) == np.asarray(out_r[3])).all()
+    np.testing.assert_allclose(np.asarray(out_k[0]), np.asarray(out_r[0]), rtol=3e-3, atol=3e-3)
+
+    thr = jnp.asarray([0.0, 0.5, 0.9, 1.0], jnp.float32)
+    out_k = ramp_head_exit(h, w, thr, interpret=True, block_v=256)
+    out_r = ramp_head_exit_ref(h, w, thr)
+    assert (np.asarray(out_k[3]) == np.asarray(out_r[3])).all()
+    assert (np.asarray(out_k[4]) == np.asarray(out_r[4])).all()
+    assert int(out_k[4][0]) == 0  # threshold 0 can never trigger (strict <)
     np.testing.assert_allclose(np.asarray(out_k[0]), np.asarray(out_r[0]), rtol=3e-3, atol=3e-3)
 
     ks = jax.random.split(jax.random.PRNGKey(2), 3)
@@ -88,6 +98,49 @@ def test_ramp_head_confidence_semantics():
     np.testing.assert_allclose(np.asarray(maxprob), np.asarray(p.max(-1)), rtol=1e-5)
     href = -jnp.sum(p * jnp.log(p + 1e-30), -1)
     np.testing.assert_allclose(np.asarray(entropy), np.asarray(href), rtol=1e-4, atol=1e-4)
+
+
+def test_ramp_head_exit_threshold_semantics():
+    """Strict-< exit boundary, bit-exact against the ref oracle's own unc:
+    thr == unc must NOT exit; the next float up must; thr 0 never does."""
+    h = jax.random.normal(jax.random.PRNGKey(4), (4, 32))
+    w = jax.random.normal(jax.random.PRNGKey(5), (32, 256)) * 0.05
+    _, s, _, _ = ramp_head_stats_ref(h, w)
+    unc = np.asarray(1.0 - 1.0 / s, np.float32)
+
+    for thr, want in [
+        (np.zeros(4, np.float32), np.zeros(4, np.int32)),        # never exits
+        (unc.copy(), np.zeros(4, np.int32)),                     # == : strict, no exit
+        (np.nextafter(unc, np.float32(2.0)), np.ones(4, np.int32)),  # just above: exits
+        (np.ones(4, np.float32), np.ones(4, np.int32)),          # 1.0 > unc always
+    ]:
+        for fn in (
+            lambda t: ramp_head_exit(h, w, jnp.asarray(t), interpret=True, block_v=256)[4],
+            lambda t: ramp_head_exit_ref(h, w, jnp.asarray(t))[4],
+        ):
+            got = np.asarray(fn(thr))
+            assert (got == want).all(), (thr, got, want)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "B,d,V,dt,bv",
+    [
+        (8, 64, 2048, jnp.float32, 512),
+        (16, 128, 4096, jnp.bfloat16, 1024),
+        (4, 32, 512, jnp.bfloat16, 512),
+    ],
+)
+def test_ramp_head_exit_sweep(B, d, V, dt, bv):
+    h = jax.random.normal(jax.random.PRNGKey(0), (B, d), dt)
+    w = jax.random.normal(jax.random.PRNGKey(1), (d, V), dt) * 0.05
+    thr = jnp.linspace(0.0, 1.0, B, dtype=jnp.float32)
+    out_k = ramp_head_exit(h, w, thr, interpret=True, block_v=bv)
+    out_r = ramp_head_exit_ref(h, w, thr)
+    assert (np.asarray(out_k[3]) == np.asarray(out_r[3])).all()
+    assert (np.asarray(out_k[4]) == np.asarray(out_r[4])).all()
+    for a, b in zip(out_k[:3], out_r[:3]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-3, atol=3e-3)
 
 
 @pytest.mark.slow

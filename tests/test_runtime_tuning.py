@@ -1,0 +1,58 @@
+"""Runtime tuning presets (`repro.launch.tuning`): env-merge semantics.
+
+These never touch ``os.environ`` — every case runs against a plain dict,
+so the suite's own XLA configuration is never perturbed.
+"""
+import pytest
+
+from repro.launch.tuning import PRESETS, apply_preset, merge_xla_flags
+
+
+def test_merge_xla_flags_existing_shadows_preset():
+    out = merge_xla_flags(
+        "--xla_step_marker_location=1 --xla_foo=2",
+        "--xla_step_marker_location=0",
+    )
+    # the operator's value wins for the shared flag; the preset's other
+    # flag is appended after the existing ones
+    assert out == "--xla_step_marker_location=0 --xla_foo=2"
+    assert merge_xla_flags("--a=1", None) == "--a=1"
+    assert merge_xla_flags("--a=1", "") == "--a=1"
+
+
+def test_apply_preset_writes_only_absent_vars():
+    env = {"TF_CPP_MIN_LOG_LEVEL": "0"}
+    written = apply_preset("serve", env)
+    assert env["TF_CPP_MIN_LOG_LEVEL"] == "0"  # setdefault: operator wins
+    assert "TF_CPP_MIN_LOG_LEVEL" not in written
+    assert env["XLA_FLAGS"] == PRESETS["serve"]["XLA_FLAGS"]
+    assert env["XLA_PYTHON_CLIENT_PREALLOCATE"] == "true"
+    # force overrides the existing value
+    written = apply_preset("serve", env, force=True)
+    assert env["TF_CPP_MIN_LOG_LEVEL"] == "4"
+    assert written["TF_CPP_MIN_LOG_LEVEL"] == "4"
+
+
+def test_apply_preset_merges_xla_flags_never_clobbers():
+    env = {"XLA_FLAGS": "--xla_step_marker_location=0 --xla_custom=z"}
+    apply_preset("bench", env)
+    assert env["XLA_FLAGS"] == "--xla_step_marker_location=0 --xla_custom=z"
+    env2 = {"XLA_FLAGS": "--xla_custom=z"}
+    apply_preset("bench", env2)
+    assert env2["XLA_FLAGS"] == "--xla_custom=z --xla_step_marker_location=1"
+
+
+def test_apply_preset_none_and_unknown():
+    env = {}
+    assert apply_preset("none", env) == {}
+    assert apply_preset("", env) == {}
+    assert env == {}
+    with pytest.raises(ValueError, match="unknown runtime preset"):
+        apply_preset("warp-speed", env)
+
+
+def test_every_preset_applies_cleanly_to_empty_env():
+    for name, preset in PRESETS.items():
+        env = {}
+        written = apply_preset(name, env)
+        assert written == preset == env, name

@@ -34,6 +34,7 @@ EXPECTED = {
         "chunked_prefill": STATUS_SUPPORTED,
         "paged_block_schema": STATUS_REJECTED,
         "ramp_heads": STATUS_SUPPORTED,
+        "decode_fused_exit": STATUS_REJECTED,  # recurrent state can't pre-claim/unwind a window
     },
     "deepseek-v2-lite-16b": {
         "prefill": STATUS_SUPPORTED,
@@ -43,6 +44,7 @@ EXPECTED = {
         "chunked_prefill": STATUS_SUPPORTED,
         "paged_block_schema": STATUS_REJECTED,
         "ramp_heads": STATUS_SUPPORTED,
+        "decode_fused_exit": STATUS_REJECTED,  # MLA slots follow the paged rejection
     },
 }
 
