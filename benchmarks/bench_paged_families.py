@@ -1,0 +1,118 @@
+"""Paged decode across mixer families (gate rows for CI).
+
+The block pool now pages every mixer family the repo serves — MLA latent
+streams, per-slot SSM state pages, and ring-paged local windows — and the
+claim is the same everywhere: paging is a pure LAYOUT change. Per family
+this runs the staggered continuous-batching workload on a paged
+`DecodeRunner` and a contiguous `DecodeRunner` oracle and records
+
+  * ``identical`` — bit-identical greedy tokens (gated per family),
+  * ``dispatches_equal`` — paging adds zero extra dispatches (gated),
+  * peak-KV-bytes savings — pool bytes vs ``n_slots x cache_len`` rows
+    (snapshotted; token-cache families shrink ~`n_slots/live`, pure-SSM
+    state does NOT scale with tokens so its ratio is reported, not sold).
+
+Gate row (CI greps it): ``paged_families_gate`` must carry
+``identical_all=True;dispatches_equal_all=True``.
+
+Oracle attention impls mirror the equivalence tests
+(`tests/test_decode_equivalence.py::FAMILY_CONFIGS`): the paged global
+path defers to `decode_attention_ref`, so attention oracles route 'ref'
+where global layers exist and the exact absorbed math ('dense') for MLA.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+N_SLOTS = 8
+MAX_NEW = 8
+PROMPT_LEN = 12  # cache_len 20 = 5 blocks of 4 (bs | cache_len: bit-identity)
+BS_BLK = 4
+KV_BLOCKS = 14  # >= 2 live slots x 5 blocks + headroom, << N_SLOTS x 5
+
+FAMILIES = {
+    # family -> (tiny config, contiguous-oracle decode_attn)
+    "mla": ("deepseek-v2-lite-16b", "dense"),
+    "mamba": ("mamba2-2.7b", "dense"),
+    "local": ("gemma3-4b", "ref"),
+}
+
+
+def bench_paged_families():
+    import jax
+
+    from benchmarks.run import emit, snapshot
+    from repro.configs import get_tiny
+    from repro.models import build_model
+    from repro.serving import DecodeRunner
+
+    snap = {}
+    ident_all = disp_all = True
+    for family, (name, oracle_attn) in FAMILIES.items():
+        cfg = get_tiny(name).replace(vocab_size=128, decode_attn=oracle_attn)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(10))
+        prompts = np.random.default_rng(11).integers(
+            0, 128, (16, PROMPT_LEN)
+        ).astype(np.int32)
+        act = [0, len(model.sites) - 1]
+        kw = dict(max_new_tokens=MAX_NEW, max_slots=3, n_slots=N_SLOTS)
+
+        def staggered(r):
+            """4 waves of 2 short-lived requests; at most 2 of N_SLOTS
+            live at once — the concurrency headroom paging buys."""
+            toks, wall, steps = [], 0.0, 0
+            for w in range(4):
+                s0, s1 = (2 * w) % N_SLOTS, (2 * w + 1) % N_SLOTS
+                toks.append(r.start(s0, 2 * w))
+                toks.append(r.start(s1, 2 * w + 1))
+                for _ in range(MAX_NEW - 2):
+                    t0 = time.perf_counter()
+                    _, _, fin = r.step([s0, s1], act)
+                    wall += time.perf_counter() - t0
+                    steps += 1
+                    toks.extend(int(t) for t in fin)
+                r.free(s0)
+                r.free(s1)
+            return toks, wall / steps * 1e6
+
+        cont = DecodeRunner(model, params, prompts, **kw)
+        paged = DecodeRunner(
+            build_model(cfg.replace(decode_attn="paged")), params, prompts,
+            kv_block_size=BS_BLK, kv_blocks=KV_BLOCKS, **kw
+        )
+        assert paged.paged and not cont.paged
+        staggered(cont), staggered(paged)  # warmup: compile both paths
+        cont.dispatches = paged.dispatches = 0
+        tc, us_c = staggered(cont)
+        tp, us_p = staggered(paged)
+        identical = tc == tp
+        dispatches_equal = cont.dispatches == paged.dispatches
+        ident_all &= identical
+        disp_all &= dispatches_equal
+        bc, bp = cont.cache_bytes(), paged.cache_bytes()
+        st = paged.kv_stats()
+        emit(f"paged_families_{family}", us_p,
+             f"identical={identical};dispatches_equal={dispatches_equal}")
+        emit(f"paged_families_{family}_bytes", bc / bp,
+             f"contig_bytes={bc};paged_bytes={bp};"
+             f"peak_blocks={st['peak_blocks']}")
+        snap[family] = {
+            "config": name,
+            "us_per_step_contiguous": float(us_c),
+            "us_per_step_paged": float(us_p),
+            "contiguous_cache_bytes": int(bc),
+            "paged_cache_bytes": int(bp),
+            "bytes_ratio": float(bc / bp),
+            "peak_blocks": int(st["peak_blocks"]),
+            "dispatches": int(paged.dispatches),
+            "identical": bool(identical),
+            "dispatches_equal": bool(dispatches_equal),
+        }
+    emit("paged_families_gate", 0.0,
+         f"identical_all={ident_all};dispatches_equal_all={disp_all}")
+    snap["identical_all"] = bool(ident_all)
+    snap["dispatches_equal_all"] = bool(disp_all)
+    snapshot("paged_families", snap)

@@ -668,6 +668,7 @@ def bench_kernels():
     emit("kernel_ssd_ref", us, f"interp_max_err={err:.2e}")
 
 
+from benchmarks.bench_paged_families import bench_paged_families  # noqa: E402
 from benchmarks.bench_prefix_cache import bench_prefix_cache  # noqa: E402
 from benchmarks.bench_steps_per_sync import bench_steps_per_sync  # noqa: E402
 
@@ -689,6 +690,7 @@ ALL = [
     bench_decode_dispatch,
     bench_tune_wall,
     bench_paged_kv,
+    bench_paged_families,
     bench_chunked_prefill,
     bench_prefix_cache,
     bench_steps_per_sync,

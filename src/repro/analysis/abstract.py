@@ -127,7 +127,10 @@ def _lm_decode(cfg, *, decode_attn, paged=False, active=None):
         cache = abstract_from_schema(
             model.paged_cache_schema(N_BLOCKS, BLOCK_SIZE)
         )  # raises NotImplementedError for non-pageable slots
-        tables = _aval((B, MAX_BLOCKS), jnp.int32)
+        # the runner widens every shipped table by the trailing pinned
+        # xkv columns (cross-attention encoder pages)
+        nbx = model.paged_xkv_blocks(BLOCK_SIZE)
+        tables = _aval((B, MAX_BLOCKS + nbx), jnp.int32)
         pos = _aval((B,), jnp.int32)
 
         def fn(p, c, toks, po, tb, act):
@@ -151,10 +154,10 @@ def _lm_decode(cfg, *, decode_attn, paged=False, active=None):
 def _lm_decode_fused(cfg):
     """Multi-step fused-exit decode window: ``decode_multi`` traces a
     2-step ``lax.while_loop`` with a device-resident (K,) threshold vector
-    and bucket-padding row mask. ``_check_multi_step_support`` rejects
-    mamba/MLA/local-windowed slots with an explicit NotImplementedError
-    (the window pre-claims KV write positions, which only append-only
-    full-attention caches support)."""
+    and bucket-padding row mask. The window is family-agnostic: the loop
+    advances EVERY row exactly ``n_done`` steps, so recurrent (mamba),
+    MLA, and ring-window caches stay consistent without per-family
+    carve-outs."""
     model = build_model(cfg)
     params = abstract_from_schema(model.schema())
     cache = abstract_from_schema(model.cache_schema(B, CACHE_LEN))
@@ -236,16 +239,44 @@ def probe(cfg, path: str) -> None:
             raise NotImplementedError(
                 "enc-dec decoder wires dense cache attention only (no decode_impl)"
             )
-        elif path in ("decode_paged", "paged_block_schema"):
-            raise NotImplementedError("enc-dec caches are built by prefill; no paged layout")
+        elif path == "decode_paged":
+            # paged decode needs decode_attn routing for the self-attn
+            # layers; the cross layers gather their pinned read-only xkv
+            # pages through the trailing table columns
+            pm = build_model(cfg.replace(decode_attn="paged"))
+            params = abstract_from_schema(pm.schema())
+            cache = abstract_from_schema(pm.paged_cache_schema(N_BLOCKS, BLOCK_SIZE))
+            nbx = pm.paged_xkv_blocks(BLOCK_SIZE)
+            tables = _aval((B, MAX_BLOCKS + nbx), jnp.int32)
+
+            def fn(p, c, toks, po, tb):
+                return pm.decode(p, c, toks, po, active_sites=None, block_tables=tb)
+
+            jax.eval_shape(
+                fn, params, cache, _tokens(cfg, B, 1), _aval((B,), jnp.int32), tables
+            )
+        elif path == "paged_block_schema":
+            model.paged_cache_schema(N_BLOCKS, BLOCK_SIZE)
         elif path == "chunked_prefill":
             _encdec_prefill(model, cfg, s=CHUNK, cache_len=CACHE_LEN)
         elif path == "ramp_heads":
             _encdec_prefill(model, cfg, s=S, cache_len=S, active=_n_active(model))
         elif path == "decode_fused_exit":
-            raise NotImplementedError(
-                "enc-dec decoder wires dense cache attention only; no "
-                "multi-step fused-exit window (no decode_multi)"
+            params = abstract_from_schema(model.schema())
+            cache, _ = _encdec_prefill(model, cfg, s=S, cache_len=CACHE_LEN)
+            k = _n_active(model)
+
+            def fn(p, c, toks, po, act, thr, valid, n):
+                return model.decode_multi(
+                    p, c, toks, po, n, n_max=2,
+                    active_sites=act, thresholds=thr, row_valid=valid,
+                    moe_impl="dense",
+                )
+
+            jax.eval_shape(
+                fn, params, cache, _tokens(cfg, B, 1), _aval((B,), jnp.int32),
+                jnp.arange(k, dtype=jnp.int32), _aval((k,), jnp.float32),
+                _aval((B,), jnp.bool_), _aval((), jnp.int32),
             )
         return
 

@@ -1,7 +1,13 @@
 from repro.kernels.decode_attention.kernel import decode_attention
-from repro.kernels.decode_attention.ops import attend_decode, attend_decode_paged
+from repro.kernels.decode_attention.ops import (
+    attend_decode,
+    attend_decode_paged,
+    attend_decode_paged_mla,
+)
 from repro.kernels.decode_attention.paged import paged_decode_attention
+from repro.kernels.decode_attention.paged_mla import paged_mla_decode_attention
 from repro.kernels.decode_attention.ref import (
     decode_attention_ref,
     paged_decode_attention_ref,
+    paged_mla_decode_attention_ref,
 )

@@ -7,9 +7,11 @@ import jax
 
 from repro.kernels.decode_attention.kernel import decode_attention
 from repro.kernels.decode_attention.paged import paged_decode_attention
+from repro.kernels.decode_attention.paged_mla import paged_mla_decode_attention
 from repro.kernels.decode_attention.ref import (
     decode_attention_ref,
     paged_decode_attention_ref,
+    paged_mla_decode_attention_ref,
 )
 
 
@@ -27,3 +29,16 @@ def attend_decode_paged(q, k_pool, v_pool, block_table, pos, *,
         return paged_decode_attention(q, k_pool, v_pool, block_table, pos,
                                       interpret=interpret)
     return paged_decode_attention_ref(q, k_pool, v_pool, block_table, pos)
+
+
+@partial(jax.jit, static_argnames=("scale", "use_kernel", "interpret"))
+def attend_decode_paged_mla(q_lat, q_pe, c_pool, kpe_pool, block_table, pos,
+                            *, scale, use_kernel=True, interpret=False):
+    if use_kernel:
+        return paged_mla_decode_attention(
+            q_lat, q_pe, c_pool, kpe_pool, block_table, pos,
+            scale=scale, interpret=interpret,
+        )
+    return paged_mla_decode_attention_ref(
+        q_lat, q_pe, c_pool, kpe_pool, block_table, pos, scale=scale
+    )

@@ -1,0 +1,127 @@
+"""Paged flash-decode Pallas kernel for MLA latent attention.
+
+MLA decodes against a COMPRESSED latent cache, not per-head k/v: the
+pools hold one shared latent stream per layer — ``c (P, bs, r)`` (which
+doubles as the value stream) and the rope key ``k_pe (P, bs, dr)``. With
+the absorbed decode trick the query arrives already projected into
+latent space (``q_lat = q_nope @ w_uk``), so the score is
+
+    s[b, h, t] = (q_lat[b, h] . c[b, t] + q_pe[b, h] . k_pe[b, t]) * scale
+
+and the context is the probability-weighted latent ``sum_t p_t c[b, t]``
+— MQA-like: all H heads walk the same latent blocks, no GQA grouping.
+
+The block walk mirrors ``paged.py``: the per-row block table and
+positions ride in as scalar-prefetch operands so the latent BlockSpec
+index maps resolve ``table[b, j]`` before the tile DMA issues; the
+online-softmax running max / sum live in per-row output refs and the
+division happens on the last block. ``kpos <= pos`` masks both the
+partial last block and whole unallocated blocks (trash-block table
+entries), and ``c`` is zeroed under the mask so stale pool lanes cannot
+poison the p@c dot.
+
+``scale`` must be supplied by the caller (1/sqrt(dn + dr) in MLA): it is
+not derivable from the latent shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tab_ref, pos_ref, ql_ref, qp_ref, c_ref, kp_ref,
+            o_ref, m_ref, l_ref, *, bs, scale, nb, H):
+    js = pl.program_id(1)
+    ql = ql_ref[0].astype(jnp.float32)  # (1, r)
+    qp = qp_ref[0].astype(jnp.float32)  # (1, dr)
+    c = c_ref[0].astype(jnp.float32)  # (bs, r)
+    kp = kp_ref[0].astype(jnp.float32)  # (bs, dr)
+    pos = pos_ref[pl.program_id(0) // H]
+    s = (
+        jnp.dot(ql, c.T, preferred_element_type=jnp.float32)
+        + jnp.dot(qp, kp.T, preferred_element_type=jnp.float32)
+    ) * scale  # (1, bs)
+    kpos = js * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    mask = kpos <= pos
+    s = jnp.where(mask, s, NEG_INF)
+    cv = jnp.where(mask[0][:, None], c, 0.0)  # value stream IS the latent
+    tile_m = jnp.max(s, axis=-1)
+
+    @pl.when(js == 0)
+    def _init():
+        m_ref[0] = tile_m
+        p = jnp.where(mask, jnp.exp(s - tile_m[:, None]), 0.0)
+        l_ref[0] = jnp.sum(p, -1)
+        o_ref[0] = jnp.dot(p, cv, preferred_element_type=jnp.float32)
+
+    @pl.when(js > 0)
+    def _step():
+        m_old = m_ref[0]
+        m_new = jnp.maximum(m_old, tile_m)
+        alpha = jnp.exp(m_old - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        l_ref[0] = l_ref[0] * alpha + jnp.sum(p, -1)
+        o_ref[0] = o_ref[0] * alpha[:, None] + jnp.dot(p, cv, preferred_element_type=jnp.float32)
+        m_ref[0] = m_new
+
+    @pl.when(js == nb - 1)
+    def _final():
+        o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-30)[:, None]
+
+
+def paged_mla_decode_attention(
+    q_lat: jax.Array,  # (B, H, r) absorbed query, latent space
+    q_pe: jax.Array,  # (B, H, dr) rope query
+    c_pool: jax.Array,  # (P, bs, r) latent block pool (keys AND values)
+    kpe_pool: jax.Array,  # (P, bs, dr) shared rope-key block pool
+    block_table: jax.Array,  # int32 (B, nb)
+    pos,  # int32 (B,): attend to virtual positions <= pos
+    *,
+    scale: float,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, r = q_lat.shape
+    dr = q_pe.shape[-1]
+    P, bs, _ = c_pool.shape
+    nb = block_table.shape[1]
+    qlf = q_lat.reshape(B * H, 1, r)
+    qpf = q_pe.reshape(B * H, 1, dr)
+    table = jnp.asarray(block_table, jnp.int32)
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+
+    def kv_map(bh, js, tab_ref, pos_ref):
+        return (tab_ref[bh // H, js], 0, 0)
+
+    kernel = functools.partial(_kernel, bs=bs, scale=scale, nb=nb, H=H)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block table + per-row positions
+        grid=(B * H, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, r), lambda bh, js, tab_ref, pos_ref: (bh, 0, 0)),
+            pl.BlockSpec((1, 1, dr), lambda bh, js, tab_ref, pos_ref: (bh, 0, 0)),
+            pl.BlockSpec((1, bs, r), kv_map),
+            pl.BlockSpec((1, bs, dr), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, r), lambda bh, js, tab_ref, pos_ref: (bh, 0, 0)),
+            pl.BlockSpec((1, 1), lambda bh, js, tab_ref, pos_ref: (bh, 0)),
+            pl.BlockSpec((1, 1), lambda bh, js, tab_ref, pos_ref: (bh, 0)),
+        ],
+    )
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, 1, r), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(table, pos_arr, qlf, qpf, c_pool, kpe_pool)
+    return o.reshape(B, H, r).astype(q_lat.dtype)

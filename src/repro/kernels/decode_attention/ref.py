@@ -23,6 +23,30 @@ def paged_decode_attention_ref(q, k_pool, v_pool, block_table, pos):
     return decode_attention_ref(q, k, v, pos)
 
 
+def paged_mla_decode_attention_ref(q_lat, q_pe, c_pool, kpe_pool,
+                                   block_table, pos, *, scale):
+    """Paged MLA (absorbed latent) oracle. q_lat: (B,H,r); q_pe: (B,H,dr);
+    c_pool: (P, bs, r) latent pool (keys AND values); kpe_pool:
+    (P, bs, dr) shared rope-key pool; block_table: int32 (B, nb). Gathers
+    each row's latent blocks back into the virtually-contiguous
+    (B, nb*bs, ·) layout and applies the exact absorbed decode math, so
+    when ``nb*bs`` equals the contiguous cache length the result is
+    bit-identical to the unpaged absorbed path."""
+    B, H, r = q_lat.shape
+    P, bs, _ = c_pool.shape
+    nb = block_table.shape[1]
+    c = c_pool[block_table].reshape(B, nb * bs, r).astype(jnp.float32)
+    kp = kpe_pool[block_table].reshape(B, nb * bs, -1).astype(jnp.float32)
+    s = (
+        jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32), c)
+        + jnp.einsum("bhn,bsn->bhs", q_pe.astype(jnp.float32), kp)
+    ) * scale
+    mask = jnp.arange(nb * bs)[None, None] <= jnp.asarray(pos).reshape(-1, 1, 1)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bsr->bhr", p, c).astype(q_lat.dtype)
+
+
 def decode_attention_ref(q, k, v, pos):
     """q: (B,H,hd); k,v: (B,KH,S,hd); attend to cache slots <= pos.
     `pos` is an int32 scalar or a (B,) array of per-row cache lengths - 1

@@ -20,9 +20,11 @@ from repro.models.common import (
     ParamInfo,
     abstract_from_schema,
     init_from_schema,
+    is_info,
     specs_from_schema,
 )
 from repro.models.layers import MeshAxes
+from repro.models.transformer import MultiStepDecodeMixin, paged_leaf_kinds
 
 
 def _enc_layer_schema(cfg, L):
@@ -45,7 +47,7 @@ def _dec_layer_schema(cfg, L):
     }
 
 
-class EncDecLM:
+class EncDecLM(MultiStepDecodeMixin):
     """SeamlessM4T-style backbone: frame-embedding encoder + token decoder."""
 
     def __init__(self, cfg):
@@ -107,7 +109,7 @@ class EncDecLM:
     # -- decoder --------------------------------------------------------------
 
     def _dec_stack(self, params, h, *, positions, mask, memory, caches,
-                   cache_index, axes, mesh, pool_idx):
+                   cache_index, axes, mesh, pool_idx, block_tables=None):
         cfg = self.cfg
 
         def body(carry, xs):
@@ -118,13 +120,34 @@ class EncDecLM:
             out, nc = LY.attn_apply(
                 cfg, p["attn"], x, positions=positions, mask=mask, axes=axes,
                 mesh=mesh, cache=sub, cache_index=cache_index,
+                decode_impl=(cfg.decode_attn if block_tables is not None else "dense"),
+                block_table=block_tables,
             )
             hh = hh + out
             x = LY.apply_norm(cfg, p["lnx"], hh)
             kvc = c.get("xkv") if c is not None else None
-            out, kv = LY.cross_attn_apply(
-                cfg, p["xattn"], x, memory=memory, kv_cache=kvc, axes=axes, mesh=mesh
-            )
+            if block_tables is not None and kvc is not None:
+                # read-only pinned xkv pages: gather the M encoder-memory
+                # tokens from the trailing table columns; never written back.
+                bsz = kvc["k"].shape[1]
+                M = cfg.n_image_tokens
+                nbx = -(-M // bsz)
+                xtab = jnp.asarray(block_tables, jnp.int32)[:, -nbx:]
+                Bq = xtab.shape[0]
+
+                def _gather(pool):
+                    return pool[xtab].reshape((Bq, nbx * bsz) + pool.shape[2:])[:, :M]
+
+                out, _ = LY.cross_attn_apply(
+                    cfg, p["xattn"], x, memory=None,
+                    kv_cache={"k": _gather(kvc["k"]), "v": _gather(kvc["v"])},
+                    axes=axes, mesh=mesh,
+                )
+                kv = kvc
+            else:
+                out, kv = LY.cross_attn_apply(
+                    cfg, p["xattn"], x, memory=memory, kv_cache=kvc, axes=axes, mesh=mesh
+                )
             hh = hh + out
             x = LY.apply_norm(cfg, p["ln2"], hh)
             hh = hh + LY.ffn_apply(cfg, p["ffn"], x, axes, mesh)
@@ -146,6 +169,49 @@ class EncDecLM:
         M = None  # cross kv seq from memory; set at prefill
         dt = jnp.dtype(cfg.dtype)
         raise NotImplementedError  # caches built by prefill below
+
+    # -- paged (block-pool) cache ---------------------------------------------
+
+    def paged_cache_schema(self, n_blocks: int, block_size: int) -> dict:
+        """Paged decode layout for the enc-dec decoder: self-attn k/v token
+        pools plus read-only pinned ``xkv`` pools for the encoder memory
+        (prefilled once by the runner, refcount-pinned, never appended).
+        The xkv block ids ride in the LAST ``paged_xkv_blocks`` table
+        columns, mirroring the decoder-only cross-attention layout. The
+        static encoder-memory token count is ``cfg.n_image_tokens`` (the
+        config's generic "frontend memory tokens" knob — image patches for
+        vision LMs, speech frames here)."""
+        cfg = self.cfg
+        L, K, hd = cfg.n_dec_layers, cfg.n_kv_heads, cfg.hd
+        dt = jnp.dtype(cfg.dtype)
+        hspec = "model" if hd % 16 == 0 else None
+        shp = (L, n_blocks, block_size, K, hd)
+
+        def info():
+            return ParamInfo(shp, dt, P(None, None, None, None, hspec), "zeros")
+
+        return {"k": info(), "v": info(), "xkv": {"k": info(), "v": info()}}
+
+    def init_paged_cache(self, n_blocks: int, block_size: int) -> dict:
+        return jax.tree.map(
+            lambda i: jnp.zeros(i.shape, i.dtype),
+            self.paged_cache_schema(n_blocks, block_size),
+            is_leaf=is_info,
+        )
+
+    def paged_cache_kinds(self, n_blocks: int, block_size: int) -> list:
+        return paged_leaf_kinds(self.paged_cache_schema(n_blocks, block_size))
+
+    def paged_xkv_blocks(self, block_size: int) -> int:
+        """Trailing table columns holding the pinned encoder-memory pages."""
+        return -(-self.cfg.n_image_tokens // block_size)
+
+    @property
+    def paged_sharing_ok(self) -> bool:
+        """Prefix sharing moves token pages between tables; the enc-dec
+        decoder's pinned per-slot xkv pages don't share, so the runner
+        refuses ``prefix_cache`` for this family."""
+        return False
 
     def prefill(self, params, frames, tokens, *, active_sites=None,
                 cache_len=None, axes=LY.TEST_AXES, mesh=None, with_cache=True):
@@ -178,20 +244,47 @@ class EncDecLM:
         return ncaches, outs
 
     def decode(self, params, cache, tokens, pos, *, active_sites=None,
-               axes=LY.TEST_AXES, mesh=None):
+               axes=LY.TEST_AXES, mesh=None, moe_impl="ep", block_tables=None,
+               exit_thresholds=None):
+        """One decoder step. ``pos`` is an int32 scalar (shared write index)
+        or int32[B] per-row indices. With ``block_tables`` the cache is the
+        paged pool from ``init_paged_cache``: self-attn tokens scatter
+        through the table and cross-attn reads the pinned xkv pages from
+        the trailing columns. ``moe_impl`` is accepted for decode_multi
+        signature parity (the enc-dec decoder has no MoE layers)."""
+        del moe_impl
         cfg = self.cfg
         B, S = tokens.shape
-        positions = jnp.full((1, 1), 0, jnp.int32) + pos
+        pos = jnp.asarray(pos, jnp.int32)
+        per_row = pos.ndim >= 1
+        if per_row:
+            positions = pc = pos.reshape(-1, 1)  # (B, 1)
+        else:
+            positions = pc = jnp.full((1, 1), 0, jnp.int32) + pos
         h = LY.embed_apply(cfg, params["tok"], tokens, positions)
+        pool_idx = jnp.asarray([0], jnp.int32)
+        if block_tables is not None:
+            if not per_row:
+                raise ValueError("paged decode requires per-row pos: int32[B]")
+            h, pooled, ncaches = self._dec_stack(
+                params, h, positions=positions, mask=None, memory=None,
+                caches=cache, cache_index=pos.reshape(-1), axes=axes,
+                mesh=mesh, pool_idx=pool_idx,
+                block_tables=jnp.asarray(block_tables, jnp.int32),
+            )
+            outs = self._head_stats(params, h, pooled, active_sites,
+                                    exit_thresholds=exit_thresholds)
+            return ncaches, outs
         Sc = cache["k"].shape[2]
         kpos = jnp.arange(Sc)[None, :]
-        mask = (kpos <= pos)[None, None]
-        pool_idx = jnp.asarray([0], jnp.int32)
+        mask = (kpos <= pc)[:, None, None, :]
         h, pooled, ncaches = self._dec_stack(
             params, h, positions=positions, mask=mask, memory=None,
-            caches=cache, cache_index=pos, axes=axes, mesh=mesh, pool_idx=pool_idx,
+            caches=cache, cache_index=(pos.reshape(-1) if per_row else pos),
+            axes=axes, mesh=mesh, pool_idx=pool_idx,
         )
-        outs = self._head_stats(params, h, pooled, active_sites)
+        outs = self._head_stats(params, h, pooled, active_sites,
+                                exit_thresholds=exit_thresholds)
         return ncaches, outs
 
     def loss(self, params, batch, *, axes=LY.TEST_AXES, mesh=None, **kw):
@@ -229,7 +322,8 @@ class EncDecLM:
         hs = LY.rms_norm(hs, nw[:, None, None, :])
         return jnp.einsum("kbnd,kdv->kbnv", hs, hw).astype(jnp.float32)
 
-    def _head_stats(self, params, h_last, pooled, active_sites):
+    def _head_stats(self, params, h_last, pooled, active_sites,
+                    exit_thresholds=None):
         from repro.models.transformer import _mask_pad_vocab, _stats
 
         cfg = self.cfg
@@ -239,6 +333,10 @@ class EncDecLM:
         if active_sites is not None:
             rl = self._ramp_logits(params, pooled, jnp.asarray(active_sites, jnp.int32))
             outs["ramps"] = _stats(_mask_pad_vocab(cfg, rl[:, :, 0]))
+            if exit_thresholds is not None:
+                thr = jnp.asarray(exit_thresholds, jnp.float32)
+                unc = 1.0 - outs["ramps"]["maxprob"].astype(jnp.float32)
+                outs["ramps"]["exit"] = (unc < thr[:, None]).astype(jnp.int32)
         return outs
 
 

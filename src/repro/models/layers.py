@@ -264,6 +264,7 @@ def attn_apply(
     cache_index=None,
     rope_theta=None,
     ring_window=None,
+    local_window=None,
     decode_impl: str = "dense",
     block_table=None,
 ):
@@ -272,7 +273,12 @@ def attn_apply(
     runs against the cache. `ring_window=W` stores only the last W tokens
     (slot = pos % W): the windowed-cache optimization for local-attention
     layers — the caller passes `cache_index = pos % W` at decode and a ring
-    mask. `decode_impl` selects the single-token cache-attention path:
+    mask. `local_window=W` marks a local layer decoding against a FULL
+    cache: the window rows are gathered chronologically and attention runs
+    over exactly W columns — the same reduction the ring paths compute, so
+    ring/full/paged local decode stay bit-identical (a full-length masked
+    softmax reduces over a different column count and drifts by ULPs).
+    `decode_impl` selects the single-token cache-attention path:
     'dense' (masked sdpa) or the flash-decode wrapper
     (`kernels/decode_attention.attend_decode`) as 'ref' | 'kernel' |
     'interpret' — only meaningful for non-ring decode steps where the write
@@ -283,7 +289,12 @@ def attn_apply(
     ``(block_table[b, pos // bs], pos % bs)`` and attention walks the
     block table (`kernels/decode_attention.attend_decode_paged`;
     `decode_impl` must be 'paged' | 'paged-kernel' | 'paged-interpret').
-    Returns (out, new_cache)."""
+    Ring layers (`ring_window=W`) page too: `cache_index` is then the
+    TRUE position, the write slot is ``pos % W`` redirected through the
+    same table (touching only its first ``ceil(W/bs)`` entries), and
+    attention gathers exactly W virtual rows under the ring mask — the
+    shapes match the contiguous ring cache, so the two paths agree
+    bit-for-bit. Returns (out, new_cache)."""
     B, S, d = x.shape
     H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     q = x @ p["wq"]
@@ -304,18 +315,48 @@ def attn_apply(
         k = apply_rope(k, sin, cos)
     new_cache = None
     if block_table is not None:
-        if cache is None or ring_window is not None or S != 1:
+        if cache is None or S != 1:
             raise ValueError("paged attention is a single-token decode path "
-                             "over a non-ring block pool")
+                             "over a block pool")
         if not decode_impl.startswith("paged"):
             raise ValueError(f"block_table given but decode_impl={decode_impl!r}")
         from repro.kernels.decode_attention import attend_decode_paged
 
         bsz = cache["k"].shape[1]
         idx = jnp.asarray(cache_index, jnp.int32).reshape(-1)
-        blk = jnp.take_along_axis(
-            jnp.asarray(block_table, jnp.int32), (idx // bsz)[:, None], axis=1
-        )[:, 0]
+        tab = jnp.asarray(block_table, jnp.int32)
+        if ring_window is not None:
+            # paged ring: redirect the ring slot pos % W through the table
+            # (those virtual rows sit in table entries already claimed for
+            # earlier positions), gather the W live rows, and apply the
+            # same ring mask the contiguous path uses — identical shapes,
+            # identical masked sdpa, bit-identical output.
+            W = ring_window
+            ri = idx % W
+            blk = jnp.take_along_axis(tab, (ri // bsz)[:, None], axis=1)[:, 0]
+            ck = cache["k"].at[blk, ri % bsz].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[blk, ri % bsz].set(v[:, 0].astype(cache["v"].dtype))
+            new_cache = {"k": ck, "v": cv}
+            nbw = -(-W // bsz)
+            wtab = tab[:, :nbw]
+            # gather the W live rows in CHRONOLOGICAL order (positions
+            # pos-W+1..pos through slot = tpos % W), not ring-slot order:
+            # the softmax then sums the window in the same order as the
+            # full-cache dense path, keeping the two paths bit-identical
+            # past the first wraparound (rotated sums differ in ULPs).
+            tpos = idx[:, None] - (W - 1) + jnp.arange(W)[None, :]  # (B, W)
+            slot = tpos % W
+            sblk = jnp.take_along_axis(wtab, slot // bsz, axis=1)
+            gk = ck[sblk, slot % bsz]  # (B, W, K, hd)
+            gv = cv[sblk, slot % bsz]
+            # pre-wrap positions alias future slots holding zeros; mask
+            # them to exact-zero probs
+            rmask = (tpos >= 0)[:, None, None, :]
+            q = constrain(q, axes.aspec("data", None, "model", None), mesh)
+            out = sdpa(q, gk, gv, rmask)
+            out = out.reshape(B, S, H * hd)
+            return out @ p["wo"], new_cache
+        blk = jnp.take_along_axis(tab, (idx // bsz)[:, None], axis=1)[:, 0]
         # per-row scatter by (block id, in-block offset) instead of flat pos;
         # duplicate rows (bucket padding) write identical values, so the
         # scatter stays deterministic without unique_indices
@@ -344,12 +385,41 @@ def attn_apply(
             ck = _update_cache_rows(cache["k"], k, cache_index)
             cv = _update_cache_rows(cache["v"], v, cache_index)
             new_cache = {"k": ck, "v": cv}
-            k, v = ck, cv
+            if local_window is not None and S > 1:
+                # local prefill on a full cache: attend the in-flight
+                # (S-long) k/v exactly as the ring prefill does — both
+                # paths then reduce over S columns instead of one of them
+                # reducing over the zero-padded cache_len, which drifts
+                # by ULPs once S is large enough to regroup the sum.
+                pass
+            else:
+                k, v = ck, cv
+            W = ring_window if ring_window is not None else local_window
+            if W is not None and S == 1:
+                # local-window decode: gather the W window rows in
+                # CHRONOLOGICAL order (positions pos-W+1..pos; ring caches
+                # unrotate via slot = tpos % W, full caches index tpos
+                # directly) and attend over exactly W columns. Every local
+                # decode variant — ring, full, paged — then runs the SAME
+                # W-length reduction in the same order, so they agree
+                # bit-for-bit; a full-length masked softmax would reduce
+                # over a different column count and drift by ULPs.
+                pos_r = jnp.asarray(positions, jnp.int32).reshape(-1)
+                tpos = pos_r[:, None] - (W - 1) + jnp.arange(W)[None, :]
+                slot = (tpos % W) if ring_window is not None else jnp.clip(tpos, 0)
+                if slot.shape[0] == 1 and B > 1:
+                    slot = jnp.broadcast_to(slot, (B, W))
+                k = jnp.take_along_axis(ck, slot[:, :, None, None], axis=1)
+                v = jnp.take_along_axis(cv, slot[:, :, None, None], axis=1)
+                # pre-window columns (tpos < 0) gather arbitrary live rows;
+                # mask them to exact-zero probs
+                mask = (tpos >= 0)[:, None, None, :]
     q = constrain(q, axes.aspec("data", None, "model", None), mesh)
     if (
         decode_impl != "dense"
         and cache is not None
         and ring_window is None
+        and local_window is None
         and S == 1
     ):
         # flash-decode fast path: one single-token query against the full
@@ -405,10 +475,24 @@ def mla_apply(
     cache=None,
     cache_index=None,
     absorbed: bool = False,
+    decode_impl: str = "dense",
+    block_table=None,
 ):
     """MLA attention. Cache holds the compressed kv latent (B,S,r) and the
     shared rope key (B,S,dr). `absorbed=True` uses the latent-space decode
-    path (beyond-paper perf optimization; math-equivalent)."""
+    path (beyond-paper perf optimization; math-equivalent).
+
+    With `block_table` (int32[B, nb]) the cache is a PAGED pool over the
+    latent streams (`c: (P, bs, r)`, `k_pe: (P, bs, dr)`) and
+    `cache_index` is the per-row TRUE position: the decode token's latents
+    scatter to ``(table[b, pos // bs], pos % bs)``. The jnp oracle gathers
+    the table back to a virtually-contiguous stream and reuses the exact
+    contiguous math; with `absorbed` and `decode_impl` in
+    ('paged-kernel', 'paged-interpret') the gather+softmax runs inside the
+    scalar-prefetch Pallas block walk
+    (`kernels/decode_attention.attend_decode_paged_mla`) instead — the
+    latent cache is MQA-like (one stream shared by all H heads), so the
+    kernel never materializes per-head keys."""
     B, S, d = x.shape
     H = cfg.n_heads
     r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -421,13 +505,49 @@ def mla_apply(
     q_pe = apply_rope(q_pe, sin, cos)
     k_pe = apply_rope(k_pe[:, :, None, :], sin, cos)[:, :, 0]  # single shared head
     new_cache = None
-    if cache is not None:
+    scale = 1.0 / math.sqrt(dn + dr)
+    if block_table is not None:
+        if cache is None or S != 1:
+            raise ValueError("paged MLA is a single-token decode path over "
+                             "a latent block pool")
+        if not str(decode_impl).startswith("paged"):
+            raise ValueError(f"block_table given but decode_impl={decode_impl!r}")
+        bsz = cache["c"].shape[1]
+        idx = jnp.asarray(cache_index, jnp.int32).reshape(-1)
+        tab = jnp.asarray(block_table, jnp.int32)
+        blk = jnp.take_along_axis(tab, (idx // bsz)[:, None], axis=1)[:, 0]
+        cc = cache["c"].at[blk, idx % bsz].set(c[:, 0].astype(cache["c"].dtype))
+        cp = cache["k_pe"].at[blk, idx % bsz].set(
+            k_pe[:, 0].astype(cache["k_pe"].dtype)
+        )
+        new_cache = {"c": cc, "k_pe": cp}
+        if absorbed and decode_impl in ("paged-kernel", "paged-interpret"):
+            from repro.kernels.decode_attention import attend_decode_paged_mla
+
+            wuk = p["w_uk"].reshape(r, H, dn)
+            q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, wuk)[:, 0]  # (B,H,r)
+            ctx = attend_decode_paged_mla(
+                q_lat, q_pe[:, 0], cc, cp, tab, idx, scale=scale,
+                interpret=decode_impl == "paged-interpret",
+            )  # (B,H,r)
+            wuv = p["w_uv"].reshape(r, H, dv)
+            out = jnp.einsum("bhr,rhv->bhv", ctx, wuv)[:, None]
+            out = out.reshape(B, S, H * dv)
+            return out @ p["wo"], new_cache
+        # jnp oracle (and the unabsorbed paged path): gather the table back
+        # to a virtually-contiguous latent stream, mask kpos <= pos, and
+        # fall through to the exact contiguous math below
+        nb = tab.shape[1]
+        c = cc[tab].reshape(B, nb * bsz, r)
+        k_pe = cp[tab].reshape(B, nb * bsz, dr)
+        kpos = jnp.arange(nb * bsz)[None, :]
+        mask = (kpos <= idx[:, None])[:, None, None, :]
+    elif cache is not None:
         cc = _update_cache_rows(cache["c"], c, cache_index)
         cp = _update_cache_rows(cache["k_pe"], k_pe, cache_index)
         new_cache = {"c": cc, "k_pe": cp}
         c, k_pe = cc, cp
     Sk = c.shape[1]
-    scale = 1.0 / math.sqrt(dn + dr)
     if absorbed:
         # q_nope' = q_nope @ w_uk^T  -> score against latent directly
         wuk = p["w_uk"].reshape(r, H, dn)

@@ -202,3 +202,23 @@ def mamba_cache_schema(cfg, batch: int, L=None) -> dict:
         "conv": ParamInfo(pre + (batch, cfg.d_conv - 1, conv_dim), dt, P(*pfx, "data", None, "model"), "zeros"),
         "ssm": ParamInfo(pre + (batch, H, hp, N), jnp.float32, P(*pfx, "data", "model", None, None), "zeros"),
     }
+
+
+def mamba_paged_cache_schema(cfg, n_blocks: int, L=None) -> dict:
+    """Block-pooled recurrent state: one STATE PAGE per slot, drawn from
+    the same refcounted pool as token pages. The leading dim is the pool
+    (``n_blocks``), not batch — a slot's whole ``{conv, ssm}`` state lives
+    in the page at its FIRST block-table entry, and decode reads/writes it
+    through the table. State is per-slot (not per-token), so the page
+    count is O(slots) and prefix share/CoW degenerate to private
+    allocation (the runner refuses sharing for mamba plans)."""
+    di, N, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_headdim
+    H, G = di // hp, cfg.ssm_ngroups
+    conv_dim = di + 2 * G * N
+    dt = jnp.dtype(cfg.dtype)
+    pre = () if L is None else (L,)
+    pfx = (None,) * len(pre)
+    return {
+        "conv": ParamInfo(pre + (n_blocks, cfg.d_conv - 1, conv_dim), dt, P(*pfx, None, None, "model"), "zeros"),
+        "ssm": ParamInfo(pre + (n_blocks, H, hp, N), jnp.float32, P(*pfx, None, "model", None, None), "zeros"),
+    }

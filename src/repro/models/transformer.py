@@ -146,7 +146,150 @@ def ramp_schema(cfg) -> dict:
     return sch
 
 
-class LM:
+def paged_leaf_kinds(schema) -> List[str]:
+    """Per-leaf kind labels for a paged cache schema, in ``jax.tree``
+    flatten order (dicts iterate sorted keys). Kinds drive the serving
+    runner's per-leaf scatter/gather branches:
+
+    * ``"tokens"`` — per-token pages ``(P, bs, ...)``: attn k/v, MLA
+      latent ``c``/``k_pe``. Prefill scatters prompt rows block-wise;
+      appended every decode step.
+    * ``"state"`` — per-slot pages ``(P, ...)``: mamba ``conv``/``ssm``.
+      One page per slot (the first table entry); overwritten in place.
+    * ``"xkv"`` — read-only pinned pages ``(P, bs, ...)``: cross-attn
+      encoder k/v. Prefilled once, never appended.
+    """
+    out: List[str] = []
+
+    def walk(node, kind):
+        if is_info(node) or not isinstance(node, (dict, list, tuple)):
+            out.append(kind)
+            return
+        if isinstance(node, dict):
+            for kk in sorted(node):
+                nk = "xkv" if kk == "xkv" else (
+                    "state" if kk in ("conv", "ssm") else kind
+                )
+                walk(node[kk], nk)
+        else:
+            for v in node:
+                walk(v, kind)
+
+    walk(schema, "tokens")
+    return out
+
+
+class MultiStepDecodeMixin:
+    """Multi-step fused-exit decode window, shared by every model class
+    exposing a ``decode(params, cache, tokens, pos, ...)`` step (decoder
+    LMs and the enc-dec decoder). The window is family-agnostic: the
+    ``lax.while_loop`` advances EVERY row exactly ``n_done`` steps
+    together and the host keeps exactly ``n_done`` tokens per row, so
+    recurrent (mamba) state, ring wraparound, and read-only cross caches
+    all stay consistent across early termination."""
+
+    def decode_multi(self, params, cache, tokens, pos, n_steps, *, n_max,
+                     active_sites=None, thresholds=None, row_valid=None,
+                     axes=LY.TEST_AXES, mesh=None, moe_impl="ep",
+                     block_tables=None):
+        """Up to ``n_steps`` greedy decode steps under ONE dispatch
+        (`lax.while_loop`), with the exit decision taken ON DEVICE from a
+        resident threshold vector — the host syncs once per window, not
+        once per token.
+
+        tokens: (B, 1) int32; pos: int32[B] per-row write indices (per-row
+        is REQUIRED: every window row sits at its own offset). ``n_steps``
+        is a traced scalar <= the static unroll bound ``n_max`` (callers
+        bucket it so compile count stays bounded). ``thresholds`` is the
+        (K,) f32 device-resident exit-threshold vector aligned with
+        ``active_sites`` (strict ``<``; pad slots carry 0.0, which can
+        never trigger). ``row_valid`` (B,) bool masks bucket-padding rows
+        out of the all-exited test.
+
+        Semantics (the staleness/accuracy contract, README "On-device
+        exits & sync windows"):
+
+        * every step runs the FULL model for every row — exits are
+          *decisions*, not compute cuts, because the controller's
+          agreement records need the final head's label for every token
+          (replay-completeness). What the on-device mask gates is the
+          WINDOW: once every valid row has exited, later steps are skipped
+          and control returns to the host early.
+        * thresholds are frozen across the window — deliberately stale
+          between syncs. Records for every executed step are packed and
+          streamed back at the sync boundary, so adaptation still sees
+          every token; only the *decision* lag is traded for dispatch
+          count. At ``n_steps == 1`` the decision uses the exact current
+          thresholds: bit-identical to the per-step path.
+
+        Returns ``(new_cache, (ramp_label (n_max,K,B), ramp_maxprob
+        (n_max,K,B), final_label (n_max,B), exit_site (n_max,B), n_done))``
+        — entries past ``n_done`` are garbage the caller must slice off.
+        """
+        B = tokens.shape[0]
+        pos = jnp.asarray(pos, jnp.int32)
+        if pos.ndim < 1:
+            raise ValueError("decode_multi requires per-row pos: int32[B]")
+        K = 0 if active_sites is None else int(jnp.shape(active_sites)[0])
+        if K and thresholds is None:
+            raise ValueError("decode_multi with active ramps needs thresholds")
+        if row_valid is None:
+            row_valid = jnp.ones((B,), bool)
+        sites_arr = (jnp.asarray(active_sites, jnp.int32)
+                     if K else jnp.zeros((0,), jnp.int32))
+        thr = (jnp.asarray(thresholds, jnp.float32)
+               if K else jnp.zeros((0,), jnp.float32))
+
+        def body(carry):
+            i, all_ex, cache, tok, p, rl, rm, fl, ex = carry
+            cache, outs = self.decode(
+                params, cache, tok, p, active_sites=active_sites, axes=axes,
+                mesh=mesh, moe_impl=moe_impl, block_tables=block_tables,
+                exit_thresholds=(thr if K else None),
+            )
+            f = outs["final"]["label"].reshape(-1).astype(jnp.int32)  # (B,)
+            if K:
+                lab = outs["ramps"]["label"].astype(jnp.int32)  # (K, B)
+                mp = outs["ramps"]["maxprob"].astype(jnp.float32)
+                # per-ramp on-device mask (fused into the pallas head when
+                # enabled); argmax returns the FIRST true row = the
+                # shallowest exiting site (active_sites ascending)
+                mask = outs["ramps"]["exit"].astype(bool)
+                anyx = jnp.any(mask, axis=0)
+                site = jnp.where(
+                    anyx, sites_arr[jnp.argmax(mask, axis=0)], -1
+                ).astype(jnp.int32)
+            else:
+                lab = jnp.zeros((0, B), jnp.int32)
+                mp = jnp.zeros((0, B), jnp.float32)
+                site = jnp.full((B,), -1, jnp.int32)
+            rl = jax.lax.dynamic_update_slice(rl, lab[None], (i, 0, 0))
+            rm = jax.lax.dynamic_update_slice(rm, mp[None], (i, 0, 0))
+            fl = jax.lax.dynamic_update_slice(fl, f[None], (i, 0))
+            ex = jax.lax.dynamic_update_slice(ex, site[None], (i, 0))
+            all_ex = jnp.all(jnp.logical_or(~row_valid, site >= 0))
+            return (i + 1, all_ex, cache, f.reshape(-1, 1), p + 1,
+                    rl, rm, fl, ex)
+
+        def cond(carry):
+            i, all_ex = carry[0], carry[1]
+            return jnp.logical_and(i < jnp.int32(n_steps),
+                                   jnp.logical_not(all_ex))
+
+        init = (
+            jnp.int32(0), jnp.asarray(False), cache, tokens, pos,
+            jnp.zeros((n_max, K, B), jnp.int32),
+            jnp.zeros((n_max, K, B), jnp.float32),
+            jnp.zeros((n_max, B), jnp.int32),
+            jnp.full((n_max, B), -1, jnp.int32),
+        )
+        n_done, _, cache, _, _, rl, rm, fl, ex = jax.lax.while_loop(
+            cond, body, init
+        )
+        return cache, (rl, rm, fl, ex, n_done)
+
+
+class LM(MultiStepDecodeMixin):
     """Functional model wrapper (see DESIGN.md §3)."""
 
     def __init__(self, cfg):
@@ -232,28 +375,59 @@ class LM:
         return c
 
     def _slot_paged_cache_schema(self, cfg, slot: SlotSpec, n_blocks, bs, L=None):
-        """Paged (block-pool) analogue of ``_slot_cache_schema``: attention
-        k/v leaves become global pools ``(P, bs, K, hd)`` indexed through a
-        per-row block table instead of per-slot ``(B, S, K, hd)`` rows.
-        Only full-attention layers page; recurrent (mamba) state is O(1)
-        per slot and ring (windowed) caches are already W-bounded, so
-        paging them buys nothing — models using them keep the contiguous
-        slot cache."""
+        """Paged (block-pool) analogue of ``_slot_cache_schema``. Every
+        mixer family draws pages from the same refcounted block pool, each
+        with its own page layout:
+
+        * full attention: k/v pools ``(P, bs, K, hd)`` — virtual token
+          ``t`` lives at ``(table[b, t // bs], t % bs)``.
+        * local (ring) attention: same k/v pools, but the write index is
+          ``pos % W`` redirected through the table — only the first
+          ``ceil(W/bs)`` table entries are ever touched, so the live
+          window stays W-bounded inside the shared pool.
+        * MLA: pools over the compressed latent streams ``c (P, bs, r)``
+          and ``k_pe (P, bs, dr)`` — one shared stream per layer (the
+          latent cache is MQA-like), not per-head.
+        * mamba: per-SLOT state pages ``conv (P, d_conv-1, conv_dim)`` /
+          ``ssm (P, H, hp, N)`` living in the slot's FIRST table entry.
+          State is O(1) per slot (not per token), so one page holds it —
+          share/CoW degenerate to private allocation (enforced by the
+          runner: prefix sharing is refused for these models).
+        * cross-attention: read-only ``xkv`` pools ``(P, bs, K, hd)``
+          prefilled once and refcount-pinned; their block ids ride in the
+          LAST ``ceil(M/bs)`` table columns and are never appended.
+        """
         dt = jnp.dtype(cfg.dtype)
         pre = () if L is None else (L,)
         pfx = (None,) * len(pre)
-        if slot.mixer != "attn" or slot.cross or (slot.is_local and cfg.window):
-            raise NotImplementedError(
-                f"paged KV cache supports full-attention layers only "
-                f"(mixer={slot.mixer!r}, cross={slot.cross}, local={slot.is_local})"
-            )
-        K, hd = cfg.n_kv_heads, cfg.hd
-        hspec = "model" if hd % 16 == 0 else None
-        shp = pre + (n_blocks, bs, K, hd)
-        return {
-            "k": ParamInfo(shp, dt, P(*pfx, None, None, None, hspec), "zeros"),
-            "v": ParamInfo(shp, dt, P(*pfx, None, None, None, hspec), "zeros"),
-        }
+        if slot.mixer == "attn" or slot.cross:
+            # pure-SSM configs have n_heads=0: only touch head_dim when an
+            # attention leaf actually needs it
+            K, hd = cfg.n_kv_heads, cfg.hd
+            hspec = "model" if hd % 16 == 0 else None
+        if slot.mixer == "attn":
+            shp = pre + (n_blocks, bs, K, hd)
+            c = {
+                "k": ParamInfo(shp, dt, P(*pfx, None, None, None, hspec), "zeros"),
+                "v": ParamInfo(shp, dt, P(*pfx, None, None, None, hspec), "zeros"),
+            }
+        elif slot.mixer == "mla":
+            r, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+            c = {
+                "c": ParamInfo(pre + (n_blocks, bs, r), dt, P(*pfx, None, None, None), "zeros"),
+                "k_pe": ParamInfo(pre + (n_blocks, bs, dr), dt, P(*pfx, None, None, None), "zeros"),
+            }
+        elif slot.mixer == "mamba":
+            c = MB.mamba_paged_cache_schema(cfg, n_blocks, L=L)
+        else:
+            c = {}
+        if slot.cross:
+            shp = pre + (n_blocks, bs, K, hd)
+            c["xkv"] = {
+                "k": ParamInfo(shp, dt, P(*pfx, None, None, None, hspec), "zeros"),
+                "v": ParamInfo(shp, dt, P(*pfx, None, None, None, hspec), "zeros"),
+            }
+        return c
 
     def paged_cache_schema(self, n_blocks: int, block_size: int) -> dict:
         """Cache schema for the paged decode layout: same tree structure as
@@ -283,6 +457,33 @@ class LM:
             lambda i: jnp.zeros(i.shape, i.dtype),
             self.paged_cache_schema(n_blocks, block_size),
             is_leaf=is_info,
+        )
+
+    def paged_cache_kinds(self, n_blocks: int, block_size: int) -> list:
+        """Flat per-leaf kind labels for ``paged_cache_schema`` (see
+        ``paged_leaf_kinds``)."""
+        return paged_leaf_kinds(self.paged_cache_schema(n_blocks, block_size))
+
+    def paged_xkv_blocks(self, block_size: int) -> int:
+        """Number of extra TRAILING block-table columns holding the pinned
+        read-only cross-attention pages (0 for models without cross
+        layers). The runner widens every table it ships by this amount."""
+        if not any(s.cross for s in self.plan.layer_specs()):
+            return 0
+        return -(-self.cfg.n_image_tokens // block_size)
+
+    @property
+    def paged_sharing_ok(self) -> bool:
+        """Whether prefix sharing / copy-on-write are sound for this plan.
+        Sharing moves *token* pages between tables; mamba state pages are
+        per-slot recurrent state, ring pages are position-aliased mod W,
+        and xkv pages are pinned per slot — none of those share, so the
+        runner refuses ``prefix_cache`` unless every layer is plain
+        full attention."""
+        cfg = self.cfg
+        return all(
+            s.mixer == "attn" and not s.cross and not (s.is_local and cfg.window)
+            for s in self.plan.layer_specs()
         )
 
     def cache_schema(self, B: int, S: int, shard_batch: bool = True) -> dict:
@@ -340,50 +541,101 @@ class LM:
             mask = mask_local if slot.is_local else mask_full
             theta = rope_theta_local if slot.is_local else cfg.rope_theta
             sub = {k: cache[k] for k in ("k", "v")} if cache is not None else None
-            ring = cfg.window if (cfg.windowed_cache and slot.is_local and cfg.window) else None
+            # ring layout: the windowed-cache optimization (contiguous) OR
+            # any paged local layer — the block pool always ring-pages
+            # local windows through the first ceil(W/bs) table entries
+            # (without the redirection a paged local layer would attend
+            # full-causal, silently breaking the window semantics).
+            ring = (
+                cfg.window
+                if (slot.is_local and cfg.window
+                    and (cfg.windowed_cache or block_tables is not None))
+                else None
+            )
+            # local layer on a FULL contiguous cache: window-gather decode
+            lw = cfg.window if (slot.is_local and cfg.window and ring is None) else None
             ci = cache_index
-            if ring is not None and ci is not None:
+            if ring is not None and ci is not None and block_tables is None:
                 ci = cache_index % ring  # ring slot at decode
             # local windowed layers keep the dense masked path (the flash
             # wrapper only knows "attend to <= pos"); everything else routes
-            # single-token decode through kernels/decode_attention
-            impl = "dense" if (slot.is_local and cfg.window) else cfg.decode_attn
+            # single-token decode through kernels/decode_attention. Paged
+            # ring layers keep the TRUE position (the paged branch derives
+            # both the ring write slot and the ring mask from it).
+            if block_tables is not None:
+                impl = cfg.decode_attn
+            else:
+                impl = "dense" if (slot.is_local and cfg.window) else cfg.decode_attn
             out, nc = LY.attn_apply(
                 cfg, p["mixer"], x, positions=positions, mask=mask, axes=axes,
                 mesh=mesh, cache=sub, cache_index=ci, rope_theta=theta,
-                ring_window=ring, decode_impl=impl, block_table=block_tables,
+                ring_window=ring, local_window=lw, decode_impl=impl,
+                block_table=block_tables,
             )
             if nc is not None:
                 new_cache.update(nc)
         elif slot.mixer == "mla":
-            if block_tables is not None:
-                raise NotImplementedError("paged KV cache: MLA layers not supported")
             sub = {k: cache[k] for k in ("c", "k_pe")} if cache is not None else None
             out, nc = LY.mla_apply(
                 cfg, p["mixer"], x, positions=positions, mask=mask_full, axes=axes,
                 mesh=mesh, cache=sub, cache_index=cache_index,
                 absorbed=getattr(cfg, "mla_absorbed", False),
+                decode_impl=cfg.decode_attn, block_table=block_tables,
             )
             if nc is not None:
                 new_cache.update(nc)
         elif slot.mixer == "mamba":
-            if block_tables is not None:
-                raise NotImplementedError("paged KV cache: mamba layers not supported")
             sub = (
                 {k: cache[k] for k in ("conv", "ssm")} if cache is not None else None
             )
-            out, nc = MB.mamba_apply(cfg, p["mixer"], x, axes=axes, mesh=mesh, cache=sub)
+            if block_tables is not None:
+                # block-pooled SSM state: the slot's whole recurrent state
+                # lives in the page at its FIRST table entry (state is O(1)
+                # per slot, not per token). Duplicate bucket-padding rows
+                # scatter identical values; free rows hit the trash block.
+                blk0 = jnp.asarray(block_tables, jnp.int32)[:, 0]
+                view = {"conv": sub["conv"][blk0], "ssm": sub["ssm"][blk0]}
+                out, st = MB.mamba_apply(
+                    cfg, p["mixer"], x, axes=axes, mesh=mesh, cache=view
+                )
+                nc = {
+                    "conv": sub["conv"].at[blk0].set(st["conv"].astype(sub["conv"].dtype)),
+                    "ssm": sub["ssm"].at[blk0].set(st["ssm"].astype(sub["ssm"].dtype)),
+                }
+            else:
+                out, nc = MB.mamba_apply(cfg, p["mixer"], x, axes=axes, mesh=mesh, cache=sub)
             if nc is not None:
                 new_cache.update(nc)
         h = h + out
         if slot.cross:
             xx = LY.apply_norm(cfg, p["lnx"], h)
             kvc = cache.get("xkv") if cache is not None else None
-            out, kv = LY.cross_attn_apply(
-                cfg, p["xattn"], xx, memory=memory, kv_cache=kvc, axes=axes, mesh=mesh
-            )
-            if new_cache is not None:
-                new_cache["xkv"] = kv
+            if block_tables is not None and kvc is not None:
+                # read-only pinned xkv pages: gather the M encoder tokens
+                # from the trailing table columns; never written back.
+                bsz = kvc["k"].shape[1]
+                M = cfg.n_image_tokens
+                nbx = -(-M // bsz)
+                xtab = jnp.asarray(block_tables, jnp.int32)[:, -nbx:]
+                Bq = xtab.shape[0]
+
+                def _gather(pool):
+                    g = pool[xtab]  # (B, nbx, bs, K, hd)
+                    return g.reshape((Bq, nbx * bsz) + pool.shape[2:])[:, :M]
+
+                out, _ = LY.cross_attn_apply(
+                    cfg, p["xattn"], xx, memory=None,
+                    kv_cache={"k": _gather(kvc["k"]), "v": _gather(kvc["v"])},
+                    axes=axes, mesh=mesh,
+                )
+                if new_cache is not None:
+                    new_cache["xkv"] = kvc
+            else:
+                out, kv = LY.cross_attn_apply(
+                    cfg, p["xattn"], xx, memory=memory, kv_cache=kvc, axes=axes, mesh=mesh
+                )
+                if new_cache is not None:
+                    new_cache["xkv"] = kv
             h = h + out
         if slot.ffn != "none":
             x = LY.apply_norm(cfg, p["ln2"], h)
@@ -579,10 +831,11 @@ class LM:
         h = LY.constrain(h, axes.aspec("data", None, None), mesh)
         mask_full = LY.causal_mask(S, cache_len, 0) if with_cache else LY.causal_mask(S, S, 0)
         if cfg.window:
-            # with windowed (ring) caches, local prefill attention runs
-            # against the in-flight (S-long) k/v, not the padded cache
-            kl = S if (cfg.windowed_cache or not with_cache) else cache_len
-            mask_local = LY.window_mask(S, kl, 0, cfg.window)
+            # local prefill attention ALWAYS runs against the in-flight
+            # (S-long) k/v, never the padded cache: ring and full caches
+            # then compute the identical S-column reduction (a cache_len
+            # reduction regroups the sum and drifts by ULPs)
+            mask_local = LY.window_mask(S, S, 0, cfg.window)
         else:
             mask_local = mask_full
         pool_idx = jnp.asarray([S - 1], jnp.int32)
@@ -641,9 +894,11 @@ class LM:
             kpos = jnp.arange(Sc)[None, :]
             mask_full = (kpos <= pc)[:, None, None, :]
             if cfg.windowed_cache and cfg.window:
-                # ring semantics: slot j holds token pos − ((pos − j) mod W)
+                # ring semantics: attn_apply gathers the W ring slots back
+                # into chronological order (positions pos-W+1..pos), so the
+                # mask only blanks the pre-wrap columns (tpos < 0)
                 j = jnp.arange(cfg.window)[None, :]
-                mask_local = (((pc - j) % cfg.window) <= pc)[:, None, None, :]
+                mask_local = (pc - (cfg.window - 1) + j >= 0)[:, None, None, :]
             elif cfg.window:
                 mask_local = ((kpos <= pc) & (kpos > pc - cfg.window))[:, None, None, :]
             else:
@@ -661,126 +916,6 @@ class LM:
                                 axes=axes, mesh=mesh,
                                 exit_thresholds=exit_thresholds)
         return new_cache, outs
-
-    def _check_multi_step_support(self):
-        """Guard for the multi-step (fused-exit) decode window. The window
-        pre-claims every KV write position up front and may terminate
-        early, which relies on append-only, positionally-addressable
-        full-attention cache writes — the same contract the paged block
-        schema enforces. Recurrent (mamba) state advances aren't
-        positionally addressable (an early-terminated window couldn't be
-        unwound), ring (windowed-local) caches wrap mid-window, and
-        MLA/cross layers follow the paged rejection for the same reason:
-        the fused-exit path is defined on the production serving stack."""
-        cfg = self.cfg
-        for slot in self.plan.layer_specs():
-            if slot.mixer != "attn" or slot.cross or (slot.is_local and cfg.window):
-                raise NotImplementedError(
-                    f"multi-step fused-exit decode supports full-attention "
-                    f"layers only (mixer={slot.mixer!r}, cross={slot.cross}, "
-                    f"local={slot.is_local})"
-                )
-
-    def decode_multi(self, params, cache, tokens, pos, n_steps, *, n_max,
-                     active_sites=None, thresholds=None, row_valid=None,
-                     axes=LY.TEST_AXES, mesh=None, moe_impl="ep",
-                     block_tables=None):
-        """Up to ``n_steps`` greedy decode steps under ONE dispatch
-        (`lax.while_loop`), with the exit decision taken ON DEVICE from a
-        resident threshold vector — the host syncs once per window, not
-        once per token.
-
-        tokens: (B, 1) int32; pos: int32[B] per-row write indices (per-row
-        is REQUIRED: every window row sits at its own offset). ``n_steps``
-        is a traced scalar <= the static unroll bound ``n_max`` (callers
-        bucket it so compile count stays bounded). ``thresholds`` is the
-        (K,) f32 device-resident exit-threshold vector aligned with
-        ``active_sites`` (strict ``<``; pad slots carry 0.0, which can
-        never trigger). ``row_valid`` (B,) bool masks bucket-padding rows
-        out of the all-exited test.
-
-        Semantics (the staleness/accuracy contract, README "On-device
-        exits & sync windows"):
-
-        * every step runs the FULL model for every row — exits are
-          *decisions*, not compute cuts, because the controller's
-          agreement records need the final head's label for every token
-          (replay-completeness). What the on-device mask gates is the
-          WINDOW: once every valid row has exited, later steps are skipped
-          and control returns to the host early.
-        * thresholds are frozen across the window — deliberately stale
-          between syncs. Records for every executed step are packed and
-          streamed back at the sync boundary, so adaptation still sees
-          every token; only the *decision* lag is traded for dispatch
-          count. At ``n_steps == 1`` the decision uses the exact current
-          thresholds: bit-identical to the per-step path.
-
-        Returns ``(new_cache, (ramp_label (n_max,K,B), ramp_maxprob
-        (n_max,K,B), final_label (n_max,B), exit_site (n_max,B), n_done))``
-        — entries past ``n_done`` are garbage the caller must slice off.
-        """
-        self._check_multi_step_support()
-        B = tokens.shape[0]
-        pos = jnp.asarray(pos, jnp.int32)
-        if pos.ndim < 1:
-            raise ValueError("decode_multi requires per-row pos: int32[B]")
-        K = 0 if active_sites is None else int(jnp.shape(active_sites)[0])
-        if K and thresholds is None:
-            raise ValueError("decode_multi with active ramps needs thresholds")
-        if row_valid is None:
-            row_valid = jnp.ones((B,), bool)
-        sites_arr = (jnp.asarray(active_sites, jnp.int32)
-                     if K else jnp.zeros((0,), jnp.int32))
-        thr = (jnp.asarray(thresholds, jnp.float32)
-               if K else jnp.zeros((0,), jnp.float32))
-
-        def body(carry):
-            i, all_ex, cache, tok, p, rl, rm, fl, ex = carry
-            cache, outs = self.decode(
-                params, cache, tok, p, active_sites=active_sites, axes=axes,
-                mesh=mesh, moe_impl=moe_impl, block_tables=block_tables,
-                exit_thresholds=(thr if K else None),
-            )
-            f = outs["final"]["label"].reshape(-1).astype(jnp.int32)  # (B,)
-            if K:
-                lab = outs["ramps"]["label"].astype(jnp.int32)  # (K, B)
-                mp = outs["ramps"]["maxprob"].astype(jnp.float32)
-                # per-ramp on-device mask (fused into the pallas head when
-                # enabled); argmax returns the FIRST true row = the
-                # shallowest exiting site (active_sites ascending)
-                mask = outs["ramps"]["exit"].astype(bool)
-                anyx = jnp.any(mask, axis=0)
-                site = jnp.where(
-                    anyx, sites_arr[jnp.argmax(mask, axis=0)], -1
-                ).astype(jnp.int32)
-            else:
-                lab = jnp.zeros((0, B), jnp.int32)
-                mp = jnp.zeros((0, B), jnp.float32)
-                site = jnp.full((B,), -1, jnp.int32)
-            rl = jax.lax.dynamic_update_slice(rl, lab[None], (i, 0, 0))
-            rm = jax.lax.dynamic_update_slice(rm, mp[None], (i, 0, 0))
-            fl = jax.lax.dynamic_update_slice(fl, f[None], (i, 0))
-            ex = jax.lax.dynamic_update_slice(ex, site[None], (i, 0))
-            all_ex = jnp.all(jnp.logical_or(~row_valid, site >= 0))
-            return (i + 1, all_ex, cache, f.reshape(-1, 1), p + 1,
-                    rl, rm, fl, ex)
-
-        def cond(carry):
-            i, all_ex = carry[0], carry[1]
-            return jnp.logical_and(i < jnp.int32(n_steps),
-                                   jnp.logical_not(all_ex))
-
-        init = (
-            jnp.int32(0), jnp.asarray(False), cache, tokens, pos,
-            jnp.zeros((n_max, K, B), jnp.int32),
-            jnp.zeros((n_max, K, B), jnp.float32),
-            jnp.zeros((n_max, B), jnp.int32),
-            jnp.full((n_max, B), -1, jnp.int32),
-        )
-        n_done, _, cache, _, _, rl, rm, fl, ex = jax.lax.while_loop(
-            cond, body, init
-        )
-        return cache, (rl, rm, fl, ex, n_done)
 
     def _head_stats(self, params, h_last, pooled, active_sites,
                     axes=None, mesh=None, exit_thresholds=None):

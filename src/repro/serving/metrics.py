@@ -36,8 +36,13 @@ def _span_ms(horizon_ms: Optional[float], last: float, earliest: float) -> float
 
 
 def _per_sec(count: float, span_ms: float) -> float:
-    """Rate over a span, guarded against zero-length spans."""
-    return count / max(span_ms / 1000.0, 1e-9)
+    """Rate over a span. A zero (or degenerate negative) span yields 0.0:
+    a single-instant stream has no meaningful rate, and the old
+    ``count / max(span, 1e-9)`` guard turned it into an astronomically
+    large bogus value. Clean under ``np.errstate(raise)`` — no inf/NaN."""
+    if span_ms <= 0.0:
+        return 0.0
+    return float(count) / (float(span_ms) / 1000.0)
 
 
 def summarize(

@@ -121,6 +121,19 @@ class BlockAllocator:
         self.peak_blocks = max(self.peak_blocks, self.live_blocks)
         return ids
 
+    def alloc_pinned(self, n: int) -> List[int]:
+        """Claim ``n`` blocks under a cache (non-slot) reference — the
+        read-only pinned pages (cross-attention encoder KV) the runner
+        owns directly rather than through a slot's table row. They are
+        prefilled once, never appended, and freed via ``unpin``. Atomic:
+        all or nothing."""
+        self.require(n)
+        ids = [heapq.heappop(self._free) for _ in range(n)]
+        self.refcount[ids] = 1
+        self.pins += n
+        self.peak_blocks = max(self.peak_blocks, self.live_blocks)
+        return ids
+
     def share(self, slot: int, ids: Sequence[int]) -> None:
         """Map already-live blocks into ``slot``'s table (prefix sharing):
         the slot references the SAME physical blocks, refcount += 1 each."""
@@ -611,11 +624,31 @@ class DecodeRunner:
             raise ValueError(f"paged decode needs kv_block_size >= 1, got {kv_block_size}")
         if prefix_cache and not self.paged:
             raise ValueError("prefix_cache requires a paged decode_attn config")
+        if prefix_cache and not getattr(model, "paged_sharing_ok", True):
+            # sharing moves TOKEN pages between tables; mamba state pages,
+            # ring (position-aliased) pages and pinned xkv pages don't
+            # share — refusing here beats silently corrupting slots later
+            raise ValueError(
+                "prefix_cache: prefix sharing/CoW is unsound for this model "
+                "family (recurrent-state, ring-window, or cross-attention "
+                "pages cannot be shared between slots)"
+            )
         # kv_block_size is meaningless for contiguous runners (0 documents
         # "contiguous" at the CLI) — don't let it poison the ceil below
         self._max_blocks = -(-self._cache_len // self._bs_blk) if self.paged else 0
         self._alloc: Optional[BlockAllocator] = None
         self._pool_axes: Optional[Tuple[int, ...]] = None  # per-leaf pool axis
+        # per-leaf page kinds ('tokens' | 'state' | 'xkv') steering the
+        # prefill scatter and swap gather/scatter branches, plus the count
+        # of trailing pinned xkv table columns (0 for non-cross plans)
+        self._kinds: Optional[Tuple[str, ...]] = (
+            tuple(model.paged_cache_kinds(2, self._bs_blk)) if self.paged else None
+        )
+        self._nbx = (
+            int(model.paged_xkv_blocks(self._bs_blk))
+            if self.paged and hasattr(model, "paged_xkv_blocks") else 0
+        )
+        self._xkv_tab = np.zeros((0, self._nbx), np.int32)  # per-slot pinned ids
         self._want_prefix = bool(prefix_cache)
         self._prefix: Optional[PrefixCache] = None  # built with the allocator
         self._copy_blk = None  # jitted whole-block pool copy (CoW)
@@ -689,7 +722,8 @@ class DecodeRunner:
         ``n_blocks + 1`` physical blocks — block 0 is the allocator's
         reserved trash block."""
         rows = _bucket(max(n, self._rows, 1))
-        nblk = self._kv_blocks if self._kv_blocks is not None else rows * self._max_blocks
+        nblk = (self._kv_blocks if self._kv_blocks is not None
+                else rows * (self._max_blocks + self._nbx))
         if self._alloc is None:
             if self._pool_axes is None:
                 self._pool_axes = self._diff_axes(
@@ -711,6 +745,11 @@ class DecodeRunner:
                     for nl, ol, ax in zip(new_l, old, self._pool_axes)
                 ])
                 self._alloc.grow_pool(nblk)
+        if self._nbx and self._xkv_tab.shape[0] < rows:
+            self._xkv_tab = np.concatenate([
+                self._xkv_tab,
+                np.zeros((rows - self._xkv_tab.shape[0], self._nbx), np.int32),
+            ])
         self._grow_rows(rows)
 
     def cache_bytes(self) -> int:
@@ -818,35 +857,50 @@ class DecodeRunner:
             m, cache_len = self.model, self._cache_len
             bs = self._bs_blk
             nb_pf = -(-n_tokens // bs)
-            axes = self._pool_axes
+            axes, kinds = self._pool_axes, self._kinds
+            nbx = self._nbx
 
-            def scatter(pool, cont, ax, blk_ids):
+            def scatter(pool, cont, ax, blk_ids, nb):
                 # cont: contiguous leaf, batch dim (size 1) at ax, tokens at
                 # ax+1; pool: (..., P, bs, ...) with P at ax. Regroup the
-                # first nb_pf*bs prefill tokens into blocks and write them
+                # first nb*bs prefill tokens into blocks and write them
                 # to the claimed pool slots.
                 x = jnp.moveaxis(cont, ax, 0)[0]
                 t = jnp.moveaxis(x, ax, 0)  # tokens first, rest order kept
-                need = nb_pf * bs
+                need = nb * bs
                 if t.shape[0] < need:
                     t = jnp.pad(t, [(0, need - t.shape[0])] + [(0, 0)] * (t.ndim - 1))
-                t = t[:need].reshape((nb_pf, bs) + t.shape[1:])
+                t = t[:need].reshape((nb, bs) + t.shape[1:])
                 p2 = jnp.moveaxis(pool, (ax, ax + 1), (0, 1))
                 p2 = p2.at[blk_ids].set(t.astype(p2.dtype))
                 return jnp.moveaxis(p2, (0, 1), (ax, ax + 1))
 
+            def scatter_state(pool, cont, ax, page):
+                # per-slot state page (mamba conv/ssm): the whole recurrent
+                # state of batch row 0 lands in the slot's FIRST block —
+                # the same id token pools use for tokens 0..bs-1; distinct
+                # leaves, so the double use never collides.
+                x = jnp.moveaxis(cont, ax, 0)[0]
+                p2 = jnp.moveaxis(pool, ax, 0)
+                return jnp.moveaxis(p2.at[page].set(x.astype(p2.dtype)), 0, ax)
+
             @jax.jit  # repro: allow[jit-cache-hygiene] — wrapper memoized by the enclosing runner
-            def pf(params, pools, toks, blk_ids):
+            def pf(params, pools, toks, blk_ids, xkv_ids):
                 cache, outs = m.prefill(
                     params, toks, cache_len=cache_len, active_sites=None,
                     with_cache=True, moe_impl="dense",
                 )
                 leaves, td = jax.tree.flatten(pools)
                 cl = jax.tree.leaves(cache)
-                pools = jax.tree.unflatten(td, [
-                    scatter(p, c, ax, blk_ids)
-                    for p, c, ax in zip(leaves, cl, axes)
-                ])
+                out = []
+                for p, c, ax, kind in zip(leaves, cl, axes, kinds):
+                    if kind == "state":
+                        out.append(scatter_state(p, c, ax, blk_ids[0]))
+                    elif kind == "xkv":
+                        out.append(scatter(p, c, ax, xkv_ids, nbx))
+                    else:
+                        out.append(scatter(p, c, ax, blk_ids, nb_pf))
+                pools = jax.tree.unflatten(td, out)
                 lab = outs["final"]["label"]
                 return pools, (lab[:, 0] if lab.ndim == 2 else lab)
 
@@ -1031,6 +1085,66 @@ class DecodeRunner:
             )
             self.cow_copies += 1
 
+    def _free_slot_blocks(self, slot: int) -> None:
+        """Release every block reference ``slot`` holds: its token table
+        row AND its pinned read-only xkv pages."""
+        self._alloc.free_slot(slot)
+        if self._nbx and self._xkv_tab[slot, 0]:
+            for b in self._xkv_tab[slot]:
+                self._alloc.unpin(int(b))
+            self._xkv_tab[slot] = 0
+
+    def _claim_xkv(self, slot: int) -> None:
+        """Claim ``slot``'s pinned xkv pages (cross-attention encoder KV):
+        once per admission, prefilled once, never appended, freed with the
+        slot. Raises ``PoolExhausted`` atomically."""
+        if not self._nbx or self._xkv_tab[slot, 0]:
+            return
+        self._reserve(self._nbx)
+        self._xkv_tab[slot] = self._alloc.alloc_pinned(self._nbx)
+
+    def _xkv_ids_j(self, slot: int):
+        ids = self._xkv_tab[slot] if self._nbx else np.zeros(0, np.int32)
+        return jnp.asarray(ids, jnp.int32)
+
+    def _ship_tables(self, rows, zero_lo: int, zero_hi: int):
+        """Device block tables for ``rows``: the allocator's token-table
+        rows widened by the trailing pinned xkv columns. Rows in
+        ``[zero_lo, zero_hi)`` — the FREE bucket-padding rows, whose stale
+        entries may reference blocks live slots now own — are redirected
+        wholesale to the reserved trash block 0."""
+        t = self._alloc.table[rows].copy()
+        t[zero_lo:zero_hi] = 0
+        if self._nbx:
+            x = self._xkv_tab[rows].copy()
+            x[zero_lo:zero_hi] = 0
+            t = np.concatenate([t, x], axis=1)
+        return jnp.asarray(t, jnp.int32)
+
+    def _check_admission_capacity(self) -> None:
+        """Admission guard: a slot started now will write ``prompt_len +
+        max_new`` tokens into a cache sized at construction time. Refuse
+        with a clear error HERE instead of silently overflowing the slot
+        tail (contiguous: out-of-range scatters clamp; paged: the table
+        walk reads another slot's blocks) — catches stale-capacity hazards
+        such as the prompts array being swapped for a longer one after the
+        runner was built."""
+        plen = int(self.prompts.shape[1])
+        need = plen + self.max_new
+        if self.paged:
+            cap = self._max_blocks * self._bs_blk
+            layout = (f"paged capacity {cap} tokens "
+                      f"({self._max_blocks} blocks x {self._bs_blk})")
+        else:
+            cap = self._cache_len
+            layout = f"contiguous cache_len {cap}"
+        if need > cap:
+            raise ValueError(
+                f"cannot admit: prompt_len({plen}) + max_new({self.max_new}) "
+                f"= {need} tokens exceeds the slot cache capacity — {layout}; "
+                "rebuild the runner with a larger max_new_tokens/cache"
+            )
+
     def cached_prefix_tokens(self, item: int) -> int:
         """Prompt tokens of ``item`` already covered by the prefix cache
         (0 without one) — the engine prices prefill on the uncached tail."""
@@ -1053,13 +1167,21 @@ class DecodeRunner:
             raise KeyError(f"slot {slot} is mid-prefill (cannot swap)")
         ids = self._alloc.owned_ids(slot)
         idx = jnp.asarray(ids, jnp.int32)
-        bufs = [np.asarray(jnp.take(l, idx, axis=ax))  # repro: allow[host-sync] — swap-out IS the host transfer — gathering KV blocks is its job
-                for l, ax in zip(jax.tree.leaves(self._cache), self._pool_axes)]
-        self._alloc.free_slot(slot)
+        # owned token blocks cover the "state" leaves too: a slot's state
+        # page IS its first table entry's block id, and both swap_out's
+        # gather and swap_in's scatter walk ids in table order, so state
+        # content rides along at position 0. Pinned xkv pages are NOT in
+        # the owned set — gather them from the slot's xkv row.
+        xidx = self._xkv_ids_j(slot)
+        bufs = [np.asarray(jnp.take(l, xidx if kd == "xkv" else idx, axis=ax))  # repro: allow[host-sync] — swap-out IS the host transfer — gathering KV blocks is its job
+                for l, ax, kd in zip(jax.tree.leaves(self._cache),
+                                     self._pool_axes, self._kinds)]
+        n_xkv = int(self._nbx) if self._nbx and self._xkv_tab[slot, 0] else 0
+        self._free_slot_blocks(slot)
         self._live.discard(slot)
         self.swap_outs += 1
-        self.swapped_blocks += len(ids)
-        return {"bufs": bufs, "n_blocks": len(ids),
+        self.swapped_blocks += len(ids) + n_xkv
+        return {"bufs": bufs, "n_blocks": len(ids), "n_xkv": n_xkv,
                 "pos": int(self._pos[slot]), "tok": int(self._tok[slot])}
 
     def swap_in(self, slot: int, handle: dict) -> None:
@@ -1071,15 +1193,21 @@ class DecodeRunner:
             raise ValueError("swap_in requires a paged KV cache")
         self._ensure_rows(slot + 1)
         if slot in self._live:  # engine frees before reuse; be defensive
-            self._alloc.free_slot(slot)
+            self._free_slot_blocks(slot)
         n = int(handle["n_blocks"])
-        self._reserve(n)
+        nx = int(handle.get("n_xkv", 0))  # repro: allow[host-sync] — handle is host dict, not device data
+        self._reserve(n + nx)
         ids = self._alloc.alloc(slot, n)
+        if nx:
+            self._xkv_tab[slot] = self._alloc.alloc_pinned(nx)
         idx = jnp.asarray(ids, jnp.int32)
+        xidx = self._xkv_ids_j(slot)
         leaves, td = jax.tree.flatten(self._cache)
         out = []
-        for l, b, ax in zip(leaves, handle["bufs"], self._pool_axes):
-            m = jnp.moveaxis(l, ax, 0).at[idx].set(jnp.moveaxis(jnp.asarray(b), ax, 0))
+        for l, b, ax, kd in zip(leaves, handle["bufs"], self._pool_axes,
+                                self._kinds):
+            tgt = xidx if kd == "xkv" else idx
+            m = jnp.moveaxis(l, ax, 0).at[tgt].set(jnp.moveaxis(jnp.asarray(b), ax, 0))
             out.append(jnp.moveaxis(m, 0, ax))
         self._cache = jax.tree.unflatten(td, out)
         self._live.add(slot)
@@ -1101,11 +1229,12 @@ class DecodeRunner:
         one-shot prefill jit but redirects the cached chunks' scatters to
         the trash block, so only the uncached tail blocks are written —
         either way the slot state is bit-identical to a private prefill."""
+        self._check_admission_capacity()
         self._ensure_rows(slot + 1)
         toks = jnp.asarray(self.prompts[item][None, :])
         if self.paged:
             if slot in self._live:  # engine frees before reuse; be defensive
-                self._alloc.free_slot(slot)
+                self._free_slot_blocks(slot)
             S = self.prompts.shape[1]
             nb_pf = -(-S // self._bs_blk)
             shared, covered, first = ([], 0, None)
@@ -1127,12 +1256,14 @@ class DecodeRunner:
                     if n_new:
                         self._reserve(n_new)
                     blks = self._alloc.alloc(slot, n_new) if n_new else []
+                    self._claim_xkv(slot)
                 except PoolExhausted:
-                    self._alloc.free_slot(slot)  # unwind the shares: retry-safe
+                    self._free_slot_blocks(slot)  # unwind the shares: retry-safe
                     raise
                 ids = [0] * len(shared) + blks
                 self._cache, lab = self._prefill_fn_paged()(
-                    self.params, self._cache, toks, jnp.asarray(ids, jnp.int32)
+                    self.params, self._cache, toks, jnp.asarray(ids, jnp.int32),
+                    self._xkv_ids_j(slot),
                 )
                 tok = int(np.asarray(lab).reshape(-1)[0])  # repro: allow[host-sync] — sanctioned first-token read: admission needs the prefill label
             if self._prefix is not None:
@@ -1157,6 +1288,7 @@ class DecodeRunner:
         ``n_tokens`` already covers the whole prompt (== ``start``), else
         None — resume with ``prefill_resume``; the slot cache is valid
         mid-prompt, so decode steps for OTHER slots interleave freely."""
+        self._check_admission_capacity()
         S = self.prompts.shape[1]
         n = min(int(n_tokens), S)
         if n >= S:
@@ -1167,7 +1299,7 @@ class DecodeRunner:
         toks = jnp.asarray(self.prompts[item][None, :n])
         if self.paged:
             if slot in self._live:  # engine frees before reuse; be defensive
-                self._alloc.free_slot(slot)
+                self._free_slot_blocks(slot)
             shared, covered = [], 0
             if self._prefix is not None:
                 # cached FULL chunks inside the first chunk are shared, not
@@ -1189,12 +1321,14 @@ class DecodeRunner:
                 if self._prefix is not None:
                     self._reserve(n_new)
                 blks = self._alloc.alloc(slot, n_new)
+                self._claim_xkv(slot)
             except PoolExhausted:
-                self._alloc.free_slot(slot)  # unwind the shares: retry-safe
+                self._free_slot_blocks(slot)  # unwind the shares: retry-safe
                 raise
             ids = [0] * len(shared) + blks
             self._cache, _ = self._prefill_fn_paged(n)(
-                self.params, self._cache, toks, jnp.asarray(ids, jnp.int32)
+                self.params, self._cache, toks, jnp.asarray(ids, jnp.int32),
+                self._xkv_ids_j(slot),
             )
         else:
             self._cache, _ = self._prefill_fn()(
@@ -1247,7 +1381,7 @@ class DecodeRunner:
         pos = jnp.asarray(self._pos[rows], jnp.int32)
         if self.paged:
             self._claim_step_blocks([slot])
-            tables = jnp.asarray(self._alloc.table[rows], jnp.int32)
+            tables = self._ship_tables(rows, 1, 1)
             self._cache, fl = self._decode_fn_paged_noramp()(
                 self.params, self._cache, toks, pos, tables
             )
@@ -1311,13 +1445,11 @@ class DecodeRunner:
             # a pool with no free block raises PoolExhausted here BEFORE
             # any allocator or device state changes
             self._claim_step_blocks(slots)
-            tables = self._alloc.table[rows].copy()
             # FREE pad rows keep stale table rows that may now reference
-            # blocks owned by live slots — zero them so their (discarded)
-            # scatters land in the reserved trash block 0
-            if free:
-                tables[B : B + len(free)] = 0
-            tables_j = jnp.asarray(tables, jnp.int32)
+            # blocks owned by live slots — _ship_tables redirects them to
+            # the reserved trash block 0 so their (discarded) scatters
+            # land there
+            tables_j = self._ship_tables(rows, B, B + len(free))
             if k:
                 pad_act = jnp.asarray(act + [act[-1]] * (self.max_slots - k), jnp.int32)
                 self._cache, (rl, ru, fl) = self._decode_fn_paged()(
@@ -1434,10 +1566,7 @@ class DecodeRunner:
                 for s in slots:
                     al.release_tail(s, base_owned[s])
                 raise
-            tables = al.table[rows].copy()
-            if free:
-                tables[B : B + len(free)] = 0
-            tables_j = jnp.asarray(tables, jnp.int32)
+            tables_j = self._ship_tables(rows, B, B + len(free))
             if k:
                 pad_act = jnp.asarray(act + [act[-1]] * (self.max_slots - k), jnp.int32)
                 self._cache, (rl, rm, fl, ex, ndv) = self._decode_multi_fn_paged(n_max)(
@@ -1491,7 +1620,7 @@ class DecodeRunner:
 
     def free(self, slot: int) -> None:
         if self.paged and self._alloc is not None and slot in self._live:
-            self._alloc.free_slot(slot)
+            self._free_slot_blocks(slot)
         self._live.discard(slot)
         self._pf_progress.pop(slot, None)
 

@@ -195,6 +195,48 @@ def test_decode_runner_resumable_prefill_matches_one_shot(chunk_runners):
         r.free(1)
 
 
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+def test_admission_refuses_overflowing_prompts(layout):
+    """Regression: ``start``/``prefill_begin`` must refuse AT ADMISSION
+    when prompt_len + max_new exceeds the slot cache capacity sized at
+    construction — silent overflow clamps the contiguous scatter tail
+    (contiguous) or walks another slot's blocks (paged). The stale-
+    capacity hazard is real: the engine may swap the prompts array for a
+    longer one after the runner was built."""
+    import jax
+
+    from repro.configs import get_tiny
+    from repro.models import build_model
+    from repro.serving import DecodeRunner
+
+    cfg = get_tiny("qwen2-1.5b").replace(
+        n_layers=3, vocab_size=128,
+        decode_attn="paged" if layout == "paged" else "ref",
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(4))
+    prompts = np.random.default_rng(5).integers(0, 128, (4, 12)).astype(np.int32)
+    kw = dict(max_new_tokens=8, max_slots=2)
+    if layout == "paged":
+        kw["kv_block_size"] = 4  # capacity 5 blocks x 4 = 20 tokens
+    runner = DecodeRunner(model, params, prompts, **kw)
+    # in-capacity admission is untouched
+    runner.start(0, 0)
+    runner.free(0)
+    # the hazard: a wider prompts array lands after construction
+    runner.prompts = np.random.default_rng(6).integers(
+        0, 128, (4, 16)
+    ).astype(np.int32)  # 16 + 8 = 24 > 20
+    with pytest.raises(ValueError, match="cannot admit"):
+        runner.start(0, 0)
+    with pytest.raises(ValueError, match="cannot admit"):
+        runner.prefill_begin(0, 0, 4)
+    # nothing was admitted, no blocks leaked
+    assert not runner._live
+    if runner.paged:
+        assert runner._alloc.live_blocks == 0
+
+
 def test_decode_runner_midprefill_guards(chunk_runners):
     """A mid-prefill slot must refuse decode steps, and freeing it must
     release its prefill progress (and paged blocks) cleanly."""

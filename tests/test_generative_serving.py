@@ -379,6 +379,47 @@ def test_summarize_generative_single_token_through_engine():
     assert out["tpt_p50_ms"] == 0.0
 
 
+def test_summarize_generative_zero_span_rates_are_zero():
+    """A degenerate stream whose whole life is one instant (span == 0)
+    must report tokens_per_sec == 0.0 — not inf, not count/eps — and
+    raise nothing under errstate(raise). Regression: _per_sec used to
+    divide by max(span, 1e-9), turning a zero span into an
+    astronomically large bogus rate."""
+    from repro.serving import GenResponse
+    from repro.serving.metrics import _per_sec
+
+    with np.errstate(all="raise"):
+        assert _per_sec(5, 0.0) == 0.0
+        assert _per_sec(0, 0.0) == 0.0
+        assert _per_sec(3, -1.0) == 0.0  # clock skew: degenerate, not huge
+        assert _per_sec(4, 2000.0) == 2.0
+    # every release at t=0.0 -> derived span is exactly zero
+    resp = [
+        GenResponse(rid=i, arrival_ms=0.0, release_ms=[0.0, 0.0],
+                    exit_sites=[-1, -1], tokens=[1, 2], final_tokens=[1, 2],
+                    slo_ms=10.0)
+        for i in range(2)
+    ]
+    out = _finite_summary(resp)
+    assert out["tokens_per_sec"] == 0.0 and out["tokens"] == 4.0
+    # explicit zero horizon: same guarantee through the kwarg path
+    out = _finite_summary(resp, horizon_ms=0.0)
+    assert out["tokens_per_sec"] == 0.0
+
+
+def test_summarize_zero_span_through_engine():
+    """Engine regression for the zero-span guard: summarizing a real run
+    against a zero horizon must stay finite with rate 0.0 (the classifier
+    summary path shares _per_sec, so it is covered by the same guard)."""
+    reqs = make_gen_requests(
+        maf_trace(4, mean_qps=5.0, seed=1), n_tokens=2, prompt_len=16,
+        slo_ms=3 * PROF.vanilla_time(1),
+    )
+    eng = GenerativeEngine(PROF, GenerativeConfig(max_batch_size=4))
+    out = _finite_summary(eng.run(reqs), horizon_ms=0.0)
+    assert out["tokens_per_sec"] == 0.0 and out["tokens"] == 8.0
+
+
 def test_summarize_generative_all_exited_at_site_zero():
     from repro.serving import GenResponse
 

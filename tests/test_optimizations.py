@@ -32,6 +32,38 @@ def test_windowed_ring_cache_matches_full():
         assert (np.asarray(r0["final"]["label"]) == np.asarray(r1["final"]["label"])).all()
 
 
+def test_ring_wraparound_bit_identical_to_full():
+    """Satellite audit of the ``slot = pos % W`` wraparound: at positions
+    just below, at, and past exact multiples of the window the ring-cache
+    decode must match a full-cache window-masked dense decode BIT-FOR-BIT
+    (every local decode variant gathers the same W chronological rows and
+    runs the identical W-column reduction — allclose would hide a
+    rotated-sum or off-by-one slot bug behind ULP slack)."""
+    cfg0 = get_tiny("gemma3-4b")
+    W = cfg0.window
+    m0 = build_model(cfg0)
+    m1 = build_model(cfg0.replace(windowed_cache=True))
+    params = m0.init(jax.random.PRNGKey(0))
+    act = jnp.arange(2, dtype=jnp.int32)
+    for pos in (W - 1, W, W + 1, 2 * W):
+        toks = jax.random.randint(
+            jax.random.PRNGKey(pos), (2, pos + 1), 0, cfg0.vocab_size
+        )
+        c0, _ = m0.prefill(params, toks[:, :pos], cache_len=pos + 2,
+                           active_sites=act, moe_impl="dense")
+        c1, _ = m1.prefill(params, toks[:, :pos], cache_len=pos + 2,
+                           active_sites=act, moe_impl="dense")
+        _, r0 = m0.decode(params, c0, toks[:, pos:], jnp.int32(pos),
+                          active_sites=act, moe_impl="dense")
+        _, r1 = m1.decode(params, c1, toks[:, pos:], jnp.int32(pos),
+                          active_sites=act, moe_impl="dense")
+        for key in ("maxprob", "label"):
+            np.testing.assert_array_equal(
+                np.asarray(r0["final"][key]), np.asarray(r1["final"][key]),
+                err_msg=f"pos={pos} ({key})",
+            )
+
+
 def test_pallas_head_matches_dense_path():
     cfg = get_tiny("qwen2-1.5b")
     m0 = build_model(cfg)

@@ -309,6 +309,84 @@ def test_paged_kernel_sweep(B, H, KH, hd, bs, nb):
     np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=2e-6, rtol=2e-6)
 
 
+def _rand_paged_mla(rng, B, H, r, dr, bs, nb, dtype=jnp.float32):
+    P = B * nb + 4
+    q_lat = jnp.asarray(rng.standard_normal((B, H, r)), dtype)
+    q_pe = jnp.asarray(rng.standard_normal((B, H, dr)), dtype)
+    cp = jnp.asarray(rng.standard_normal((P, bs, r)), dtype)
+    kp = jnp.asarray(rng.standard_normal((P, bs, dr)), dtype)
+    ids = rng.permutation(np.arange(1, P))[: B * nb].reshape(B, nb)
+    table = jnp.asarray(ids, jnp.int32)
+    pos = jnp.asarray(rng.integers(0, nb * bs, B), jnp.int32)
+    return q_lat, q_pe, cp, kp, table, pos
+
+
+def test_paged_mla_ref_matches_contiguous_math():
+    """The paged MLA oracle IS the absorbed contiguous math on the
+    gathered latent layout — bit-identical, which is what the MLA runner
+    equivalence rests on (``decode_attn='paged'`` routes here)."""
+    from repro.kernels.decode_attention import paged_mla_decode_attention_ref
+
+    rng = np.random.default_rng(2)
+    B, H, r, dr, bs, nb = 3, 4, 16, 8, 4, 4
+    scale = 1.0 / np.sqrt(r + dr)
+    ql, qp, cp, kp, table, pos = _rand_paged_mla(rng, B, H, r, dr, bs, nb)
+    o = paged_mla_decode_attention_ref(ql, qp, cp, kp, table, pos, scale=scale)
+    c = cp[table].reshape(B, nb * bs, r)
+    k = kp[table].reshape(B, nb * bs, dr)
+    s = (
+        jnp.einsum("bhr,bsr->bhs", ql, c) + jnp.einsum("bhn,bsn->bhs", qp, k)
+    ) * scale
+    mask = jnp.arange(nb * bs)[None, None] <= pos[:, None, None]
+    probs = jax.nn.softmax(jnp.where(mask, s, -1e30), axis=-1)
+    np.testing.assert_array_equal(
+        np.asarray(o), np.asarray(jnp.einsum("bhs,bsr->bhr", probs, c))
+    )
+
+
+def test_paged_mla_kernel_matches_ref():
+    """Kernel pairing for the paged MLA Pallas kernel: interpret-mode
+    output vs the jnp oracle, per-row positions at mixed block offsets."""
+    from repro.kernels.decode_attention import (
+        paged_mla_decode_attention,
+        paged_mla_decode_attention_ref,
+    )
+
+    rng = np.random.default_rng(3)
+    B, H, r, dr, bs, nb = 2, 4, 16, 8, 8, 3
+    scale = 1.0 / np.sqrt(r + dr)
+    ql, qp, cp, kp, table, pos = _rand_paged_mla(rng, B, H, r, dr, bs, nb)
+    pos = jnp.asarray([0, nb * bs - 1], jnp.int32)  # first + last offsets
+    o_k = paged_mla_decode_attention(ql, qp, cp, kp, table, pos,
+                                     scale=scale, interpret=True)
+    o_r = paged_mla_decode_attention_ref(ql, qp, cp, kp, table, pos, scale=scale)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=2e-6, rtol=2e-6)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "B,H,r,dr,bs,nb",
+    [
+        (1, 2, 8, 4, 4, 1),  # single block: init tile is also the final tile
+        (3, 4, 16, 8, 4, 4),
+        (2, 8, 32, 16, 8, 3),
+    ],
+)
+def test_paged_mla_kernel_sweep(B, H, r, dr, bs, nb):
+    from repro.kernels.decode_attention import (
+        paged_mla_decode_attention,
+        paged_mla_decode_attention_ref,
+    )
+
+    rng = np.random.default_rng(B * 100 + nb)
+    scale = 1.0 / np.sqrt(r + dr)
+    ql, qp, cp, kp, table, pos = _rand_paged_mla(rng, B, H, r, dr, bs, nb)
+    o_k = paged_mla_decode_attention(ql, qp, cp, kp, table, pos,
+                                     scale=scale, interpret=True)
+    o_r = paged_mla_decode_attention_ref(ql, qp, cp, kp, table, pos, scale=scale)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=2e-6, rtol=2e-6)
+
+
 # ---------------------------------------------------------------------------
 # paged runner: exhaustion + memory scaling
 
@@ -413,23 +491,38 @@ def test_paged_memory_scales_with_live_tokens(paged_setup):
     assert st["peak_blocks"] == 6 and st["live_blocks"] == 6
 
 
-def test_paged_cache_schema_rejects_unsupported_layers():
+def test_paged_cache_schema_covers_all_mixer_families():
+    """Every mixer family now owns a paged page layout drawn from the one
+    shared block pool: MLA pools the compressed latent streams, mamba
+    pools per-slot state pages, local-window layers reuse the k/v token
+    pools (ring-redirected through the first ceil(W/bs) table entries)."""
     from repro.configs import get_tiny
     from repro.models import build_model
+    from repro.models.common import ParamInfo
 
+    nb, bs = 4, 4
     mamba = build_model(get_tiny("mamba2-2.7b"))
-    with pytest.raises(NotImplementedError):
-        mamba.paged_cache_schema(4, 4)
+    sch = mamba.paged_cache_schema(nb, bs)
+    leaves = jax.tree.leaves(sch, is_leaf=lambda x: isinstance(x, ParamInfo))
+    # state pages are per-slot, pool-leading, and NOT (P, bs, ...) token
+    # shaped: conv (L?, P, d_conv-1, conv_dim) and ssm (L?, P, H, hp, N)
+    assert leaves and all(nb in l.shape for l in leaves)
+    assert not mamba.paged_sharing_ok
+
     mla = build_model(get_tiny("deepseek-v2-lite-16b"))
-    with pytest.raises(NotImplementedError):
-        mla.paged_cache_schema(4, 4)
-    # local sliding-window layers are unsupported regardless of
-    # windowed_cache: they keep the dense masked decode path, which a
-    # block pool cannot feed — must fail AT SCHEMA CREATION, not with a
-    # confusing decode_impl error on the first step
+    cfg = mla.cfg
+    sch = mla.paged_cache_schema(nb, bs)
+    blk = sch["blocks"][0]
+    assert set(blk) >= {"c", "k_pe"}
+    assert blk["c"].shape[-2:] == (bs, cfg.kv_lora_rank)
+    assert blk["k_pe"].shape[-2:] == (bs, cfg.qk_rope_dim)
+
     gemma = build_model(get_tiny("gemma3-4b").replace(decode_attn="paged"))
-    with pytest.raises(NotImplementedError):
-        gemma.paged_cache_schema(4, 4)
+    sch = gemma.paged_cache_schema(nb, bs)
+    leaves = jax.tree.leaves(sch, is_leaf=lambda x: isinstance(x, ParamInfo))
+    assert leaves and all(l.shape[-3] == bs for l in leaves)
+    # ring pages are position-aliased mod W: sharing refused
+    assert not gemma.paged_sharing_ok
 
 
 def test_runner_kv_block_size_validation(paged_setup):

@@ -1,8 +1,9 @@
 """eval_shape support-audit snapshot tests (repro.analysis pass 2).
 
-Pins the expected support cells for three representative configs — a plain
-full-attention LM (every path supported), a pure-SSM model (no KV paths),
-and an all-MLA model (dense decode only) — and checks the committed
+Pins the expected support cells for representative configs across every
+mixer family the paged block pool now covers — plain full-attention,
+pure-SSM (state pages), all-MLA (latent-stream pages), local ring-window,
+cross-attention (pinned xkv pages), and enc-dec — and checks the committed
 ``support_matrix.json`` snapshot agrees with a freshly-derived audit for
 those configs. Everything runs under ``jax.eval_shape``: no device math.
 """
@@ -27,24 +28,26 @@ REPO = Path(__file__).resolve().parents[1]
 EXPECTED = {
     "gpt2-medium": {p: STATUS_SUPPORTED for p in PATH_IDS},
     "mamba2-2.7b": {
-        "prefill": STATUS_SUPPORTED,
-        "decode_dense": STATUS_SUPPORTED,
-        "decode_kernel": STATUS_REJECTED,  # no attention layers at all
-        "decode_paged": STATUS_REJECTED,  # recurrent state doesn't page
-        "chunked_prefill": STATUS_SUPPORTED,
-        "paged_block_schema": STATUS_REJECTED,
-        "ramp_heads": STATUS_SUPPORTED,
-        "decode_fused_exit": STATUS_REJECTED,  # recurrent state can't pre-claim/unwind a window
+        # paged: per-slot state pages from the shared pool
+        p: (STATUS_REJECTED if p == "decode_kernel" else STATUS_SUPPORTED)
+        for p in PATH_IDS  # decode_kernel: no attention layers at all
     },
     "deepseek-v2-lite-16b": {
-        "prefill": STATUS_SUPPORTED,
-        "decode_dense": STATUS_SUPPORTED,
-        "decode_kernel": STATUS_REJECTED,  # all slots are MLA
-        "decode_paged": STATUS_REJECTED,  # paged pool is full-attn only
-        "chunked_prefill": STATUS_SUPPORTED,
-        "paged_block_schema": STATUS_REJECTED,
-        "ramp_heads": STATUS_SUPPORTED,
-        "decode_fused_exit": STATUS_REJECTED,  # MLA slots follow the paged rejection
+        # paged: block tables over the compressed {c, k_pe} latent streams
+        p: (STATUS_REJECTED if p == "decode_kernel" else STATUS_SUPPORTED)
+        for p in PATH_IDS  # decode_kernel: all slots are MLA (paged_mla kernel routes via decode_paged)
+    },
+    # local ring-window paging: slot = pos % W through the first
+    # ceil(W/bs) table entries
+    "gemma3-4b": {p: STATUS_SUPPORTED for p in PATH_IDS},
+    # cross-attention: read-only pinned xkv pages in trailing table columns
+    "llama-3.2-vision-90b": {p: STATUS_SUPPORTED for p in PATH_IDS},
+    # hybrid attn+mamba: token pages and state pages from one pool
+    "jamba-1.5-large-398b": {p: STATUS_SUPPORTED for p in PATH_IDS},
+    "seamless-m4t-large-v2": {
+        # enc-dec: decoder self-attn pages + pinned encoder-memory xkv pages
+        p: (STATUS_REJECTED if p == "decode_kernel" else STATUS_SUPPORTED)
+        for p in PATH_IDS  # decode_kernel: enc-dec wires dense/paged cache attention, no flash-decode routing
     },
 }
 
