@@ -670,6 +670,7 @@ def bench_kernels():
 
 from benchmarks.bench_paged_families import bench_paged_families  # noqa: E402
 from benchmarks.bench_prefix_cache import bench_prefix_cache  # noqa: E402
+from benchmarks.bench_sharded_decode import bench_sharded_decode  # noqa: E402
 from benchmarks.bench_steps_per_sync import bench_steps_per_sync  # noqa: E402
 
 ALL = [
@@ -694,6 +695,7 @@ ALL = [
     bench_chunked_prefill,
     bench_prefix_cache,
     bench_steps_per_sync,
+    bench_sharded_decode,
     bench_kernels,
 ]
 

@@ -59,6 +59,7 @@ FEATURE_PATHS: Tuple[Tuple[str, str], ...] = (
     ("paged_block_schema", "paged (block-pool) cache schema construction"),
     ("ramp_heads", "forward with active early-exit ramp heads"),
     ("decode_fused_exit", "multi-step fused-exit decode window (lax.while_loop + on-device thresholds)"),
+    ("decode_sharded", "tensor-parallel sharded decode (tp=2): column-sharded attn/MLP, per-device KV shard"),
 )
 PATH_IDS = tuple(p for p, _ in FEATURE_PATHS)
 
@@ -177,6 +178,45 @@ def _lm_decode_fused(cfg):
     )
 
 
+def _lm_decode_sharded(cfg, tp: int = 2):
+    """Tensor-parallel decode probe under an ABSTRACT mesh: no devices, no
+    shard_map. ``tp_check`` raises the documented per-mixer rejections;
+    the trace then runs ``decode`` with a ``TpCtx`` whose gather is a
+    shape-only stub (tiled all_gather == concat along the gathered axis)
+    over per-device avals shrunk according to ``tp_param_specs`` /
+    ``tp_cache_specs`` — exactly the shapes each device sees inside
+    ``decode_sharded``'s shard_map body."""
+    from repro.models import layers as LY
+    from repro.models.transformer import TpCtx
+
+    model = build_model(cfg.replace(decode_attn="dense"))
+    model.tp_check(tp, dp=1, paged=False)
+    axes = LY.TEST_AXES
+    params = abstract_from_schema(model.schema())
+    cache = abstract_from_schema(model.cache_schema(B, CACHE_LEN))
+
+    def shrink(avals, specs):
+        def one(a, sp):
+            shape = list(a.shape)
+            for i, s in enumerate(sp):
+                if s is not None:
+                    shape[i] //= tp
+            return _aval(shape, a.dtype)
+
+        return jax.tree.map(one, avals, specs)
+
+    params = shrink(params, model.tp_param_specs(axes))
+    cache = shrink(cache, model.tp_cache_specs(cache, axes))
+    ctx = TpCtx(tp, lambda y: jnp.concatenate([y] * tp, axis=-1), None)
+
+    def fn(p, c, toks, po):
+        return model.decode(p, c, toks, po, moe_impl="dense", tp=ctx)
+
+    return jax.eval_shape(
+        fn, params, cache, _tokens(cfg, B, 1), _aval((B,), jnp.int32)
+    )
+
+
 def _encdec_prefill(model, cfg, *, s, cache_len, active=None):
     params = abstract_from_schema(model.schema())
     act = jnp.arange(active, dtype=jnp.int32) if active else None
@@ -222,6 +262,8 @@ def probe(cfg, path: str) -> None:
             _lm_prefill(model, cfg, s=S, cache_len=S, active=_n_active(model))
         elif path == "decode_fused_exit":
             _lm_decode_fused(cfg)
+        elif path == "decode_sharded":
+            _lm_decode_sharded(cfg)
         return
 
     if family == "encdec":
@@ -277,6 +319,11 @@ def probe(cfg, path: str) -> None:
                 fn, params, cache, _tokens(cfg, B, 1), _aval((B,), jnp.int32),
                 jnp.arange(k, dtype=jnp.int32), _aval((k,), jnp.float32),
                 _aval((B,), jnp.bool_), _aval((), jnp.int32),
+            )
+        elif path == "decode_sharded":
+            raise NotImplementedError(
+                "sharded decode wires the decoder-only LM stack; the enc-dec "
+                "decoder (pinned cross-attn memory) keeps the single-device path"
             )
         return
 

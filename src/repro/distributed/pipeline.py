@@ -1,15 +1,23 @@
-"""GPipe-style pipeline parallelism demonstrator (shard_map + ppermute).
+"""Pipeline parallelism: GPipe demonstrator + exit-gated decode windows.
 
-Maps a stack of identical stages onto a mesh axis: microbatches stream
-through stages with collective_permute between neighbors; the classic
-(S + M - 1) schedule. This demonstrates PP composition for configs where
-DP×TP×EP is not enough (e.g. >8k-chip jobs); the assigned cells use
-DP/FSDP×TP×EP which is the right fit for v5e pods (DESIGN.md §5).
+``pipeline_apply`` maps a stack of identical stages onto a mesh axis:
+microbatches stream through stages with collective_permute between
+neighbors; the classic (S + M - 1) schedule.
+
+``pipeline_decode_window`` is the SERVING path: a multi-token decode
+window over pipeline-sharded period blocks where per-row EARLY-EXIT masks
+gate the ``ppermute`` forwarding — a row whose boundary ramp fires takes
+the ramp label as its token and never enters later stages (its slot in
+the microbatch stops contributing to downstream stage-step counters),
+turning early exits into the paper's pipeline-escape throughput win. When
+every row of a microbatch has exited, the whole payload goes inert and
+the window terminates early. The 1-stage mesh degenerates to plain
+batched multi-step decode sharing one weight upload.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 
@@ -69,3 +77,284 @@ def pipeline_apply(
     return shard_map(
         mapped, mesh=mesh, in_specs=in_specs, out_specs=P(), check_vma=False,
     )(stacked_params, x)
+
+
+def pipeline_check(model, n_stages: int, batch: Optional[int] = None) -> None:
+    """Raise ``NotImplementedError`` (why-note surfaced by the support
+    matrix) when this plan/config cannot run the exit-gated pipeline
+    decode path at ``n_stages`` stages."""
+    cfg, plan = model.cfg, model.plan
+    if plan.prefix or plan.suffix:
+        raise NotImplementedError(
+            "pipeline decode shards the scanned period blocks only: plans "
+            "with prefix/suffix layers (first_k_dense, trailing globals) "
+            "have no uniform stage split"
+        )
+    for slot in plan.period:
+        if slot.mixer != "attn" or slot.cross:
+            raise NotImplementedError(
+                f"pipeline decode supports attention-mixer stages only "
+                f"(got mixer={slot.mixer!r}, cross={slot.cross})"
+            )
+        if slot.ffn == "moe":
+            raise NotImplementedError(
+                "pipeline decode stages run single-device: MoE slots need "
+                "the expert-parallel `model` axis the stage mesh does not "
+                "carry"
+            )
+        if slot.is_local:
+            raise NotImplementedError(
+                "local-window slots pin ring caches whose chronological "
+                "gather is not stage-local"
+            )
+    if cfg.window:
+        raise NotImplementedError("windowed attention plans are not staged")
+    if str(getattr(cfg, "decode_attn", "ref")).startswith("paged"):
+        raise NotImplementedError(
+            "pipeline decode reads the contiguous slot cache; the paged "
+            "block pool shards per-device over `model`, not over stages"
+        )
+    if str(cfg.pallas_head) != "off":
+        raise NotImplementedError(
+            "the fused ramp-head kernel is per-device; pipeline boundary "
+            "ramps use the dense head"
+        )
+    if plan.n_periods % n_stages:
+        raise NotImplementedError(
+            f"n_periods={plan.n_periods} not divisible by "
+            f"n_stages={n_stages}"
+        )
+    if batch is not None and batch % n_stages:
+        raise NotImplementedError(
+            f"decode batch {batch} not divisible into {n_stages} "
+            "microbatches"
+        )
+
+
+def pipeline_decode_window(model, params, cache, tokens, pos, n_steps, *,
+                           mesh, axis: str = "stage", active_sites=None,
+                           thresholds=None):
+    """Multi-token decode window over pipeline-sharded period blocks with
+    EXIT-GATED forwarding.
+
+    The ``axis`` mesh dimension carries ``S`` stages; stage ``s`` owns
+    periods ``[s·L/S, (s+1)·L/S)`` of the scanned blocks (params AND the
+    contiguous KV cache shard on the leading period axis — per-device KV
+    bytes are ``total / S``). The batch splits into ``S`` microbatches
+    that stream through stages on a ``ppermute`` ring: one payload is
+    resident per stage per tick, so after the fill every stage works
+    every tick and a full token step costs ``S`` ticks per microbatch.
+
+    Early-exit contract (the Apparate pipeline escape): after its LAST
+    local period, a non-final stage evaluates the boundary ramp for any
+    ``active_sites`` entry sitting at that layer; a row whose uncertainty
+    clears the threshold (strict ``<``, matching ``_head_stats``) takes
+    the RAMP label as its step-``k`` token and goes dead for the rest of
+    the window — later stages never count it (see ``stage_steps``) and
+    once a whole microbatch is dead its payload goes inert (its ticks
+    stop costing stage work) and the window can terminate early. With
+    ``thresholds`` all-zero no exit can fire and the emitted tokens are
+    bit-identical to plain (single-device) greedy decode — the anchor the
+    tests pin.
+
+    tokens: (B,1) int32; pos: int32[B] per-row write indices; ``n_steps``
+    static. Returns ``(new_cache, tok_rec (n_steps,B), exit_rec
+    (n_steps,B), alive (B,), stage_steps (S,))`` — ``exit_rec[k,b]`` is
+    the global ramp-site index that fired for row ``b`` at step ``k``
+    (−1 = none); ``tok_rec`` entries after a row's exit step are garbage
+    the caller must mask (exactly like ``decode_multi``'s packed
+    records); ``stage_steps[s]`` counts alive-row×step work stage ``s``
+    actually ran.
+    """
+    from repro.models import layers as LY
+    from repro.models.transformer import _mask_pad_vocab
+
+    cfg, plan = model.cfg, model.plan
+    S = mesh.shape[axis]
+    B = int(tokens.shape[0])
+    pipeline_check(model, S, batch=B)
+    n_steps = int(n_steps)
+    Bm = B // S
+    n_slots = len(plan.period)
+    Lp = plan.n_periods // S  # periods per stage
+
+    # host-side ramp routing: stage s's boundary layer -> active-site row
+    sites = list(model.sites)
+    act = [] if active_sites is None else [int(a) for a in active_sites]
+    thr_in = ([0.0] * len(act) if thresholds is None
+              else [float(t) for t in thresholds])
+    site_idx_per_stage = [0] * S   # index into model.sites (for ramp params)
+    thr_per_stage = [0.0] * S      # 0.0 can never fire (strict <)
+    for s in range(S - 1):
+        boundary = (s + 1) * Lp * n_slots - 1
+        for j, a in enumerate(act):
+            if sites[a] == boundary:
+                site_idx_per_stage[s] = a
+                thr_per_stage[s] = thr_in[j]
+    site_arr = jnp.asarray(site_idx_per_stage, jnp.int32)
+    thr_arr = jnp.asarray(thr_per_stage, jnp.float32)
+
+    tokens = jnp.asarray(tokens, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+
+    def ramp_stats(p, h, si):
+        """Boundary ramp label/uncertainty for one site — the dense
+        ``ramp_outputs``/``_stats`` math specialized to K=1, npos=1."""
+        hs = h[:, 0]  # (Bm, d)
+        nw = p["ramps"]["norm_w"][si]
+        hs = LY.rms_norm(hs, nw[None, :])
+        if cfg.ramp_style == "mlp":
+            w1, w2 = p["ramps"]["w1"][si], p["ramps"]["w2"][si]
+            hs = hs + jax.nn.gelu(hs @ w1) @ w2
+        if cfg.ramp_style == "tied":
+            hw = (p["tok"]["embed"].T if cfg.tie_embeddings
+                  else p["tok"]["lm_head"])
+        else:
+            hw = p["ramps"]["head"][si]
+        logits = _mask_pad_vocab(cfg, (hs @ hw).astype(jnp.float32))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        maxprob = jnp.exp(jnp.max(logits, axis=-1) - lse)
+        return lab, 1.0 - maxprob
+
+    def final_label(p, h):
+        hn = LY.apply_norm(cfg, p["final_norm"], h)
+        logits = LY.unembed(cfg, p["tok"], hn)[:, 0].astype(jnp.float32)
+        logits = _mask_pad_vocab(cfg, logits)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def mapped(p, cb, toks, po, site_a, thr_a):
+        sid = jax.lax.axis_index(axis)
+        last = S - 1
+        mb0 = (S - sid) % S  # payload j enters stage 0 at tick j
+
+        pl = dict(
+            mb=mb0.astype(jnp.int32),
+            h=jnp.zeros((Bm, 1, cfg.d_model), jnp.dtype(cfg.dtype)),
+            tok=jax.lax.dynamic_slice_in_dim(toks, mb0 * Bm, Bm, 0),
+            k=jnp.zeros((), jnp.int32),
+            nxt=jnp.zeros((), jnp.int32),
+            alive=jnp.ones((Bm,), bool),
+            done=jnp.asarray(n_steps <= 0),
+            tok_rec=jnp.zeros((max(n_steps, 1), Bm), jnp.int32),
+            exit_rec=jnp.full((max(n_steps, 1), Bm), -1, jnp.int32),
+        )
+        steps = jnp.zeros((), jnp.int32)
+
+        def tick(carry):
+            t, pl, cb, steps, _ = carry
+            proc = (pl["nxt"] == sid) & ~pl["done"]
+            pos_mb = jax.lax.dynamic_slice_in_dim(po, pl["mb"] * Bm, Bm, 0) + pl["k"]
+            pc = pos_mb.reshape(-1, 1)
+            h = jnp.where(
+                sid == 0,
+                LY.embed_apply(cfg, p["tok"], pl["tok"], pc).astype(pl["h"].dtype),
+                pl["h"],
+            )
+            cb_mb = jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(x, pl["mb"] * Bm, Bm, 1),
+                cb,
+            )
+            Sc = jax.tree.leaves(cb)[0].shape[2]
+            kpos = jnp.arange(Sc)[None, :]
+            mask = (kpos <= pc)[:, None, None, :]
+            h, _, ncb, _ = model._stack(
+                p, h, positions=pc, mask_full=mask, mask_local=mask,
+                axes=LY.TEST_AXES, mesh=None, caches={"blocks": cb_mb},
+                cache_index=pos_mb, memory=None, moe_impl="dense",
+                pool_idx=jnp.asarray([0], jnp.int32),
+            )
+            cb2 = jax.tree.map(
+                lambda big, sub: jnp.where(
+                    proc,
+                    jax.lax.dynamic_update_slice_in_dim(
+                        big, sub.astype(big.dtype), pl["mb"] * Bm, 1),
+                    big,
+                ),
+                cb, ncb["blocks"],
+            )
+            steps = steps + jnp.where(proc, jnp.sum(pl["alive"].astype(jnp.int32)), 0)
+
+            # -- boundary: non-final stages evaluate their exit ramp -------
+            if act and S > 1:
+                rl, runc = ramp_stats(p, h, site_a[sid])
+                fire = ((sid != last) & proc & pl["alive"]
+                        & (runc < thr_a[sid]))
+            else:
+                rl = jnp.zeros((Bm,), jnp.int32)
+                fire = jnp.zeros((Bm,), bool)
+            tok_rec = pl["tok_rec"].at[pl["k"]].set(
+                jnp.where(fire, rl, pl["tok_rec"][pl["k"]]))
+            exit_rec = pl["exit_rec"].at[pl["k"]].set(
+                jnp.where(fire, site_a[sid], pl["exit_rec"][pl["k"]]))
+            alive = pl["alive"] & ~fire
+
+            # -- final stage: head, token, step count ----------------------
+            fl = final_label(p, h)
+            at_last = (sid == last) & proc
+            tok_rec = jnp.where(
+                at_last,
+                tok_rec.at[pl["k"]].set(
+                    jnp.where(alive, fl, tok_rec[pl["k"]])),
+                tok_rec,
+            )
+            new_tok = jnp.where(
+                at_last,
+                jnp.where(alive[:, None], fl[:, None], pl["tok"]),
+                pl["tok"],
+            )
+            k2 = pl["k"] + at_last.astype(jnp.int32)
+            done2 = pl["done"] | (at_last & (
+                (k2 >= n_steps) | ~jnp.any(alive)))
+            nxt2 = jnp.where(sid == last, 0, sid + 1).astype(jnp.int32)
+
+            pl2 = dict(
+                mb=pl["mb"], h=h.astype(pl["h"].dtype), tok=new_tok, k=k2,
+                nxt=nxt2, alive=alive, done=done2, tok_rec=tok_rec,
+                exit_rec=exit_rec,
+            )
+            # a payload not being processed this tick rides through unchanged
+            pl2 = jax.tree.map(
+                lambda new, old: jnp.where(proc, new, old), pl2, pl)
+            perm = [(i, (i + 1) % S) for i in range(S)]
+            pl2 = jax.tree.map(lambda x: jax.lax.ppermute(x, axis, perm), pl2)
+            all_done = jax.lax.psum(pl2["done"].astype(jnp.int32), axis) >= S
+            return t + 1, pl2, cb2, steps, all_done
+
+        def cond(carry):
+            t, _, _, _, all_done = carry
+            return (t < n_steps * S + S) & ~all_done
+
+        _, pl, cb, steps, _ = jax.lax.while_loop(
+            cond, tick, (jnp.zeros((), jnp.int32), pl, cb, steps,
+                         jnp.asarray(False)))
+
+        # reassemble records: each microbatch's rows live in exactly one
+        # payload — scatter into (n_micro, ...) zeros and psum (an exact
+        # broadcast-sum, every other stage contributes zeros)
+        def collect(x, fill=0):
+            buf = jnp.zeros((S,) + x.shape, x.dtype).at[pl["mb"]].set(x - fill)
+            return jax.lax.psum(buf, axis) + fill
+
+        tok_rec = collect(pl["tok_rec"])              # (S, n_steps, Bm)
+        exit_rec = collect(pl["exit_rec"], fill=-1)   # (S, n_steps, Bm)
+        alive = collect(pl["alive"].astype(jnp.int32))
+        tok_rec = jnp.moveaxis(tok_rec, 0, 1).reshape(max(n_steps, 1), B)
+        exit_rec = jnp.moveaxis(exit_rec, 0, 1).reshape(max(n_steps, 1), B)
+        alive = alive.reshape(B).astype(bool)
+        return cb, tok_rec, exit_rec, alive, steps[None]
+
+    cspec = jax.tree.map(
+        lambda x: P(axis, *([None] * (x.ndim - 1))), cache["blocks"])
+    pspec = {k: jax.tree.map(lambda _: P(), v)
+             for k, v in params.items() if k != "blocks"}
+    pspec["blocks"] = jax.tree.map(
+        lambda x: P(axis, *([None] * (x.ndim - 1))), params["blocks"])
+    new_cb, tok_rec, exit_rec, alive, steps = shard_map(
+        mapped, mesh=mesh,
+        in_specs=(pspec, cspec, P(), P(), P(), P()),
+        out_specs=(cspec, P(), P(), P(), P(axis)),
+        check_vma=False,
+    )(params, cache["blocks"], tokens, pos, site_arr, thr_arr)
+    return ({"blocks": new_cb}, tok_rec[:n_steps], exit_rec[:n_steps],
+            alive, steps)

@@ -1,6 +1,14 @@
 import os
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# merged under any operator-exported flags (tuning.py contract: an
+# existing --xla_force_host_platform_device_count in the environment
+# wins over our 512 default) — tuning has no jax import, so pulling the
+# helper in here still lands the env var before the backend initializes
+from repro.launch.tuning import merge_xla_flags
+
+os.environ["XLA_FLAGS"] = merge_xla_flags(
+    "--xla_force_host_platform_device_count=512", os.environ.get("XLA_FLAGS")
+)
 
 """Multi-pod dry run: lower + compile every (arch × shape × mesh) cell and
 extract the roofline terms from the compiled artifact.

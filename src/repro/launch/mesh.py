@@ -38,3 +38,25 @@ def mesh_axes(mesh, *, fsdp: bool = True) -> MeshAxes:
 
 def make_test_mesh(data: int = 1, model: int = 1):
     return make_mesh((data, model), ("data", "model"))
+
+
+def make_serving_mesh(*, tp: int = 1, dp: int = 1, pp: int = 1):
+    """Mesh for the sharded decode serving paths over the devices of the
+    current backend. ``tp``/``dp`` build a ``(data, model)`` mesh for
+    tensor-parallel decode (``ShardedDecodeRunner``); ``pp`` builds a
+    1-D ``(stage,)`` mesh for exit-gated pipeline decode windows — the
+    two are alternative layouts, not composable on one mesh here."""
+    if pp > 1:
+        if tp > 1 or dp > 1:
+            raise ValueError("pp is a (stage,) mesh; combine with tp/dp "
+                             "by nesting runners, not one mesh")
+        need, shape, axes = pp, (pp,), ("stage",)
+    else:
+        need, shape, axes = dp * tp, (dp, tp), ("data", "model")
+    n = len(jax.devices())
+    if n < need:
+        raise ValueError(
+            f"mesh {shape} needs {need} devices, backend has {n} — on CPU "
+            "export XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            "before the process starts")
+    return make_mesh(shape, axes)

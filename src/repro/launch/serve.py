@@ -33,6 +33,7 @@ from repro.serving import (
     GenerativeEngine,
     PlatformConfig,
     ServingSimulator,
+    ShardedDecodeRunner,
     make_gen_requests,
     make_requests,
     maf_trace,
@@ -132,7 +133,7 @@ def serve_generative(n=48, *, decode_tokens=16, budget=0.02, acc=0.99, load=0.5,
                      seed=2, slots=4, layers=6, kv_block_size=0, kv_blocks=None,
                      prefill_chunk=0, admission=False, admission_slack=1.0,
                      prefix_cache=False, preempt="none", steps_per_sync=1,
-                     verbose=True):
+                     tp=1, dp=1, pp=1, verbose=True):
     """End-to-end generative decode serving on a trained tiny LM: vanilla
     (no-EE) vs Apparate per-token exits, KV catch-up charged, at the same
     accuracy constraint. The latency profile uses the full qwen2-1.5b
@@ -160,7 +161,14 @@ def serve_generative(n=48, *, decode_tokens=16, budget=0.02, acc=0.99, load=0.5,
     ``steps_per_sync > 1`` dispatches decode SYNC WINDOWS: up to that
     many decode steps per jitted while_loop with on-device exit decisions
     against a stale threshold copy, one controller round-trip per window
-    (``GenerativeConfig.steps_per_sync``)."""
+    (``GenerativeConfig.steps_per_sync``).
+
+    ``tp`` / ``dp`` > 1 serve through ``ShardedDecodeRunner`` on a
+    ``(data, model)`` mesh (tensor-parallel attention/MLP, per-device KV
+    shards — bit-identical to the single-device runner); ``pp`` > 1
+    additionally reports an exit-gated PIPELINE decode window demo on a
+    ``(stage,)`` mesh. Both need enough backend devices (on CPU export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first)."""
     if prefix_cache and not kv_block_size:
         raise ValueError("--prefix-cache requires --kv-block-size > 0 (paged KV)")
     if preempt != "none" and not kv_block_size:
@@ -216,9 +224,17 @@ def serve_generative(n=48, *, decode_tokens=16, budget=0.02, acc=0.99, load=0.5,
     if kv_block_size:
         rkw = dict(kv_block_size=kv_block_size, kv_blocks=kv_blocks,
                    prefix_cache=prefix_cache)
-    runner = DecodeRunner(model, state["params"], stream.data[:, :seq_len],
-                          max_new_tokens=decode_tokens + 2, max_slots=slots,
-                          n_slots=mbs, **rkw)
+    if tp > 1 or dp > 1:
+        from repro.launch.mesh import make_serving_mesh
+        runner = ShardedDecodeRunner(
+            model, state["params"], stream.data[:, :seq_len],
+            mesh=make_serving_mesh(tp=tp, dp=dp),
+            max_new_tokens=decode_tokens + 2, max_slots=slots,
+            n_slots=mbs, **rkw)
+    else:
+        runner = DecodeRunner(model, state["params"], stream.data[:, :seq_len],
+                              max_new_tokens=decode_tokens + 2, max_slots=slots,
+                              n_slots=mbs, **rkw)
     eng = GenerativeEngine(prof, gcfg, runner, ctl, admission=adm())
     mo = summarize_generative(eng.run(reqs), horizon_ms=eng.makespan_ms)
     out = {
@@ -243,9 +259,63 @@ def serve_generative(n=48, *, decode_tokens=16, budget=0.02, acc=0.99, load=0.5,
     if admission:
         out["admission"] = {"vanilla": base_eng.admission.stats(),
                             "apparate": eng.admission.stats()}
+    if tp > 1 or dp > 1:
+        out["mesh"] = {"tp": tp, "dp": dp}
+    if pp > 1:
+        out["pipeline"] = pipeline_escape_demo(
+            tiny, state["params"], stream.data[:, :seq_len], pp,
+            n_steps=decode_tokens)
     if verbose:
         print(json.dumps(out, indent=1, default=float))
     return out
+
+
+def pipeline_escape_demo(tiny, params, prompts, pp, *, n_steps=16, thr=0.6):
+    """Exit-gated pipeline decode window on a (stage,) mesh: decode the
+    same window with thresholds OFF (every row rides all stages) and ON
+    (rows clearing a boundary ramp's uncertainty bar skip all later
+    stages); reports per-stage work counters for both."""
+    import jax.numpy as jnp
+
+    from repro.distributed.pipeline import pipeline_decode_window
+    from repro.launch.mesh import make_serving_mesh
+
+    # the paged-pool config is irrelevant here: the pipeline path reads
+    # the contiguous slot cache, so rebuild a 'ref' view over same params
+    model = build_model(tiny.replace(decode_attn="ref"))
+    mesh = make_serving_mesh(pp=pp)
+    B = max(pp, (min(8, len(prompts)) // pp) * pp)
+    toks = jnp.asarray(prompts[:B], jnp.int32)
+    seq_len = toks.shape[1]
+    cache, outs = model.prefill(
+        params, toks, cache_len=seq_len + n_steps + 1, moe_impl="dense")
+    last = outs["final"]["label"].reshape(B, 1).astype(jnp.int32)
+    pos = jnp.full((B,), seq_len, jnp.int32)
+    # boundary ramps: the active sites sitting at each stage's last layer
+    sites = list(model.sites)
+    nsl = len(model.plan.period)
+    bounds = [(s + 1) * (model.plan.n_periods // pp) * nsl - 1
+              for s in range(pp - 1)]
+    act = [sites.index(b) for b in bounds if b in sites]
+    _, _, _, _, st_off = pipeline_decode_window(
+        model, params, cache, last, pos, n_steps, mesh=mesh)
+    kw = {}
+    if act:
+        kw = dict(active_sites=jnp.asarray(act, jnp.int32),
+                  thresholds=jnp.full((len(act),), thr, jnp.float32))
+    _, _, exit_rec, alive, st_on = pipeline_decode_window(
+        model, params, cache, last, pos, n_steps, mesh=mesh, **kw)
+    return {
+        "stages": pp, "batch": B, "n_steps": n_steps, "threshold": thr,
+        "boundary_sites": act,
+        "stage_steps_no_exit": list(map(int, st_off)),
+        "stage_steps_exit": list(map(int, st_on)),
+        "rows_exited": int(B - int(alive.sum())),
+        "exits_recorded": int((exit_rec >= 0).sum()),
+        "later_stage_work_saved_pct": (
+            100.0 * (1.0 - float(st_on[1:].sum()) / float(st_off[1:].sum()))
+            if pp > 1 and float(st_off[1:].sum()) else 0.0),
+    }
 
 
 def main(argv=None):
@@ -278,6 +348,21 @@ def main(argv=None):
                          "window with device-side exit decisions (stale "
                          "thresholds between syncs, records replayed at "
                          "the boundary)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="generative: tensor-parallel degree — decode "
+                         "through ShardedDecodeRunner on a (data, model) "
+                         "mesh with per-device KV shards (needs tp*dp "
+                         "backend devices; bit-identical to --tp 1)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="generative: data-parallel degree of the decode "
+                         "mesh (contiguous KV only)")
+    ap.add_argument("--pp", type=int, default=1,
+                    help="generative: >1 adds an exit-gated pipeline "
+                         "decode window demo over this many stages on a "
+                         "(stage,) mesh (reports per-stage work saved)")
+    ap.add_argument("--mesh-shape", default=None, metavar="DPxTP",
+                    help="generative: '<dp>x<tp>' shorthand that "
+                         "overrides --dp/--tp (e.g. '1x4', '2x2')")
     ap.add_argument("--runtime-preset", default="none",
                     choices=["none"] + sorted(PRESETS),
                     help="apply an XLA/allocator env preset before the "
@@ -299,6 +384,11 @@ def main(argv=None):
     args = ap.parse_args(argv)
     # env presets must land before any jax backend work in the run
     apply_preset(args.runtime_preset)
+    if args.mesh_shape:
+        try:
+            args.dp, args.tp = (int(x) for x in args.mesh_shape.lower().split("x"))
+        except ValueError:
+            ap.error("--mesh-shape must look like '<dp>x<tp>', e.g. 1x4")
     if args.mode == "generative":
         serve_generative(args.n if args.n is not None else 48,
                          decode_tokens=args.decode_tokens,
@@ -309,7 +399,8 @@ def main(argv=None):
                          admission_slack=args.admission_slack,
                          prefix_cache=args.prefix_cache,
                          preempt=args.preempt,
-                         steps_per_sync=args.steps_per_sync)
+                         steps_per_sync=args.steps_per_sync,
+                         tp=args.tp, dp=args.dp, pp=args.pp)
     else:
         serve(args.domain, args.n if args.n is not None else 3000,
               policy=args.policy, budget=args.budget,

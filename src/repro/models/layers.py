@@ -165,6 +165,21 @@ def ffn_apply(cfg, p, x, axes: MeshAxes, mesh=None):
     return h @ p["w_down"]
 
 
+def ffn_apply_tp(cfg, p, x, gather):
+    """Tensor-parallel FFN over column-sliced params, bit-identical to
+    `ffn_apply` on the full weights. `p` holds this device's column slice
+    of ``w_gate``/``w_up`` (d, d_ff/m) and of ``w_down`` along its OUTPUT
+    dim (d_ff, d/m); ``gather(y)`` concatenates the device slices along
+    the last axis (a tiled ``all_gather`` over the model axis on a real
+    mesh; plain tiling under the abstract probe). Each output column of a
+    matmul is computed independently, so the column-slice-then-gather
+    composition reproduces the dense result bitwise — unlike the Megatron
+    row-split + psum decomposition, which reassociates the contraction."""
+    a = act_fn(cfg.act)
+    h = gather(a(x @ p["w_gate"]) * (x @ p["w_up"]))
+    return gather(h @ p["w_down"])
+
+
 # ---------------------------------------------------------------------------
 # attention
 
@@ -267,6 +282,7 @@ def attn_apply(
     local_window=None,
     decode_impl: str = "dense",
     block_table=None,
+    out_proj: bool = True,
 ):
     """GQA attention. If `cache` (dict k,v: (B, S, K, hd)) is given, new k/v
     are written at `cache_index` (scalar or per-row int32[B]) and attention
@@ -289,6 +305,10 @@ def attn_apply(
     ``(block_table[b, pos // bs], pos % bs)`` and attention walks the
     block table (`kernels/decode_attention.attend_decode_paged`;
     `decode_impl` must be 'paged' | 'paged-kernel' | 'paged-interpret').
+    `out_proj=False` returns the concatenated head outputs (B, S, H*hd)
+    WITHOUT the final `@ wo` projection — the tensor-parallel decode path
+    computes per-device head slices and applies a column-sharded `wo`
+    after the all-gather, so the projection must stay outside.
     Ring layers (`ring_window=W`) page too: `cache_index` is then the
     TRUE position, the write slot is ``pos % W`` redirected through the
     same table (touching only its first ``ceil(W/bs)`` entries), and
@@ -355,6 +375,8 @@ def attn_apply(
             q = constrain(q, axes.aspec("data", None, "model", None), mesh)
             out = sdpa(q, gk, gv, rmask)
             out = out.reshape(B, S, H * hd)
+            if not out_proj:
+                return out, new_cache
             return out @ p["wo"], new_cache
         blk = jnp.take_along_axis(tab, (idx // bsz)[:, None], axis=1)[:, 0]
         # per-row scatter by (block id, in-block offset) instead of flat pos;
@@ -370,6 +392,8 @@ def attn_apply(
             interpret=decode_impl == "paged-interpret",
         )[:, None]
         out = out.reshape(B, S, H * hd)
+        if not out_proj:
+            return out, new_cache
         return out @ p["wo"], new_cache
     if cache is not None:
         if ring_window is not None and S > 1:
@@ -439,6 +463,8 @@ def attn_apply(
     else:
         out = sdpa(q, k, v, mask)
     out = out.reshape(B, S, H * hd)
+    if not out_proj:
+        return out, new_cache
     return out @ p["wo"], new_cache
 
 

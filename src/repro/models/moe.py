@@ -129,6 +129,60 @@ def _dispatch_local(cfg, x2, gates, idx, capacity):
     return buf, slot, keep, st, sg
 
 
+def _ep_device_body(cfg, axes: MeshAxes, m: int, x_blk, gates_blk, idx_blk, wg, wu, wd):
+    """Per-device EP dispatch body (runs INSIDE a shard_map over
+    ``axes.model``). ``x_blk``/``gates_blk``/``idx_blk`` are this device's
+    data-shard (replicated over model); ``wg/wu/wd`` its (E/m, ...) expert
+    slice. Module-level so the tensor-parallel decode path — itself one big
+    shard_map — can reuse the identical dispatch without nesting maps."""
+    E = cfg.n_experts
+    mi = jax.lax.axis_index(axes.model)
+    T_data = x_blk.shape[0]
+    Tl = max(1, -(-T_data // m))  # ceil: decode batches can be < m
+    pad = Tl * m - T_data
+    if pad:
+        x_blk = jnp.pad(x_blk, ((0, pad), (0, 0)))
+        gates_blk = jnp.pad(gates_blk, ((0, pad), (0, 0)))
+        idx_blk = jnp.pad(idx_blk, ((0, pad), (0, 0)))
+    xs = jax.lax.dynamic_slice_in_dim(x_blk, mi * Tl, Tl, 0)
+    gs = jax.lax.dynamic_slice_in_dim(gates_blk, mi * Tl, Tl, 0)
+    ii = jax.lax.dynamic_slice_in_dim(idx_blk, mi * Tl, Tl, 0)
+    C = max(1, int(cfg.capacity_factor * Tl * cfg.top_k / E))
+    buf, slot, keep, st, sg = _dispatch_local(cfg, xs, gs, ii, C)
+    # (E, C, d) -> experts to owners: (E/m, C*m, d)
+    buf = jax.lax.all_to_all(buf, axes.model, split_axis=0, concat_axis=1, tiled=True)
+    h = act_fn(cfg.act)(jnp.einsum("ecd,edf->ecf", buf, wg)) * jnp.einsum(
+        "ecd,edf->ecf", buf, wu
+    )
+    out = jnp.einsum("ecf,efd->ecd", h, wd)
+    out = jax.lax.all_to_all(out, axes.model, split_axis=1, concat_axis=0, tiled=True)
+    out = jnp.pad(out.reshape(E * C, x_blk.shape[-1]), ((0, 1), (0, 0)))
+    taken = out[slot] * (sg * keep)[:, None].astype(out.dtype)
+    y = jnp.zeros((Tl, x_blk.shape[-1]), jnp.float32).at[st].add(taken.astype(jnp.float32))
+    y = y.astype(x_blk.dtype)
+    y = jax.lax.all_gather(y, axes.model, axis=0, tiled=True)
+    return y[:T_data] if pad else y
+
+
+def moe_apply_ep_device(cfg, p_local, x, axes: MeshAxes, m: int):
+    """EP MoE callable from INSIDE an existing shard_map body over
+    ``axes.model`` (the tensor-parallel decode path). ``p_local`` holds
+    this device's (E/m, ...) expert slice of w_gate/w_up/w_down with
+    router (and shared experts) replicated; ``x`` (B,S,d) is the
+    device-local activation block, replicated over model."""
+    B, S, d = x.shape
+    x2 = x.reshape(-1, d)
+    gates, idx, probs = _router(cfg, p_local, x2)
+    aux = _aux_loss(cfg, probs, idx)
+    y = _ep_device_body(
+        cfg, axes, m, x2, gates, idx,
+        p_local["w_gate"], p_local["w_up"], p_local["w_down"],
+    )
+    if cfg.n_shared_experts:
+        y = y + _shared_ffn(cfg, p_local["shared"], x2)
+    return y.reshape(B, S, d), aux
+
+
 def moe_apply_ep(cfg, p, x, axes: MeshAxes, mesh):
     """Expert-parallel MoE via shard_map. x: (B,S,d) sharded over data.
 
@@ -162,37 +216,8 @@ def moe_apply_ep(cfg, p, x, axes: MeshAxes, mesh):
         # (model-axis token slicing still parallelizes the expert compute)
         dspec = axes.aspec("data", None) if T % dsz == 0 else P(None, None)
 
-        def mapped(x_blk, gates_blk, idx_blk, wg, wu, wd):
-            # x_blk: (T_data, d) local to this data shard, replicated on model
-            mi = jax.lax.axis_index(axes.model)
-            T_data = x_blk.shape[0]
-            Tl = max(1, -(-T_data // m))  # ceil: decode batches can be < m
-            pad = Tl * m - T_data
-            if pad:
-                x_blk = jnp.pad(x_blk, ((0, pad), (0, 0)))
-                gates_blk = jnp.pad(gates_blk, ((0, pad), (0, 0)))
-                idx_blk = jnp.pad(idx_blk, ((0, pad), (0, 0)))
-            xs = jax.lax.dynamic_slice_in_dim(x_blk, mi * Tl, Tl, 0)
-            gs = jax.lax.dynamic_slice_in_dim(gates_blk, mi * Tl, Tl, 0)
-            ii = jax.lax.dynamic_slice_in_dim(idx_blk, mi * Tl, Tl, 0)
-            C = max(1, int(cfg.capacity_factor * Tl * cfg.top_k / E))
-            buf, slot, keep, st, sg = _dispatch_local(cfg, xs, gs, ii, C)
-            # (E, C, d) -> experts to owners: (E/m, C*m, d)
-            buf = jax.lax.all_to_all(buf, axes.model, split_axis=0, concat_axis=1, tiled=True)
-            h = act_fn(cfg.act)(jnp.einsum("ecd,edf->ecf", buf, wg)) * jnp.einsum(
-                "ecd,edf->ecf", buf, wu
-            )
-            out = jnp.einsum("ecf,efd->ecd", h, wd)
-            out = jax.lax.all_to_all(out, axes.model, split_axis=1, concat_axis=0, tiled=True)
-            out = jnp.pad(out.reshape(E * C, d), ((0, 1), (0, 0)))
-            taken = out[slot] * (sg * keep)[:, None].astype(out.dtype)
-            y = jnp.zeros((Tl, d), jnp.float32).at[st].add(taken.astype(jnp.float32))
-            y = y.astype(x_blk.dtype)
-            y = jax.lax.all_gather(y, axes.model, axis=0, tiled=True)
-            return y[:T_data] if pad else y
-
         y = shard_map(
-            mapped,
+            partial(_ep_device_body, cfg, axes, m),
             mesh=mesh,
             in_specs=(
                 dspec,

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import mesh_axis_size, shard_map
 from repro.models import layers as LY
 from repro.models import mamba as MB
 from repro.models import moe as MOE
@@ -36,6 +37,39 @@ from repro.models.common import (
     specs_from_schema,
 )
 from repro.models.layers import MeshAxes
+
+
+def _tp_gather(axis_name, y):
+    """Concatenate the per-device column slices of ``y`` along its last
+    axis (device-order = column-order, so the result is the dense array)."""
+    return jax.lax.all_gather(y, axis_name, axis=y.ndim - 1, tiled=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class TpCtx:
+    """Tensor-parallel context threaded through ``_block``/``decode`` when
+    they run INSIDE a shard_map body (``decode_sharded``).
+
+    The decomposition is the exactness-preserving one: activations stay
+    replicated at sublayer boundaries; wq/wk/wv (and w_gate/w_up) are
+    COLUMN-sliced so each device computes a contiguous head (hidden) block
+    bitwise-identically to the corresponding slice of the dense matmul;
+    wo/w_down are column-sliced along their OUTPUT dim so the final
+    projections are also column slices of the dense result. Combines are
+    tiled ``all_gather``s — pure concatenation, no arithmetic — so the
+    whole block is bit-identical to single-device decode. (A Megatron
+    row-split + psum combine reassociates the contraction and drifts by
+    ULPs; it is deliberately not used.)
+
+    m: model-axis size; gather: ``_tp_gather`` bound to the model axis (or
+    a shape-only stub under the abstract probe); data_axes: data axis
+    names when rows are additionally sharded over data (contiguous caches
+    only), used to reduce row-wise predicates across data shards.
+    """
+
+    m: int
+    gather: Any
+    data_axes: Optional[Tuple[str, ...]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -191,7 +225,7 @@ class MultiStepDecodeMixin:
     def decode_multi(self, params, cache, tokens, pos, n_steps, *, n_max,
                      active_sites=None, thresholds=None, row_valid=None,
                      axes=LY.TEST_AXES, mesh=None, moe_impl="ep",
-                     block_tables=None):
+                     block_tables=None, tp=None):
         """Up to ``n_steps`` greedy decode steps under ONE dispatch
         (`lax.while_loop`), with the exit decision taken ON DEVICE from a
         resident threshold vector — the host syncs once per window, not
@@ -246,6 +280,9 @@ class MultiStepDecodeMixin:
                 params, cache, tok, p, active_sites=active_sites, axes=axes,
                 mesh=mesh, moe_impl=moe_impl, block_tables=block_tables,
                 exit_thresholds=(thr if K else None),
+                # subclasses (EncDecLM) override decode without the tp
+                # kwarg; only the TP shard_map body threads a context
+                **({"tp": tp} if tp is not None else {}),
             )
             f = outs["final"]["label"].reshape(-1).astype(jnp.int32)  # (B,)
             if K:
@@ -268,6 +305,13 @@ class MultiStepDecodeMixin:
             fl = jax.lax.dynamic_update_slice(fl, f[None], (i, 0))
             ex = jax.lax.dynamic_update_slice(ex, site[None], (i, 0))
             all_ex = jnp.all(jnp.logical_or(~row_valid, site >= 0))
+            if tp is not None and tp.data_axes:
+                # rows are sharded over data: the window terminates only
+                # when EVERY shard's rows have exited — reduce the local
+                # predicate across the data axes (replicated over model)
+                all_ex = jax.lax.psum(
+                    jnp.logical_not(all_ex).astype(jnp.int32), tp.data_axes
+                ) == 0
             return (i + 1, all_ex, cache, f.reshape(-1, 1), p + 1,
                     rl, rm, fl, ex)
 
@@ -532,6 +576,7 @@ class LM(MultiStepDecodeMixin):
         moe_impl,
         block_tables=None,
         rope_theta_local=10_000.0,
+        tp: Optional[TpCtx] = None,
     ):
         cfg = self.cfg
         aux = jnp.zeros((), jnp.float32)
@@ -566,12 +611,34 @@ class LM(MultiStepDecodeMixin):
                 impl = cfg.decode_attn
             else:
                 impl = "dense" if (slot.is_local and cfg.window) else cfg.decode_attn
-            out, nc = LY.attn_apply(
-                cfg, p["mixer"], x, positions=positions, mask=mask, axes=axes,
-                mesh=mesh, cache=sub, cache_index=ci, rope_theta=theta,
-                ring_window=ring, local_window=lw, decode_impl=impl,
-                block_table=block_tables,
-            )
+            if tp is not None and tp.m > 1:
+                # per-device head slice: the sliced cfg pins head_dim
+                # explicitly (the `hd` property would re-derive it from the
+                # sliced n_heads otherwise) and keeps the GQA group size
+                # H/K unchanged, so contiguous kv-head blocks stay aligned
+                # with their query-head groups. `out_proj=False` returns
+                # the raw (B,S,Hl*hd) head block; wo is applied AFTER the
+                # head gather as an output-column slice.
+                cfg_l = cfg.replace(
+                    n_heads=cfg.n_heads // tp.m,
+                    n_kv_heads=cfg.n_kv_heads // tp.m,
+                    head_dim=cfg.hd,
+                )
+                out, nc = LY.attn_apply(
+                    cfg_l, p["mixer"], x, positions=positions, mask=mask,
+                    axes=axes, mesh=mesh, cache=sub, cache_index=ci,
+                    rope_theta=theta, ring_window=ring, local_window=lw,
+                    decode_impl=impl, block_table=block_tables,
+                    out_proj=False,
+                )
+                out = tp.gather(tp.gather(out) @ p["mixer"]["wo"])
+            else:
+                out, nc = LY.attn_apply(
+                    cfg, p["mixer"], x, positions=positions, mask=mask, axes=axes,
+                    mesh=mesh, cache=sub, cache_index=ci, rope_theta=theta,
+                    ring_window=ring, local_window=lw, decode_impl=impl,
+                    block_table=block_tables,
+                )
             if nc is not None:
                 new_cache.update(nc)
         elif slot.mixer == "mla":
@@ -640,10 +707,18 @@ class LM(MultiStepDecodeMixin):
         if slot.ffn != "none":
             x = LY.apply_norm(cfg, p["ln2"], h)
             if slot.ffn == "moe":
-                out, a = MOE.moe_apply(cfg, p["ffn"], x, axes, mesh, impl=moe_impl)
+                if tp is not None and tp.m > 1 and moe_impl == "ep":
+                    # expert-parallel inside the TP shard_map body: reuse
+                    # the lifted per-device dispatch (no nested shard_map)
+                    out, a = MOE.moe_apply_ep_device(cfg, p["ffn"], x, axes, tp.m)
+                else:
+                    out, a = MOE.moe_apply(cfg, p["ffn"], x, axes, mesh, impl=moe_impl)
                 aux = aux + a
             else:
-                out = LY.ffn_apply(cfg, p["ffn"], x, axes, mesh)
+                if tp is not None and tp.m > 1:
+                    out = LY.ffn_apply_tp(cfg, p["ffn"], x, tp.gather)
+                else:
+                    out = LY.ffn_apply(cfg, p["ffn"], x, axes, mesh)
             h = h + out
         return h, new_cache, aux
 
@@ -664,6 +739,7 @@ class LM(MultiStepDecodeMixin):
         pool_idx,
         block_tables=None,
         remat=False,
+        tp: Optional[TpCtx] = None,
     ):
         """Run prefix + scanned periods + suffix. Returns
         (h, pooled (L,B,npos,d), new_caches, aux)."""
@@ -677,7 +753,7 @@ class LM(MultiStepDecodeMixin):
         kw = dict(
             positions=positions, mask_full=mask_full, mask_local=mask_local,
             axes=axes, mesh=mesh, cache_index=cache_index, memory=memory,
-            moe_impl=moe_impl, block_tables=block_tables,
+            moe_impl=moe_impl, block_tables=block_tables, tp=tp,
         )
         new_caches: Dict[str, Any] = {}
         if plan.prefix:
@@ -854,7 +930,7 @@ class LM(MultiStepDecodeMixin):
 
     def decode(self, params, cache, tokens, pos, *, active_sites=None,
                axes=LY.TEST_AXES, mesh=None, moe_impl="ep", block_tables=None,
-               exit_thresholds=None):
+               exit_thresholds=None, tp: Optional[TpCtx] = None):
         """One decode step. tokens: (B,1); pos: int32 scalar (shared write
         index) or int32[B] per-row write indices — batched slot caches where
         continuous batching leaves every row at its own position (each row
@@ -882,7 +958,7 @@ class LM(MultiStepDecodeMixin):
                 params, h, positions=positions, mask_full=None, mask_local=None,
                 axes=axes, mesh=mesh, caches=cache, cache_index=pos.reshape(-1),
                 memory=None, moe_impl=moe_impl, pool_idx=pool_idx,
-                block_tables=jnp.asarray(block_tables, jnp.int32),
+                block_tables=jnp.asarray(block_tables, jnp.int32), tp=tp,
             )
             outs = self._head_stats(params, h, pooled, active_sites,
                                     axes=axes, mesh=mesh,
@@ -910,12 +986,235 @@ class LM(MultiStepDecodeMixin):
             params, h, positions=positions, mask_full=mask_full,
             mask_local=mask_local, axes=axes, mesh=mesh, caches=cache,
             cache_index=(pos.reshape(-1) if per_row else pos), memory=None,
-            moe_impl=moe_impl, pool_idx=pool_idx,
+            moe_impl=moe_impl, pool_idx=pool_idx, tp=tp,
         )
         outs = self._head_stats(params, h, pooled, active_sites,
                                 axes=axes, mesh=mesh,
                                 exit_thresholds=exit_thresholds)
         return new_cache, outs
+
+    # -- sharded (tensor-parallel) decode ------------------------------------
+
+    def tp_check(self, tp: int, *, dp: int = 1, paged: bool = True, batch=None):
+        """Raise ``NotImplementedError`` (with a why-note the support
+        matrix surfaces verbatim) when this plan/config cannot run the
+        tensor-parallel sharded-decode path at the given mesh shape."""
+        cfg = self.cfg
+        if tp <= 1 and dp <= 1:
+            return
+        for slot in self.plan.layer_specs():
+            if slot.mixer == "mamba":
+                raise NotImplementedError(
+                    "tensor-parallel decode cannot shard the mamba mixer: the "
+                    "SSM recurrence is per-row/per-channel with conv and state "
+                    "fused, so no head axis divides across devices"
+                )
+            if slot.mixer == "mla":
+                raise NotImplementedError(
+                    "MLA shares one compressed latent stream across all heads; "
+                    "every head shard still needs the full latent cache, so "
+                    "sharding gives no per-device KV scaling"
+                )
+            if slot.cross:
+                raise NotImplementedError(
+                    "cross-attention slots pin per-slot read-only encoder "
+                    "pages that sit outside the TP-sharded KV pool"
+                )
+        if tp > 1:
+            if cfg.n_heads % tp:
+                raise NotImplementedError(
+                    f"n_heads={cfg.n_heads} not divisible by tp={tp}"
+                )
+            if cfg.n_kv_heads % tp:
+                raise NotImplementedError(
+                    f"n_kv_heads={cfg.n_kv_heads} not divisible by tp={tp} "
+                    "(the KV pool shards by kv head, one contiguous block per "
+                    "device)"
+                )
+            if cfg.d_ff % tp:
+                raise NotImplementedError(
+                    f"d_ff={cfg.d_ff} not divisible by tp={tp}"
+                )
+            if cfg.d_model % tp:
+                raise NotImplementedError(
+                    f"d_model={cfg.d_model} not divisible by tp={tp}"
+                )
+            if cfg.moe and cfg.n_experts % tp:
+                raise NotImplementedError(
+                    f"n_experts={cfg.n_experts} not divisible by tp={tp} "
+                    "(expert-parallel MoE owns E/tp experts per device)"
+                )
+        if dp > 1:
+            if paged:
+                raise NotImplementedError(
+                    "paged pools cannot shard rows over data: per-shard pool "
+                    "scatters would diverge the replicated pool copies; "
+                    "paged sharded decode is tensor-parallel only"
+                )
+            if batch is not None and batch % dp:
+                raise NotImplementedError(
+                    f"decode batch {batch} not divisible by data-parallel "
+                    f"degree {dp}"
+                )
+
+    def tp_param_specs(self, axes: MeshAxes, *, moe_ep: bool = False) -> dict:
+        """Per-leaf shard_map in_specs for params under tensor-parallel
+        decode. Everything replicates except: wq/wk/wv/w_gate/w_up column
+        slices (contiguous per-head / hidden blocks), wo/w_down column
+        slices on their OUTPUT dim, qkv biases sliced with their columns,
+        and (with ``moe_ep``) expert weights sharded on the expert axis.
+        Ramp heads, the final head, embeddings, and every norm replicate —
+        exit masks are computed identically on all devices, no round-trip."""
+        tpx = axes.model
+        specs = jax.tree.map(lambda i: P(), self.schema(), is_leaf=is_info)
+
+        def fix_slot(slot: SlotSpec, sp, pfx):
+            if slot.mixer == "attn":
+                mx = sp["mixer"]
+                for k in ("wq", "wk", "wv", "wo"):
+                    mx[k] = P(*pfx, None, tpx)
+                for k in ("bq", "bk", "bv"):
+                    if k in mx:
+                        mx[k] = P(*pfx, tpx)
+            if slot.ffn == "dense":
+                for k in ("w_gate", "w_up", "w_down"):
+                    sp["ffn"][k] = P(*pfx, None, tpx)
+            elif slot.ffn == "moe" and moe_ep:
+                for k in ("w_gate", "w_up", "w_down"):
+                    sp["ffn"][k] = P(*pfx, tpx, None, None)
+
+        plan = self.plan
+        for i, slot in enumerate(plan.prefix):
+            fix_slot(slot, specs["prefix"][i], ())
+        for s, slot in enumerate(plan.period):
+            fix_slot(slot, specs["blocks"][s], (None,))
+        for i, slot in enumerate(plan.suffix):
+            fix_slot(slot, specs["suffix"][i], ())
+        return specs
+
+    def tp_cache_specs(self, cache, axes: MeshAxes, *, data_shard: bool = False):
+        """Per-leaf shard_map specs for a decode cache under TP: every
+        supported leaf is an attention k/v (contiguous ``(L?,B,S,K,hd)`` or
+        paged ``(L?,P,bs,K,hd)``) with the kv-head axis at ``ndim-2`` —
+        that axis shards over `model`, so per-device KV bytes are
+        ``total / tp``. With ``data_shard`` (contiguous only) the batch
+        axis (``ndim-4``) additionally shards over `data`."""
+
+        def leaf(x):
+            ent = [None] * x.ndim
+            ent[x.ndim - 2] = axes.model
+            if data_shard:
+                ent[x.ndim - 4] = axes.d
+            return P(*ent)
+
+        return jax.tree.map(leaf, cache)
+
+    def _mesh_degrees(self, mesh, axes: MeshAxes) -> Tuple[int, int]:
+        m = mesh_axis_size(mesh, axes.model)
+        dp = 1
+        for a in axes.data:
+            dp *= mesh_axis_size(mesh, a)
+        return m, dp
+
+    def decode_sharded(self, params, cache, tokens, pos, *, mesh,
+                       axes=LY.TEST_AXES, active_sites=None, moe_impl="dense",
+                       block_tables=None, exit_thresholds=None):
+        """One decode step through ``shard_map`` on a ``(data, model)``
+        mesh: tensor-parallel attention/MLP with the KV cache (contiguous
+        or paged pool) sharded by kv head, bit-identical to single-device
+        ``decode`` (see ``TpCtx``). Ramp heads, the final head, and the
+        fused exit decision replicate, so exit masks never leave the
+        device. Returns ``(new_cache, outs)`` with the cache left sharded."""
+        m, dp = self._mesh_degrees(mesh, axes)
+        paged = block_tables is not None
+        tokens = jnp.asarray(tokens)
+        self.tp_check(m, dp=dp, paged=paged, batch=tokens.shape[0])
+        dsp = axes.d if dp > 1 else None
+        pspecs = self.tp_param_specs(axes, moe_ep=(moe_impl == "ep"))
+        cspecs = self.tp_cache_specs(cache, axes, data_shard=dp > 1)
+        args = [params, cache, tokens, jnp.asarray(pos, jnp.int32)]
+        specs = [pspecs, cspecs, P(dsp, None), P(dsp)]
+        if paged:
+            args.append(jnp.asarray(block_tables, jnp.int32))
+            specs.append(P(dsp, None))
+        if active_sites is not None:
+            args.append(jnp.asarray(active_sites, jnp.int32))
+            specs.append(P(None))
+        if exit_thresholds is not None:
+            args.append(jnp.asarray(exit_thresholds, jnp.float32))
+            specs.append(P(None))
+        outs_spec = {"final": P(dsp)}
+        if active_sites is not None:
+            outs_spec["ramps"] = P(None, dsp)
+        ctx = TpCtx(m, partial(_tp_gather, axes.model),
+                    axes.data if dp > 1 else None)
+
+        def body(p, c, toks, po, *rest):
+            it = iter(rest)
+            tb = next(it) if paged else None
+            act = next(it) if active_sites is not None else None
+            thr = next(it) if exit_thresholds is not None else None
+            return self.decode(
+                p, c, toks, po, active_sites=act, axes=axes, mesh=None,
+                moe_impl=moe_impl, block_tables=tb, exit_thresholds=thr,
+                tp=ctx,
+            )
+
+        return shard_map(body, mesh=mesh, in_specs=tuple(specs),
+                         out_specs=(cspecs, outs_spec),
+                         check_vma=False)(*args)
+
+    def decode_sharded_multi(self, params, cache, tokens, pos, n_steps, *,
+                             mesh, n_max, axes=LY.TEST_AXES, active_sites=None,
+                             thresholds=None, row_valid=None, moe_impl="dense",
+                             block_tables=None):
+        """``decode_multi`` through one ``shard_map``: the whole
+        ``lax.while_loop`` window runs INSIDE the mapped body, so the
+        PR 8 one-sync-per-window contract survives sharding — exit masks
+        are evaluated on replicated ramp heads per device and the only
+        host round-trip stays at the window boundary."""
+        m, dp = self._mesh_degrees(mesh, axes)
+        paged = block_tables is not None
+        tokens = jnp.asarray(tokens)
+        B = tokens.shape[0]
+        self.tp_check(m, dp=dp, paged=paged, batch=B)
+        dsp = axes.d if dp > 1 else None
+        K = 0 if active_sites is None else int(jnp.shape(active_sites)[0])
+        if row_valid is None:
+            row_valid = jnp.ones((B,), bool)
+        pspecs = self.tp_param_specs(axes, moe_ep=(moe_impl == "ep"))
+        cspecs = self.tp_cache_specs(cache, axes, data_shard=dp > 1)
+        args = [params, cache, tokens, jnp.asarray(pos, jnp.int32),
+                jnp.asarray(n_steps, jnp.int32), jnp.asarray(row_valid, bool)]
+        specs = [pspecs, cspecs, P(dsp, None), P(dsp), P(), P(dsp)]
+        if paged:
+            args.append(jnp.asarray(block_tables, jnp.int32))
+            specs.append(P(dsp, None))
+        if active_sites is not None:
+            args.append(jnp.asarray(active_sites, jnp.int32))
+            specs.append(P(None))
+        if thresholds is not None:
+            args.append(jnp.asarray(thresholds, jnp.float32))
+            specs.append(P(None))
+        rec_specs = (P(None, None, dsp), P(None, None, dsp),
+                     P(None, dsp), P(None, dsp), P())
+        ctx = TpCtx(m, partial(_tp_gather, axes.model),
+                    axes.data if dp > 1 else None)
+
+        def body(p, c, toks, po, n, valid, *rest):
+            it = iter(rest)
+            tb = next(it) if paged else None
+            act = next(it) if active_sites is not None else None
+            thr = next(it) if thresholds is not None else None
+            return self.decode_multi(
+                p, c, toks, po, n, n_max=n_max, active_sites=act,
+                thresholds=thr, row_valid=valid, axes=axes, mesh=None,
+                moe_impl=moe_impl, block_tables=tb, tp=ctx,
+            )
+
+        return shard_map(body, mesh=mesh, in_specs=tuple(specs),
+                         out_specs=(cspecs, rec_specs),
+                         check_vma=False)(*args)
 
     def _head_stats(self, params, h_last, pooled, active_sites,
                     axes=None, mesh=None, exit_thresholds=None):

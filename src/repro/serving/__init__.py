@@ -50,6 +50,7 @@ from repro.serving.runner import (
     LoopDecodeRunner,
     PoolExhausted,
     PrefixCache,
+    ShardedDecodeRunner,
     SyntheticDecodeRunner,
     SyntheticRunner,
 )
@@ -95,6 +96,7 @@ __all__ = [
     "DecodeRunner",
     "LMTokenRunner",
     "LoopDecodeRunner",
+    "ShardedDecodeRunner",
     "SyntheticRunner",
     "SyntheticDecodeRunner",
 ]

@@ -1393,6 +1393,12 @@ class DecodeRunner:
         self._pos[slot] += 1
         return int(np.asarray(fl).reshape(-1)[0])  # repro: allow[host-sync] — sanctioned token read: resumed prefill feeds it to the next chunk
 
+    def _bucket_rows(self, B: int) -> int:
+        """Bucket size for a step over ``B`` live slots. Subclasses with a
+        data-parallel mesh raise the floor so the padded batch divides the
+        `data` axis (both are powers of two)."""
+        return _bucket(B)
+
     def _validate_active(self, active: Sequence[int]) -> List[int]:
         """Sorted active set, refusing (not silently truncating) oversize
         sets: truncation would return fewer record rows than the controller
@@ -1425,7 +1431,7 @@ class DecodeRunner:
             k = len(act)
             return (np.zeros((k, 0), np.int64), np.zeros((k, 0), np.float32),
                     np.zeros(0, np.int64))
-        bucket = min(_bucket(B), self._rows)
+        bucket = min(self._bucket_rows(B), self._rows)
         # pad with FREE rows (their state is garbage a future start()
         # overwrites wholesale), then with duplicates of stepped slots
         # (gather precedes every write, so duplicate indices scatter
@@ -1537,7 +1543,7 @@ class DecodeRunner:
         headroom = min(self._cache_len - int(self._pos[s]) for s in slots)
         n = min(int(n_steps), max(1, headroom))
         n_max = _bucket(n)
-        bucket = min(_bucket(B), self._rows)
+        bucket = min(self._bucket_rows(B), self._rows)
         free = [r for r in range(self._rows) if r not in self._live][: bucket - B]
         dup = [slots[i % B] for i in range(bucket - B - len(free))]
         rows = np.asarray(slots + free + dup, np.int64)  # repro: allow[host-sync] — host row-index build — no device operand
@@ -1623,6 +1629,336 @@ class DecodeRunner:
             self._free_slot_blocks(slot)
         self._live.discard(slot)
         self._pf_progress.pop(slot, None)
+
+
+class ShardedDecodeRunner(DecodeRunner):
+    """``DecodeRunner`` over a ``(data, model)`` device mesh: every jitted
+    program is the tensor-parallel ``model.decode_sharded`` /
+    ``decode_sharded_multi`` path (attention heads, FFN hidden, and —
+    where the plan has MoE slots — experts sharded over `model`), with
+    the KV cache (contiguous rows or the paged block pool) sharded by kv
+    head so per-device KV bytes are ``total / tp``.
+
+    Everything host-side is INHERITED unchanged: the one global
+    ``BlockAllocator`` (page ids are mesh-global — only page *bytes*
+    shard), block tables, prefix sharing/CoW/swap, claim ordering, bucket
+    padding, the sync-window pre-claim/unwind. The TP decomposition is
+    bitwise exact (see ``TpCtx`` in models.transformer), so records,
+    tokens, and allocator state are bit-identical to the single-device
+    ``DecodeRunner`` over any schedule — the property the fuzz harness
+    pins at tp=2 and tp=4.
+
+    Prefill runs REPLICATED inside the same shard_map (params enter
+    under ``P()``), then each device slices its own kv-head block out of
+    the freshly computed cache before scattering into its local shard —
+    one dispatch per admit, no separate resharding step.
+
+    ``dp > 1`` (contiguous caches only — a data-sharded paged pool would
+    diverge the replicated pool copies) additionally shards decode rows
+    over `data`; ``_bucket_rows`` raises the pad floor so every bucket
+    divides the data axis.
+    """
+
+    def __init__(self, model, params, prompts, *, mesh=None, tp: int = 2,
+                 dp: int = 1, **kw):
+        from repro.compat import mesh_axis_size
+        from repro.models import layers as _LY
+
+        if mesh is None:
+            devs = jax.devices()
+            if len(devs) < dp * tp:
+                raise ValueError(
+                    f"mesh ({dp}x{tp}) needs {dp * tp} devices, "
+                    f"have {len(devs)}"
+                )
+            mesh = jax.sharding.Mesh(
+                np.asarray(devs[: dp * tp]).reshape(dp, tp), ("data", "model")
+            )
+        self.mesh = mesh
+        self.tp = mesh_axis_size(mesh, "model")
+        self.dp = mesh_axis_size(mesh, "data")
+        self._maxes = _LY.TEST_AXES
+        paged = str(getattr(model.cfg, "decode_attn", "")).startswith("paged")
+        # fail at construction, not at the first step: the support matrix
+        # carries the same why-note for the rejected cell
+        model.tp_check(self.tp, dp=self.dp, paged=paged)
+        super().__init__(model, params, prompts, **kw)
+
+    # -- mesh plumbing -------------------------------------------------------
+
+    def _bucket_rows(self, B: int) -> int:
+        return max(_bucket(B), self.dp)
+
+    def _ensure_rows(self, n: int) -> None:
+        # a data-sharded step needs >= dp rows to gather from
+        super()._ensure_rows(max(n, self.dp))
+
+    @staticmethod
+    def _rep_specs(tree):
+        from jax.sharding import PartitionSpec as P
+
+        return jax.tree.map(lambda _: P(), tree)
+
+    def kv_stats(self) -> dict:
+        out = super().kv_stats()
+        out["tp"] = self.tp
+        out["dp"] = self.dp
+        if self._cache is not None:
+            per_dev = {}
+            for l in jax.tree.leaves(self._cache):
+                if not hasattr(l, "addressable_shards"):
+                    continue
+                for sh in l.addressable_shards:
+                    per_dev[sh.device.id] = (
+                        per_dev.get(sh.device.id, 0)
+                        + sh.data.size * np.dtype(l.dtype).itemsize
+                    )
+            if per_dev:
+                out["per_device_cache_bytes"] = float(max(per_dev.values()))
+        return out
+
+    # -- jitted programs (shard_map variants) --------------------------------
+
+    def _prefill_fn(self):
+        if self._pf is None:
+            from jax.sharding import PartitionSpec as P
+
+            from repro.compat import shard_map
+
+            m, cache_len = self.model, self._cache_len
+            mesh, axes, tpn = self.mesh, self._maxes, self.tp
+            runner = self
+
+            def body(params, big, toks, slot):
+                cache, outs = m.prefill(
+                    params, toks, cache_len=cache_len, active_sites=None,
+                    with_cache=True, moe_impl="dense",
+                )
+                mi = jax.lax.axis_index(axes.model)
+                cache = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, mi * (x.shape[x.ndim - 2] // tpn),
+                        x.shape[x.ndim - 2] // tpn, axis=x.ndim - 2,
+                    ),
+                    cache,
+                )
+                big = runner._tree_put(big, cache, slot[None])
+                lab = outs["final"]["label"]
+                return big, (lab[:, 0] if lab.ndim == 2 else lab)
+
+            @jax.jit  # repro: allow[jit-cache-hygiene] — wrapper memoized by the enclosing runner
+            def pf(params, big, toks, slot):
+                cspecs = m.tp_cache_specs(big, axes)
+                return shard_map(
+                    body, mesh=mesh,
+                    in_specs=(self._rep_specs(params), cspecs, P(), P()),
+                    out_specs=(cspecs, P()), check_vma=False,
+                )(params, big, toks, slot)
+
+            self._pf = pf
+        return self._pf
+
+    def _prefill_fn_paged(self, n_tokens: Optional[int] = None):
+        n_tokens = self.prompts.shape[1] if n_tokens is None else n_tokens
+        if n_tokens not in self._pf_paged:
+            from jax.sharding import PartitionSpec as P
+
+            from repro.compat import shard_map
+
+            m, cache_len = self.model, self._cache_len
+            mesh, axes, tpn = self.mesh, self._maxes, self.tp
+            bs = self._bs_blk
+            nb_pf = -(-n_tokens // bs)
+            paxes = self._pool_axes
+
+            def scatter(pool, cont, ax, blk_ids, nb):
+                # identical to DecodeRunner's scatter, on the LOCAL kv-head
+                # slice: every paged leaf the TP path admits is an attn k/v
+                # with the kv-head axis at ndim-2 on both layouts
+                x = jnp.moveaxis(cont, ax, 0)[0]
+                t = jnp.moveaxis(x, ax, 0)
+                need = nb * bs
+                if t.shape[0] < need:
+                    t = jnp.pad(t, [(0, need - t.shape[0])] + [(0, 0)] * (t.ndim - 1))
+                t = t[:need].reshape((nb, bs) + t.shape[1:])
+                p2 = jnp.moveaxis(pool, (ax, ax + 1), (0, 1))
+                p2 = p2.at[blk_ids].set(t.astype(p2.dtype))
+                return jnp.moveaxis(p2, (0, 1), (ax, ax + 1))
+
+            def body(params, pools, toks, blk_ids, xkv_ids):
+                cache, outs = m.prefill(
+                    params, toks, cache_len=cache_len, active_sites=None,
+                    with_cache=True, moe_impl="dense",
+                )
+                mi = jax.lax.axis_index(axes.model)
+                cache = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, mi * (x.shape[x.ndim - 2] // tpn),
+                        x.shape[x.ndim - 2] // tpn, axis=x.ndim - 2,
+                    ),
+                    cache,
+                )
+                leaves, td = jax.tree.flatten(pools)
+                cl = jax.tree.leaves(cache)
+                out = [
+                    scatter(p, c, ax, blk_ids, nb_pf)
+                    for p, c, ax in zip(leaves, cl, paxes)
+                ]
+                pools = jax.tree.unflatten(td, out)
+                lab = outs["final"]["label"]
+                return pools, (lab[:, 0] if lab.ndim == 2 else lab)
+
+            @jax.jit  # repro: allow[jit-cache-hygiene] — wrapper memoized by the enclosing runner
+            def pf(params, pools, toks, blk_ids, xkv_ids):
+                cspecs = m.tp_cache_specs(pools, axes)
+                return shard_map(
+                    body, mesh=mesh,
+                    in_specs=(self._rep_specs(params), cspecs, P(), P(), P()),
+                    out_specs=(cspecs, P()), check_vma=False,
+                )(params, pools, toks, blk_ids, xkv_ids)
+
+            self._pf_paged[n_tokens] = pf
+        return self._pf_paged[n_tokens]
+
+    def _decode_fn(self):
+        if self._dec is None:
+            m, mesh, axes = self.model, self.mesh, self._maxes
+
+            @jax.jit  # repro: allow[jit-cache-hygiene] — wrapper memoized by the enclosing runner
+            def dec(params, big, toks, pos, rows, active):
+                sub = self._tree_take(big, rows)
+                sub, outs = m.decode_sharded(
+                    params, sub, toks, pos, mesh=mesh, axes=axes,
+                    active_sites=active, moe_impl="dense",
+                )
+                big = self._tree_put(big, sub, rows)
+                return big, (
+                    outs["ramps"]["label"],
+                    1.0 - outs["ramps"]["maxprob"],
+                    outs["final"]["label"],
+                )
+
+            self._dec = dec
+        return self._dec
+
+    def _decode_fn_noramp(self):
+        if self._dec0 is None:
+            m, mesh, axes = self.model, self.mesh, self._maxes
+
+            @jax.jit  # repro: allow[jit-cache-hygiene] — wrapper memoized by the enclosing runner
+            def dec0(params, big, toks, pos, rows):
+                sub = self._tree_take(big, rows)
+                sub, outs = m.decode_sharded(
+                    params, sub, toks, pos, mesh=mesh, axes=axes,
+                    active_sites=None, moe_impl="dense",
+                )
+                big = self._tree_put(big, sub, rows)
+                return big, outs["final"]["label"]
+
+            self._dec0 = dec0
+        return self._dec0
+
+    def _decode_fn_paged(self):
+        if self._dec is None:
+            m, mesh, axes = self.model, self.mesh, self._maxes
+
+            @jax.jit  # repro: allow[jit-cache-hygiene] — wrapper memoized by the enclosing runner
+            def dec(params, pools, toks, pos, tables, active):
+                pools, outs = m.decode_sharded(
+                    params, pools, toks, pos, mesh=mesh, axes=axes,
+                    active_sites=active, moe_impl="dense", block_tables=tables,
+                )
+                return pools, (
+                    outs["ramps"]["label"],
+                    1.0 - outs["ramps"]["maxprob"],
+                    outs["final"]["label"],
+                )
+
+            self._dec = dec
+        return self._dec
+
+    def _decode_fn_paged_noramp(self):
+        if self._dec0 is None:
+            m, mesh, axes = self.model, self.mesh, self._maxes
+
+            @jax.jit  # repro: allow[jit-cache-hygiene] — wrapper memoized by the enclosing runner
+            def dec0(params, pools, toks, pos, tables):
+                pools, outs = m.decode_sharded(
+                    params, pools, toks, pos, mesh=mesh, axes=axes,
+                    active_sites=None, moe_impl="dense", block_tables=tables,
+                )
+                return pools, outs["final"]["label"]
+
+            self._dec0 = dec0
+        return self._dec0
+
+    def _decode_multi_fn(self, n_max: int):
+        if n_max not in self._decm:
+            m, mesh, axes = self.model, self.mesh, self._maxes
+
+            @partial(jax.jit, donate_argnums=self._donate_cache())  # repro: allow[jit-cache-hygiene] — wrapper memoized by the enclosing runner
+            def decm(params, big, toks, pos, rows, active, thr, n, valid):
+                sub = self._tree_take(big, rows)
+                sub, outs = m.decode_sharded_multi(
+                    params, sub, toks, pos, n, mesh=mesh, n_max=n_max,
+                    axes=axes, active_sites=active, thresholds=thr,
+                    row_valid=valid, moe_impl="dense",
+                )
+                big = self._tree_put(big, sub, rows)
+                return big, outs
+
+            self._decm[n_max] = decm
+        return self._decm[n_max]
+
+    def _decode_multi_fn_noramp(self, n_max: int):
+        if n_max not in self._decm0:
+            m, mesh, axes = self.model, self.mesh, self._maxes
+
+            @partial(jax.jit, donate_argnums=self._donate_cache())  # repro: allow[jit-cache-hygiene] — wrapper memoized by the enclosing runner
+            def decm0(params, big, toks, pos, rows, n, valid):
+                sub = self._tree_take(big, rows)
+                sub, outs = m.decode_sharded_multi(
+                    params, sub, toks, pos, n, mesh=mesh, n_max=n_max,
+                    axes=axes, active_sites=None, row_valid=valid,
+                    moe_impl="dense",
+                )
+                big = self._tree_put(big, sub, rows)
+                return big, outs
+
+            self._decm0[n_max] = decm0
+        return self._decm0[n_max]
+
+    def _decode_multi_fn_paged(self, n_max: int):
+        if n_max not in self._decm:
+            m, mesh, axes = self.model, self.mesh, self._maxes
+
+            @partial(jax.jit, donate_argnums=self._donate_cache())  # repro: allow[jit-cache-hygiene] — wrapper memoized by the enclosing runner
+            def decm(params, pools, toks, pos, tables, active, thr, n, valid):
+                pools, outs = m.decode_sharded_multi(
+                    params, pools, toks, pos, n, mesh=mesh, n_max=n_max,
+                    axes=axes, active_sites=active, thresholds=thr,
+                    row_valid=valid, moe_impl="dense", block_tables=tables,
+                )
+                return pools, outs
+
+            self._decm[n_max] = decm
+        return self._decm[n_max]
+
+    def _decode_multi_fn_paged_noramp(self, n_max: int):
+        if n_max not in self._decm0:
+            m, mesh, axes = self.model, self.mesh, self._maxes
+
+            @partial(jax.jit, donate_argnums=self._donate_cache())  # repro: allow[jit-cache-hygiene] — wrapper memoized by the enclosing runner
+            def decm0(params, pools, toks, pos, tables, n, valid):
+                pools, outs = m.decode_sharded_multi(
+                    params, pools, toks, pos, n, mesh=mesh, n_max=n_max,
+                    axes=axes, active_sites=None, row_valid=valid,
+                    moe_impl="dense", block_tables=tables,
+                )
+                return pools, outs
+
+            self._decm0[n_max] = decm0
+        return self._decm0[n_max]
 
 
 class LoopDecodeRunner:

@@ -29,6 +29,14 @@ decode write into a shared tail block copy-on-writes it. Its block size
 (5) deliberately does NOT divide the prompt length (12), so every prompt
 ends in a partial tail block — the CoW path runs constantly — while
 still dividing cache_len (20) for bit-identity.
+
+The 'sharded' variant (`test_sharded_runner_schedules_bit_identical`)
+re-runs the same seeded schedule shapes through `ShardedDecodeRunner`
+on a forced 4-device CPU mesh — tensor-parallel tp=2/tp=4 over the
+paged pool (per-device KV shards) and dp=2 x tp=2 over the contiguous
+cache — in a subprocess so the in-process fixtures keep their single
+device. Sharding is a pure placement change: every record, on-device
+exit site, and allocator field must STILL be bit-identical.
 """
 import jax
 import numpy as np
@@ -548,3 +556,158 @@ def test_step_validators_reject_bad_inputs(window_pairs):
     loop.start(0, 0)
     with pytest.raises(ValueError, match="active ramp set"):
         loop.step([0], [0, 0, 0])
+
+
+# ---------------------------------------------------------------------------
+# sharded (tensor-parallel) runner: same fuzz harness on a 2-4 device CPU
+# mesh, in a subprocess so the rest of the suite keeps its single device
+
+
+def test_sharded_runner_schedules_bit_identical():
+    """Seeded admit/step/window/free schedules driven through
+    ``ShardedDecodeRunner`` at tp=2 and tp=4 (paged pool, per-device KV
+    shards) and dp=2 x tp=2 (contiguous) against the single-device batched
+    runner: every record, window exit site, and allocator field must be
+    bit-identical, per-device cache bytes must be total/tp, and the pool
+    must drain after the last free."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    code = """
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs import get_tiny
+        from repro.models import build_model
+        from repro.serving import DecodeRunner, ShardedDecodeRunner
+        from repro.core.exits import simulate_exits
+
+        MAX_NEW = 8
+        cfg = get_tiny("qwen2-1.5b").replace(
+            n_layers=3, vocab_size=128, n_kv_heads=4, decode_attn="paged")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(2))
+        prompts = np.random.default_rng(3).integers(0, 128, (16, 12)).astype(np.int32)
+        pkw = dict(max_new_tokens=MAX_NEW, max_slots=3, kv_block_size=4)
+        cfg_c = cfg.replace(decode_attn="ref")
+        model_c = build_model(cfg_c)
+        ckw = dict(max_new_tokens=MAX_NEW, max_slots=3)
+        groups = {
+            "paged": (DecodeRunner(model, params, prompts, **pkw), {
+                "tp2": ShardedDecodeRunner(model, params, prompts, tp=2, **pkw),
+                "tp4": ShardedDecodeRunner(model, params, prompts, tp=4, **pkw),
+            }),
+            "contig": (DecodeRunner(model_c, params, prompts, **ckw), {
+                "dp2tp2": ShardedDecodeRunner(model_c, params, prompts,
+                                              tp=2, dp=2, **ckw),
+            }),
+        }
+        n_sites = groups["paged"][0].n_sites
+
+        def alloc_eq(a, b, tag):
+            np.testing.assert_array_equal(a.table, b.table, err_msg=tag)
+            np.testing.assert_array_equal(a.owned, b.owned, err_msg=tag)
+            assert (a.n_free, a.live_blocks, a.peak_blocks) == \\
+                   (b.n_free, b.live_blocks, b.peak_blocks), tag
+            assert sorted(a._free) == sorted(b._free), tag
+
+        def run_group(kind, oracle, shards, n_sched, seed):
+            rng = np.random.default_rng(seed)
+            runners = dict(shards)
+            runners["__oracle"] = oracle
+            for sched_id in range(n_sched):
+                live = {}
+                for op_i in range(int(rng.integers(6, 14))):
+                    free_slots = [s for s in range(3) if s not in live]
+                    steppable = [s for s in sorted(live) if live[s] < MAX_NEW - 1]
+                    ops = (["admit"] if free_slots else [])
+                    ops += ["step", "win"] if steppable else []
+                    ops += ["free"] if live else []
+                    op = ops[int(rng.integers(len(ops)))]
+                    tag = f"{kind} sched {sched_id} op {op_i} ({op})"
+                    if op == "admit":
+                        slot = int(free_slots[int(rng.integers(len(free_slots)))])
+                        item = int(rng.integers(16))
+                        toks = {n: r.start(slot, item) for n, r in runners.items()}
+                        assert len(set(toks.values())) == 1, tag
+                        live[slot] = 0
+                    elif op == "step":
+                        k = int(rng.integers(1, len(steppable) + 1))
+                        subset = [int(s) for s in rng.permutation(steppable)[:k]]
+                        act = [int(s) for s in
+                               np.flatnonzero(rng.random(n_sites) < 0.6)]
+                        lo, uo, fo = oracle.step(subset, act)
+                        for name, r in shards.items():
+                            lb, ub, fb = r.step(subset, act)
+                            np.testing.assert_array_equal(lb, lo, err_msg=tag + name)
+                            np.testing.assert_array_equal(ub, uo, err_msg=tag + name)
+                            np.testing.assert_array_equal(fb, fo, err_msg=tag + name)
+                        for s in subset:
+                            live[s] += 1
+                    elif op == "win":
+                        k = int(rng.integers(1, len(steppable) + 1))
+                        subset = [int(s) for s in rng.permutation(steppable)[:k]]
+                        act = [int(s) for s in
+                               np.flatnonzero(rng.random(n_sites) < 0.6)]
+                        thr = rng.choice([0.0, 0.3, 0.999], size=len(act)
+                                         ).astype(np.float32)
+                        n_req = int(rng.choice([1, 2, 4]))
+                        n_req = min(n_req, min(MAX_NEW - 1 - live[s] for s in subset))
+                        lo, uo, fo, xo = oracle.step_multi(subset, act, n_req, thr)
+                        for name, r in shards.items():
+                            lb, ub, fb, xb = r.step_multi(subset, act, n_req, thr)
+                            np.testing.assert_array_equal(lb, lo, err_msg=tag + name)
+                            np.testing.assert_array_equal(ub, uo, err_msg=tag + name)
+                            np.testing.assert_array_equal(fb, fo, err_msg=tag + name)
+                            np.testing.assert_array_equal(xb, xo, err_msg=tag + name)
+                            if kind == "paged":
+                                alloc_eq(r._alloc, oracle._alloc, tag + name)
+                        # device exits == host simulate_exits on the records
+                        thr_full = np.zeros(n_sites, np.float32)
+                        if act:
+                            thr_full[np.asarray(act)] = thr
+                        for t in range(fo.shape[0]):
+                            unc_m = np.zeros((len(subset), n_sites), np.float32)
+                            val_m = np.zeros((len(subset), n_sites), bool)
+                            for j, site in enumerate(act):
+                                unc_m[:, site] = uo[t, j]
+                                val_m[:, site] = True
+                            ex_host = simulate_exits(unc_m, val_m, thr_full, act)
+                            np.testing.assert_array_equal(xo[t], ex_host, err_msg=tag)
+                        for s in subset:
+                            live[s] += fo.shape[0]
+                    else:
+                        slot = sorted(live)[int(rng.integers(len(live)))]
+                        for r in runners.values():
+                            r.free(slot)
+                        del live[slot]
+                for s in list(live):
+                    for r in runners.values():
+                        r.free(s)
+
+        run_group("paged", *groups["paged"], n_sched=10, seed=0x5AFE)
+        run_group("contig", *groups["contig"], n_sched=6, seed=0x5EED)
+        # drained pools + per-device KV scaling
+        oracle, shards = groups["paged"]
+        total = oracle.cache_bytes()
+        for name, r in shards.items():
+            a = r._alloc
+            assert a.live_blocks == 0 and a.n_free == a.n_blocks, name
+            stats = r.kv_stats()
+            assert stats["per_device_cache_bytes"] * r.tp == total, (name, stats)
+        print("sharded fuzz OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=4 --xla_cpu_multi_thread_eigen=false"
+    )
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["OMP_NUM_THREADS"] = "1"
+    for _ in range(2):  # one retry for transient host-collective aborts
+        r = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(code)],
+            capture_output=True, text=True, timeout=560, env=env,
+        )
+        if r.returncode == 0:
+            return
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"

@@ -1,6 +1,7 @@
 """Distribution: EP-vs-dense MoE equivalence, gradient compression,
-pipeline, mini dry-run — all in a subprocess with 4 fake devices so the
-rest of the suite keeps its single real device."""
+pipeline, tensor-parallel sharded decode, pipeline-escape decode windows,
+mini dry-run — all in a subprocess with 4 fake devices so the rest of the
+suite keeps its single real device."""
 import os
 import subprocess
 import sys
@@ -122,6 +123,149 @@ def test_mini_dryrun_multidev():
         assert ca.get("flops", 0) > 0
         cb = DR.collective_bytes(compiled.as_text())
         print("mini dryrun OK", sum(cb["bytes"].values()))
+    """)
+
+
+def test_sharded_decode_bit_identical():
+    """`decode_sharded` / `decode_sharded_multi` at tp=2, tp=4 and
+    dp=2 x tp=2 must be bit-identical to single-device `decode` — the
+    tiled all_gather combine is a pure concatenation, so the sharded
+    matmuls reduce in exactly the single-device order."""
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.configs import get_tiny
+        from repro.models.transformer import LM
+
+        def eq_tree(a, b):
+            la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+            return len(la) == len(lb) and all(
+                bool(jnp.array_equal(x, y)) for x, y in zip(la, lb))
+
+        cfg = get_tiny("qwen2-1.5b").replace(n_kv_heads=4)  # tp=4 needs 4 KV heads
+        m = LM(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        B, S = 4, 8
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+        cache, outs = m.prefill(params, toks, cache_len=32, moe_impl="dense")
+        last = outs["final"]["label"].reshape(B, 1).astype(jnp.int32)
+        pos = jnp.full((B,), S, jnp.int32)
+        act = jnp.asarray([0, 1], jnp.int32)
+        thr = jnp.asarray([0.5, 0.5], jnp.float32)
+        c1, o1 = m.decode(params, cache, last, pos, active_sites=act,
+                          moe_impl="dense", exit_thresholds=thr)
+        shapes = [(1, 2), (1, 4), (2, 2)]
+        for dp, tp in shapes:
+            devs = np.array(jax.devices()[: dp * tp]).reshape(dp, tp)
+            mesh = Mesh(devs, ("data", "model"))
+            c2, o2 = m.decode_sharded(params, cache, last, pos, mesh=mesh,
+                                      active_sites=act, moe_impl="dense",
+                                      exit_thresholds=thr)
+            assert eq_tree(o1, o2) and eq_tree(c1, c2), (dp, tp)
+        # fused multi-step window, sharded vs single-device
+        c4, rec1 = m.decode_multi(params, cache, last, pos, jnp.asarray(3),
+                                  n_max=4, active_sites=act, thresholds=thr,
+                                  moe_impl="dense")
+        mesh = Mesh(np.array(jax.devices()[:2]).reshape(1, 2), ("data", "model"))
+        c5, rec2 = m.decode_sharded_multi(params, cache, last, pos,
+                                          jnp.asarray(3), mesh=mesh, n_max=4,
+                                          active_sites=act, thresholds=thr,
+                                          moe_impl="dense")
+        nd = int(rec1[4])
+        assert int(rec2[4]) == nd
+        for i, (a, b) in enumerate(zip(rec1[:4], rec2[:4])):
+            assert bool(jnp.array_equal(a[:nd], b[:nd])), f"rec[{i}]"
+        assert eq_tree(c4, c5)
+        print("sharded decode OK")
+    """)
+
+
+def test_pipeline_decode_window_escapes():
+    """Pipeline-parallel decode: thresholds-off windows are bit-identical
+    to a plain per-step decode loop (tokens AND caches) at S=1/2/4; with a
+    near-1.0 threshold at the stage-boundary ramps every row exits at
+    stage 0 and later stages do strictly less work — the exit mask gates
+    the ppermute forwarding."""
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.configs import get_tiny
+        from repro.models.transformer import LM
+        from repro.distributed.pipeline import pipeline_decode_window, pipeline_check
+
+        cfg = get_tiny("qwen2-1.5b").replace(n_layers=4)  # n_periods=4: 1/2/4 stages
+        m = LM(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        B, S0, n_steps = 4, 8, 3
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S0), 0, cfg.vocab_size)
+        cache, outs = m.prefill(params, toks, cache_len=32, moe_impl="dense")
+        last = outs["final"]["label"].reshape(B, 1).astype(jnp.int32)
+        pos = jnp.full((B,), S0, jnp.int32)
+        ref_toks, c, t = [], cache, last
+        for k in range(n_steps):
+            c, o = m.decode(params, c, t, pos + k, moe_impl="dense")
+            t = o["final"]["label"].reshape(B, 1).astype(jnp.int32)
+            ref_toks.append(o["final"]["label"])
+        ref_toks, ref_cache = jnp.stack(ref_toks), c
+
+        def eq_tree(a, b):
+            return all(bool(jnp.array_equal(x, y)) for x, y in
+                       zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+        for S in (1, 2, 4):
+            mesh = Mesh(np.array(jax.devices()[:S]), ("stage",))
+            nc, tok_rec, exit_rec, alive, steps = pipeline_decode_window(
+                m, params, cache, last, pos, n_steps, mesh=mesh)
+            assert bool(jnp.array_equal(tok_rec, ref_toks)), S
+            assert eq_tree(nc, ref_cache), S
+            assert bool(alive.all()) and int((exit_rec >= 0).sum()) == 0, S
+        # exit-heavy: thr ~1.0 at every stage-boundary ramp
+        sites = list(m.sites)
+        for S in (2, 4):
+            Lp, ns = m.plan.n_periods // S, len(m.plan.period)
+            a = [sites.index(b) for b in
+                 [(s + 1) * Lp * ns - 1 for s in range(S - 1)] if b in sites]
+            assert a, f"S={S}: no boundary ramp in sites={sites}"
+            mesh = Mesh(np.array(jax.devices()[:S]), ("stage",))
+            nc, tok_rec, exit_rec, alive, steps = pipeline_decode_window(
+                m, params, cache, last, pos, n_steps, mesh=mesh,
+                active_sites=jnp.asarray(a, jnp.int32),
+                thresholds=jnp.asarray([0.9999] * len(a), jnp.float32))
+            assert int(steps[-1]) < int(steps[0]), (S, steps.tolist())
+            assert int((exit_rec >= 0).sum()) > 0, S
+        # rejection gates carry why-notes
+        try:
+            pipeline_check(LM(cfg.replace(decode_attn="paged")), 2)
+            raise AssertionError("paged decode_attn should be rejected")
+        except NotImplementedError as e:
+            assert "block pool shards per-device" in str(e)
+        try:
+            pipeline_check(m, 3)
+            raise AssertionError("n_periods % S != 0 should be rejected")
+        except NotImplementedError:
+            pass
+        print("pipeline escapes OK")
+    """)
+
+
+def test_dryrun_merges_operator_xla_flags():
+    """Importing `repro.launch.dryrun` must MERGE its 512-device default
+    under any operator-exported XLA_FLAGS, never clobber them — the
+    run_sub env already pins device_count=4, which must survive."""
+    run_sub("""
+        import os
+        import repro.launch.dryrun  # noqa: F401  (import runs the env setup)
+        flags = os.environ["XLA_FLAGS"]
+        assert "--xla_force_host_platform_device_count=4" in flags, flags
+        assert "512" not in flags, flags
+        assert "--xla_cpu_multi_thread_eigen=false" in flags, flags
+        # without an operator value the 512 default still lands
+        from repro.launch.tuning import merge_xla_flags
+        merged = merge_xla_flags("--xla_force_host_platform_device_count=512", None)
+        assert merged == "--xla_force_host_platform_device_count=512", merged
+        import jax
+        assert jax.device_count() == 4, jax.device_count()
+        print("dryrun flag merge OK")
     """)
 
 

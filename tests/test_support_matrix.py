@@ -28,26 +28,45 @@ REPO = Path(__file__).resolve().parents[1]
 EXPECTED = {
     "gpt2-medium": {p: STATUS_SUPPORTED for p in PATH_IDS},
     "mamba2-2.7b": {
-        # paged: per-slot state pages from the shared pool
-        p: (STATUS_REJECTED if p == "decode_kernel" else STATUS_SUPPORTED)
-        for p in PATH_IDS  # decode_kernel: no attention layers at all
+        # paged: per-slot state pages from the shared pool.
+        # decode_kernel: no attention layers at all; decode_sharded: the
+        # fused SSM recurrence has no head axis to divide across devices
+        p: (STATUS_REJECTED if p in ("decode_kernel", "decode_sharded")
+            else STATUS_SUPPORTED)
+        for p in PATH_IDS
     },
     "deepseek-v2-lite-16b": {
-        # paged: block tables over the compressed {c, k_pe} latent streams
-        p: (STATUS_REJECTED if p == "decode_kernel" else STATUS_SUPPORTED)
-        for p in PATH_IDS  # decode_kernel: all slots are MLA (paged_mla kernel routes via decode_paged)
+        # paged: block tables over the compressed {c, k_pe} latent streams.
+        # decode_kernel: all slots are MLA (paged_mla kernel routes via
+        # decode_paged); decode_sharded: every head shard still needs the
+        # full latent cache — no per-device KV scaling
+        p: (STATUS_REJECTED if p in ("decode_kernel", "decode_sharded")
+            else STATUS_SUPPORTED)
+        for p in PATH_IDS
     },
     # local ring-window paging: slot = pos % W through the first
-    # ceil(W/bs) table entries
+    # ceil(W/bs) table entries; TP shards ring slots like any KV leaf
     "gemma3-4b": {p: STATUS_SUPPORTED for p in PATH_IDS},
-    # cross-attention: read-only pinned xkv pages in trailing table columns
-    "llama-3.2-vision-90b": {p: STATUS_SUPPORTED for p in PATH_IDS},
-    # hybrid attn+mamba: token pages and state pages from one pool
-    "jamba-1.5-large-398b": {p: STATUS_SUPPORTED for p in PATH_IDS},
+    "llama-3.2-vision-90b": {
+        # cross-attention: read-only pinned xkv pages in trailing table
+        # columns; decode_sharded: those pinned encoder pages sit outside
+        # the TP-sharded KV pool
+        p: (STATUS_REJECTED if p == "decode_sharded" else STATUS_SUPPORTED)
+        for p in PATH_IDS
+    },
+    "jamba-1.5-large-398b": {
+        # hybrid attn+mamba: token pages and state pages from one pool;
+        # decode_sharded: the mamba slots block TP (no head axis)
+        p: (STATUS_REJECTED if p == "decode_sharded" else STATUS_SUPPORTED)
+        for p in PATH_IDS
+    },
     "seamless-m4t-large-v2": {
-        # enc-dec: decoder self-attn pages + pinned encoder-memory xkv pages
-        p: (STATUS_REJECTED if p == "decode_kernel" else STATUS_SUPPORTED)
-        for p in PATH_IDS  # decode_kernel: enc-dec wires dense/paged cache attention, no flash-decode routing
+        # enc-dec: decoder self-attn pages + pinned encoder-memory xkv
+        # pages. decode_kernel: enc-dec wires dense/paged cache attention,
+        # no flash-decode routing; decode_sharded: LM-stack only
+        p: (STATUS_REJECTED if p in ("decode_kernel", "decode_sharded")
+            else STATUS_SUPPORTED)
+        for p in PATH_IDS
     },
 }
 
